@@ -1,0 +1,23 @@
+"""Shared benchmark scaffolding: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def timed(name: str, fn: Callable, *, repeats: int = 3, derived_fn=None):
+    fn()                                     # warmup / compile
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn()
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    emit(name, us, derived_fn(out) if derived_fn else "")
+    return out

@@ -1,0 +1,76 @@
+"""Kernel microbenches (interpret-mode wall time is NOT TPU performance —
+the derived column reports the roofline-model numbers that matter: bytes
+moved per output and the theoretical speedup vs the bf16 path on v5e).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed, emit
+from repro.common.hardware import TPU_V5E, bytes_per_param
+from repro.quant import quantize
+from repro.kernels.quant_matmul import ops as qm_ops
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.ssd import ops as ssd_ops
+from repro.kernels.topk_sim import ops as tk_ops
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    # quant matmul: decode-shaped (M=batch rows, big K/N)
+    M, K, N = 8, 1024, 1024
+    x = jax.random.normal(key, (M, K), jnp.bfloat16)
+    w = jax.random.normal(key, (K, N)) * 0.05
+    for fmt in ("q8", "q4"):
+        t = quantize(w, fmt)
+        wbytes = t.nbytes()
+        bf16_bytes = K * N * 2
+        timed(f"kernels/quant_matmul/{fmt}_{M}x{K}x{N}",
+              lambda: jax.block_until_ready(qm_ops.quant_matmul(x, t)),
+              derived_fn=lambda _: (
+                  f"hbm_bytes={wbytes} vs bf16={bf16_bytes} "
+                  f"speedup_mem_bound={bf16_bytes/wbytes:.2f}x "
+                  f"v5e_t_us={wbytes/TPU_V5E.hbm_bandwidth*1e6:.2f}"))
+
+    B, S, Nh, Kh, H = 1, 512, 4, 2, 64
+    q = jax.random.normal(key, (B, S, Nh, H), jnp.bfloat16)
+    k = jax.random.normal(key, (B, S, Kh, H), jnp.bfloat16)
+    v = jax.random.normal(key, (B, S, Kh, H), jnp.bfloat16)
+    flops = 4 * B * S * (S / 2) * Nh * H
+    timed(f"kernels/flash_attention/causal_{S}",
+          lambda: jax.block_until_ready(fa_ops.flash_attention(q, k, v)),
+          derived_fn=lambda _: (
+              f"flops={flops:.2e} v5e_t_us={flops/TPU_V5E.peak_flops*1e6:.2f} "
+              f"o_s_memory=no_s2_materialization"))
+    timed(f"kernels/flash_attention/window_{S}w128",
+          lambda: jax.block_until_ready(
+              fa_ops.flash_attention(q, k, v, window=128)),
+          derived_fn=lambda _: "block_skip=sub_quadratic_local_layers")
+
+    Bs, Ss, Hh, P, G, Nst = 1, 512, 4, 64, 1, 64
+    xs = jax.random.normal(key, (Bs, Ss, Hh, P))
+    dt = jax.nn.softplus(jax.random.normal(key, (Bs, Ss, Hh)))
+    A = -jnp.exp(jax.random.normal(key, (Hh,)) * 0.5)
+    Bm = jax.random.normal(key, (Bs, Ss, G, Nst)) * 0.3
+    Cm = jax.random.normal(key, (Bs, Ss, G, Nst)) * 0.3
+    ssd_flops = Bs * Ss * Hh * (2 * 128 * Nst + 2 * 128 * P + 4 * Nst * P)
+    timed(f"kernels/ssd/chunked_{Ss}",
+          lambda: jax.block_until_ready(ssd_ops.ssd(xs, dt, A, Bm, Cm)),
+          derived_fn=lambda _: (
+              f"flops={ssd_flops:.2e} "
+              f"v5e_t_us={ssd_flops/TPU_V5E.peak_flops*1e6:.3f}"))
+
+    tools = jax.random.normal(key, (2048, 128))
+    tools = tools / jnp.linalg.norm(tools, axis=-1, keepdims=True)
+    qs = jax.random.normal(key, (4, 128))
+    sim_bytes = 2048 * 128 * 4
+    timed("kernels/topk_sim/2048x128",
+          lambda: jax.block_until_ready(tk_ops.topk_tools(tools, qs, k=8)),
+          derived_fn=lambda _: (
+              f"hbm_bytes={sim_bytes} (m x N sims never materialized) "
+              f"v5e_t_us={sim_bytes/TPU_V5E.hbm_bandwidth*1e6:.3f}"))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Aggregate the dry-run JSONs into the §Roofline table (also written to
+experiments/roofline_table.md for EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_cells(mesh="pod", tag=""):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("_")
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("mesh") != mesh:
+            continue
+        want_tag = bool(tag)
+        has_tag = not base.endswith(mesh)
+        if want_tag != has_tag or (tag and not base.endswith(tag)):
+            continue
+        cells.append(d)
+    return cells
+
+
+def run(write_md: bool = True):
+    cells = load_cells("pod")
+    rows = []
+    for d in sorted(cells, key=lambda x: (x["arch"], x["shape"])):
+        emit(f"roofline/{d['arch']}/{d['shape']}", d["step_time_s"] * 1e6,
+             f"dom={d['dominant']} c/m/cl={d['compute_s']:.3f}/"
+             f"{d['memory_s']:.3f}/{d['collective_s']:.3f} "
+             f"rf={d['roofline_fraction']:.3f} "
+             f"useful={d['useful_flops_ratio']:.2f}")
+        rows.append(d)
+    if write_md and rows:
+        path = os.path.join(DRYRUN_DIR, "..", "roofline_table.md")
+        with open(path, "w") as f:
+            f.write("| arch | shape | compute_s | memory_s | collective_s | "
+                    "dominant | model GFLOPs | useful | roofline frac | "
+                    "mem/dev (analytic) |\n|---|---|---|---|---|---|---|---|---|---|\n")
+            for d in rows:
+                f.write(
+                    f"| {d['arch']} | {d['shape']} | {d['compute_s']:.4f} | "
+                    f"{d['memory_s']:.4f} | {d['collective_s']:.4f} | "
+                    f"{d['dominant']} | {d['model_flops']/1e9:.0f} | "
+                    f"{d['useful_flops_ratio']:.2f} | "
+                    f"{d['roofline_fraction']:.4f} | "
+                    f"{d.get('analytic_memory_per_device', 0)/1e9:.2f} GB |\n")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

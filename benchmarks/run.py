@@ -1,0 +1,40 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+  week_eval            — Figs 2–5 (normalized T/P/TPS/CF, 5 methods x 4 weeks)
+  variant_utilization  — Fig 6 (Q8 share per weekday, weeks 3/4)
+  operating_modes      — Table I + §III-C TPS/power ladder
+  tool_selection       — §III-B selection quality/latency
+  kernels              — Pallas kernel microbenches + v5e roofline deriveds
+  roofline             — dry-run roofline table (from experiments/dryrun)
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    from benchmarks import (kernels_bench, operating_modes, roofline_table,
+                            tool_selection, variant_utilization, week_eval)
+    suites = {
+        "operating_modes": operating_modes.run,
+        "tool_selection": tool_selection.run,
+        "kernels": kernels_bench.run,
+        "variant_utilization": variant_utilization.run,
+        "week_eval": week_eval.run,
+        "roofline": roofline_table.run,
+    }
+    for name, fn in suites.items():
+        if only and only != name:
+            continue
+        try:
+            fn()
+        except Exception as e:  # keep the harness running, report the failure
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+            raise
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""§III-B: tool-selection quality and latency vs the baseline selectors.
+
+Default (all tools) has no selection stage; Gorilla-like = retrieval only;
+CarbonCall = retrieval + cross-encoder rerank + NER/keyword augmentation.
+Reports per-tool recall, whole-query accuracy, prompt-tool count (the
+quantity that drives prefill cost), and selection latency.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import ToolSelector
+from repro.data.workload import build_catalog, FunctionCallWorkload
+
+
+def run(n_queries: int = 120):
+    cat = build_catalog(240, seed=0)
+    sel = ToolSelector(cat)
+    wl = FunctionCallWorkload(cat, seed=1)
+    queries = wl.stream(n_queries)
+
+    methods = {
+        "carboncall": lambda q: sel.select(q.text).tool_ids,
+        "gorilla_retrieval_only": lambda q: sel.retrieve(q.text)[0][:2],
+        "all_tools": lambda q: list(range(len(cat.tools))),
+    }
+    for name, fn in methods.items():
+        hit = tot = qok = 0
+        counts = []
+        t0 = time.perf_counter()
+        for q in queries:
+            chosen = fn(q)
+            counts.append(len(chosen))
+            qok += all(t in chosen for t in q.true_tools)
+            for t in q.true_tools:
+                tot += 1
+                hit += t in chosen
+        dt = (time.perf_counter() - t0) / n_queries * 1e6
+        emit(f"tool_selection/{name}", dt,
+             f"recall={hit/tot:.2f} query_acc={qok/n_queries:.2f} "
+             f"avg_tools={np.mean(counts):.1f}")
+
+
+if __name__ == "__main__":
+    run()

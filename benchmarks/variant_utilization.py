@@ -1,0 +1,47 @@
+"""Paper Fig 6: Q8 variant utilization per weekday, Qwen2-7B, weeks 3 & 4.
+
+The paper reports 64.8% average Q8 use in the low-variability week3 and
+45.6% in the high-variability week4 — lower-CI weeks keep the device in high
+power modes where Q8 sustains the TPS floor.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.common.hardware import ORIN_AGX
+from repro.core import (ORIN_MODES, POLICIES, CarbonCallRuntime, SimExecutor,
+                        ToolSelector, PAPER_MODELS, ci_trace, run_week)
+from repro.data.workload import build_catalog, FunctionCallWorkload
+
+
+def run(queries_per_hour: float = 6.0):
+    cat = build_catalog(64, seed=0)
+    selector = ToolSelector(cat)
+    prof = PAPER_MODELS["qwen2-7b"]
+    out = {}
+    for week, paper_avg in [("week3", 0.648), ("week4", 0.456)]:
+        ci = ci_trace(week, seed=0)
+        wl = FunctionCallWorkload(cat, seed=11)
+        ex = SimExecutor(prof, ORIN_AGX, seed=3)
+        rt = CarbonCallRuntime(selector=selector, executor=ex,
+                               policy=POLICIES["carboncall"], modes=ORIN_MODES,
+                               catalog_size=len(cat.tools), seed=5)
+        res = run_week(rt, wl, ci, queries_per_hour=queries_per_hour)
+        daily = res.q8_utilization_by_day()
+        avg = float(np.mean(daily))
+        emit(f"variant_utilization/{week}", 0.0,
+             f"q8_avg={avg:.1%} (paper {paper_avg:.1%}) daily=" +
+             "/".join(f"{d:.0%}" for d in daily))
+        out[week] = daily
+    # The paper reports lower-variability weeks using Q8 more, while noting
+    # the coupling is soft ("the lowest CI days did not necessarily correspond
+    # to higher Q8 utilization"): report the ordering rather than assert it.
+    diff = float(np.mean(out["week3"]) - np.mean(out["week4"]))
+    emit("variant_utilization/week3_minus_week4", 0.0,
+         f"{diff:+.1%} (paper: +19.2pp; soft per the paper's own caveat)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,75 @@
+"""Paper Figs 2-5: weekly evaluation of Default/Gorilla/LiS/LiS*/CarbonCall.
+
+Week-to-model pairing follows §IV: week1 Hermes2-Pro-8B, week2 Llama3.1-8B,
+week3+week4 Qwen2-7B. Reports normalized T/P/TPS/CF vs Default, plus the
+paper's headline deltas for the reproduction check.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.common.hardware import ORIN_AGX
+from repro.core import (ORIN_MODES, POLICIES, CarbonCallRuntime, SimExecutor,
+                        ToolSelector, PAPER_MODELS, ci_trace, run_week)
+from repro.data.workload import build_catalog, FunctionCallWorkload
+
+PAIRINGS = [
+    ("week1", "hermes2-pro-8b"),
+    ("week2", "llama3.1-8b"),
+    ("week3", "qwen2-7b"),
+    ("week4", "qwen2-7b"),
+]
+
+# paper-reported deltas vs Default, per week (T, P, CF, TPS)
+PAPER_BANDS = {
+    "week1": {"T": -0.30, "P": -0.28, "CF": -0.52, "TPS": +0.25},
+    "week2": {"T": -0.20, "P": -0.14, "CF": -0.47, "TPS": None},
+}
+
+
+def run(queries_per_hour: float = 6.0, quiet: bool = False):
+    cat = build_catalog(64, seed=0)
+    selector = ToolSelector(cat)
+    results = {}
+    for week, model_name in PAIRINGS:
+        ci = ci_trace(week, seed=0)
+        prof = PAPER_MODELS[model_name]
+        per_policy = {}
+        for pname, policy in POLICIES.items():
+            wl = FunctionCallWorkload(cat, seed=11)
+            ex = SimExecutor(prof, ORIN_AGX, seed=3)
+            rt = CarbonCallRuntime(selector=selector, executor=ex,
+                                   policy=policy, modes=ORIN_MODES,
+                                   catalog_size=len(cat.tools), seed=5)
+            t0 = time.perf_counter()
+            res = run_week(rt, wl, ci, queries_per_hour=queries_per_hour)
+            per_policy[pname] = res
+            if not quiet:
+                n = max(len(res.records), 1)
+                emit(f"week_eval/{week}/{model_name}/{pname}",
+                     (time.perf_counter() - t0) / n * 1e6,
+                     f"T={res.avg_latency:.2f}s P={res.avg_power:.1f}W "
+                     f"TPS={res.avg_tps:.1f} CF={res.avg_carbon * 1000:.1f}mg "
+                     f"ok={res.success_rate:.2f}")
+        d = per_policy["default"]
+        c = per_policy["carboncall"]
+        deltas = {
+            "T": c.avg_latency / d.avg_latency - 1,
+            "P": c.avg_power / d.avg_power - 1,
+            "CF": c.avg_carbon / d.avg_carbon - 1,
+            "TPS": c.avg_tps / d.avg_tps - 1,
+        }
+        band = PAPER_BANDS.get(week, {})
+        derived = " ".join(
+            f"{k}={v:+.0%}(paper {band[k]:+.0%})" if band.get(k) is not None
+            else f"{k}={v:+.0%}" for k, v in deltas.items())
+        emit(f"week_eval/{week}/cc_vs_default", 0.0, derived)
+        results[week] = per_policy
+    return results
+
+
+if __name__ == "__main__":
+    run()

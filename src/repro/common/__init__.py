@@ -1,0 +1,11 @@
+from repro.common.hardware import TPU_V5E, ORIN_AGX, HardwareSpec
+from repro.common.registry import register_arch, get_arch, list_archs
+
+__all__ = [
+    "TPU_V5E",
+    "ORIN_AGX",
+    "HardwareSpec",
+    "register_arch",
+    "get_arch",
+    "list_archs",
+]

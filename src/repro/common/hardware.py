@@ -1,0 +1,73 @@
+"""Hardware specifications used for roofline analysis and the power model.
+
+Two targets:
+  * TPU v5e — the deployment target for the multi-pod framework (roofline terms
+    in EXPERIMENTS.md use these constants, which match the assignment).
+  * Jetson AGX Orin — the paper's edge device; used by the paper-faithful
+    week-eval simulation so the reproduction is calibrated against the same
+    hardware class the paper measured.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    # Peak compute in FLOP/s for the "native" matmul dtype (bf16 for TPU).
+    peak_flops: float
+    # Additional peak for int8 (2x MXU throughput on v5e; Orin uses DLA/tensor cores).
+    peak_flops_int8: float
+    hbm_bandwidth: float        # bytes/s
+    hbm_capacity: float         # bytes per chip
+    ici_bandwidth: float        # bytes/s per link (intra-pod)
+    dcn_bandwidth: float        # bytes/s per host (inter-pod)
+    vmem_capacity: float        # bytes (VMEM / L2-equivalent)
+    idle_power: float           # W per chip, clock-gated floor
+    peak_power: float           # W per chip at 100% duty
+
+
+# Assignment constants: 197 TFLOP/s bf16; 819 GB/s HBM; ~50 GB/s/link ICI.
+TPU_V5E = HardwareSpec(
+    name="tpu_v5e",
+    peak_flops=197e12,
+    peak_flops_int8=394e12,
+    hbm_bandwidth=819e9,
+    hbm_capacity=16e9,
+    ici_bandwidth=50e9,
+    dcn_bandwidth=25e9,
+    vmem_capacity=128 * 2**20,
+    idle_power=60.0,
+    peak_power=250.0,
+)
+
+# Jetson AGX Orin 64GB (paper's board). LLM decode on Orin is bound by the
+# 204.8 GB/s LPDDR5 bus; ~85 TFLOP/s dense bf16-equivalent on the Ampere iGPU.
+ORIN_AGX = HardwareSpec(
+    name="orin_agx",
+    peak_flops=85e12 / 2,          # fp16 tensor-core dense (sparse figure halved)
+    peak_flops_int8=85e12,
+    hbm_bandwidth=204.8e9,
+    hbm_capacity=64e9,
+    ici_bandwidth=0.0,
+    dcn_bandwidth=10e9 / 8,
+    vmem_capacity=4 * 2**20,
+    idle_power=15.0,
+    peak_power=45.0,               # MAXN power budget counterpart of Table I m1
+)
+
+
+def bytes_per_param(fmt: str) -> float:
+    """Storage bytes per weight for each variant format.
+
+    q4 matches Q4_K_M-style packing: 4-bit weights + per-group (g=128)
+    fp16 scale and min -> 4/8 + 4/128 bytes overhead per weight.
+    q8 is int8 + per-channel scale (amortized ~0).
+    """
+    return {
+        "bf16": 2.0,
+        "fp32": 4.0,
+        "q8": 1.0 + 2.0 / 256.0,
+        "q4": 0.5 + 4.0 / 128.0,
+    }[fmt]

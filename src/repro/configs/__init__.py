@@ -1,0 +1,20 @@
+"""Assigned architectures (10) + the paper's own serving models.
+
+Importing this package registers every config; use
+`repro.common.registry.get_arch(name)` or `list_archs()`.
+"""
+from repro.configs import (  # noqa: F401
+    deepseek_67b,
+    gemma2_2b,
+    qwen2_72b,
+    qwen2_5_32b,
+    phi3_5_moe,
+    llama4_scout,
+    whisper_base,
+    zamba2_7b,
+    qwen2_vl_72b,
+    mamba2_370m,
+    carboncall_qwen2_7b,
+    hermes2_pro_8b,
+    llama31_8b,
+)

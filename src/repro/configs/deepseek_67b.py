@@ -1,0 +1,23 @@
+"""deepseek-67b [dense] — llama-arch [arXiv:2401.02954; hf]
+95L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=102400
+"""
+from repro.common.registry import register_arch
+from repro.config import ModelConfig
+
+
+@register_arch("deepseek-67b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-67b",
+        family="transformer",
+        num_layers=95,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=22016,
+        vocab_size=102400,
+        rope_theta=1e4,
+        act_fn="silu",
+        norm_eps=1e-6,
+    )

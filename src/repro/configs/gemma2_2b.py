@@ -1,0 +1,29 @@
+"""gemma2-2b [dense] — local+global alternating, logit softcap
+[arXiv:2408.00118; hf]
+26L d_model=2304 8H (GQA kv=4) d_ff=9216 vocab=256000
+"""
+from repro.common.registry import register_arch
+from repro.config import ModelConfig
+
+
+@register_arch("gemma2-2b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-2b",
+        family="transformer",
+        num_layers=26,
+        d_model=2304,
+        num_heads=8,
+        num_kv_heads=4,
+        head_dim=256,
+        d_ff=9216,
+        vocab_size=256000,
+        sliding_window=4096,
+        local_global_pattern=2,       # alternate local / global
+        attn_logit_softcap=50.0,
+        final_logit_softcap=30.0,
+        post_block_norm=True,
+        tie_embeddings=True,
+        act_fn="gelu",
+        rope_theta=1e4,
+    )

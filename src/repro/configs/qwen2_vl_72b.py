@@ -1,0 +1,28 @@
+"""qwen2-vl-72b [vlm] — M-RoPE, dynamic resolution [arXiv:2409.12191; hf]
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064
+Backbone only per the assignment — the vision tower is a STUB: input_specs
+provide precomputed patch embeddings (B, n_patches, d_model) and (3, B, S)
+M-RoPE position ids.
+"""
+from repro.common.registry import register_arch
+from repro.config import ModelConfig
+
+
+@register_arch("qwen2-vl-72b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-72b",
+        family="vlm",
+        num_layers=80,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=29568,
+        vocab_size=152064,
+        qkv_bias=True,
+        use_mrope=True,
+        mrope_sections=(16, 24, 24),
+        num_vision_patches=1024,
+        rope_theta=1e6,
+    )

@@ -1,0 +1,70 @@
+"""Reduced configs: same family/structure, tiny dimensions.
+
+Used by the per-arch smoke tests and the CPU-runnable examples: every
+architectural mechanism stays on (GQA ratios, local/global pattern, softcaps,
+MoE routing, SSD chunking, hybrid shared-attention layout, enc-dec cross
+attention, M-RoPE) — only widths/depths/vocab shrink.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.config import ModelConfig, MoEConfig, SSMConfig
+
+
+def reduce_config(cfg: ModelConfig) -> ModelConfig:
+    kw = {}
+    kw["d_model"] = 64
+    kw["vocab_size"] = 512
+    if cfg.num_heads:
+        kw["num_heads"] = 4
+        kw["num_kv_heads"] = max(1, min(cfg.num_kv_heads * 4 // max(cfg.num_heads, 1), 4))
+        kw["head_dim"] = 16 if cfg.head_dim != 2 * (cfg.d_model // max(cfg.num_heads, 1)) else 32
+    kw["d_ff"] = 128 if cfg.d_ff else 0
+    if cfg.family == "hybrid":
+        kw["num_layers"] = 7           # 2 groups of (2 mamba + attn) + 1 tail
+        kw["attn_every"] = 3
+    elif cfg.local_global_pattern:
+        kw["num_layers"] = 4
+        kw["sliding_window"] = 16
+    else:
+        kw["num_layers"] = min(cfg.num_layers, 3)
+    if cfg.family == "moe":
+        kw["moe"] = MoEConfig(
+            num_experts=4,
+            experts_per_token=cfg.moe.experts_per_token,
+            d_ff=96,
+            shared_expert=cfg.moe.shared_expert,
+            # no capacity drops at smoke scale: teacher-forced and decode
+            # paths must agree exactly for the consistency test
+            capacity_factor=8.0,
+        )
+    if cfg.family in ("mamba2", "hybrid"):
+        kw["ssm"] = SSMConfig(state_dim=16, head_dim=16, expand=2,
+                              conv_width=cfg.ssm.conv_width, chunk_size=8,
+                              ngroups=cfg.ssm.ngroups)
+    if cfg.family == "whisper":
+        kw["encoder_layers"] = 2
+        kw["num_audio_frames"] = 24
+    if cfg.family == "vlm":
+        kw["num_vision_patches"] = 8
+        kw["mrope_sections"] = (2, 3, 3)
+    kw["name"] = cfg.name + "-reduced"
+    return dataclasses.replace(cfg, **kw)
+
+
+def smoke_batch(cfg: ModelConfig, B: int = 2, S: int = 32):
+    """Concrete tiny inputs matching input_specs' structure."""
+    import jax.numpy as jnp
+    batch = {"tokens": jnp.ones((B, S), jnp.int32),
+             "labels": jnp.ones((B, S), jnp.int32),
+             "loss_mask": jnp.ones((B, S), jnp.float32)}
+    if cfg.family == "whisper":
+        batch["frames"] = jnp.ones((B, cfg.num_audio_frames, cfg.d_model),
+                                   jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.ones((B, cfg.num_vision_patches, cfg.d_model),
+                                         jnp.bfloat16)
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None, None, :], (3, B, S))
+    return batch

@@ -1,0 +1,25 @@
+"""whisper-base [audio] — enc-dec, conv frontend (stub) [arXiv:2212.04356]
+6L d_model=512 8H (kv=8) d_ff=2048 vocab=51865
+Frontend is a STUB per the assignment: input_specs provide precomputed frame
+embeddings (B, 1500, 512) — the output of Whisper's conv downsampler.
+"""
+from repro.common.registry import register_arch
+from repro.config import ModelConfig
+
+
+@register_arch("whisper-base")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-base",
+        family="whisper",
+        num_layers=6,                # decoder layers
+        encoder_layers=6,
+        d_model=512,
+        num_heads=8,
+        num_kv_heads=8,
+        head_dim=64,
+        d_ff=2048,
+        vocab_size=51865,
+        num_audio_frames=1500,
+        act_fn="gelu",
+    )

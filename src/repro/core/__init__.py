@@ -1,0 +1,32 @@
+"""CarbonCall core: the paper's primary contribution.
+
+carbon.py     CI traces/forecasts + CF = E x CI accounting        (§III-A)
+tool_select.py dynamic tool selection: embed -> top-k -> rerank   (§III-B)
+power.py      operating-mode LUTs + power/TPS model               (§III-C)
+switching.py  mixed-quality Q8/Q4 variant switching               (§III-D)
+governor.py   CI -> mode mapping with 10% hysteresis              (§III-E)
+runtime.py    the runtime loop + weekly virtual-time driver       (§III-E, §IV)
+baselines.py  Default / Gorilla / LiS / LiS* comparison policies  (§IV)
+executor.py   simulated + real-JAX execution backends
+fleet.py      multi-pod carbon-aware routing (beyond-paper scale-out)
+embedder.py   sentence encoder / cross-encoder substrate (in JAX)
+"""
+from repro.core.carbon import (
+    WEEKS, ci_trace, forecast_trace, carbon_footprint, CarbonAccountant)
+from repro.core.power import (
+    OperatingMode, ORIN_MODES, TPU_MODES, PowerModel, modes_for)
+from repro.core.governor import CarbonGovernor, GovernorState
+from repro.core.switching import VariantSwitcher, SwitchDecision
+from repro.core.tool_select import ToolSelector, SelectionResult
+from repro.core.runtime import CarbonCallRuntime, Policy, run_week, WeekResult
+from repro.core.baselines import POLICIES
+from repro.core.executor import SimExecutor, PAPER_MODELS, ModelProfile
+
+__all__ = [
+    "WEEKS", "ci_trace", "forecast_trace", "carbon_footprint",
+    "CarbonAccountant", "OperatingMode", "ORIN_MODES", "TPU_MODES",
+    "PowerModel", "modes_for", "CarbonGovernor", "GovernorState",
+    "VariantSwitcher", "SwitchDecision", "ToolSelector", "SelectionResult",
+    "CarbonCallRuntime", "Policy", "run_week", "WeekResult", "POLICIES",
+    "SimExecutor", "PAPER_MODELS", "ModelProfile",
+]

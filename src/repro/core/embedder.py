@@ -1,0 +1,201 @@
+"""Sentence embedder + cross-encoder for tool selection, in JAX.
+
+No pretrained checkpoints exist in this offline container, so the substrate is
+built from scratch (per the assignment: no "assume X exists"):
+
+  * HashTokenizer — word-level feature hashing (lowercase, alnum split,
+    id = sha-stable hash % vocab). Deterministic, training-free.
+  * SentenceEncoder — embedding table + 2-layer mean-pooled transformer with a
+    projection head. Even *untrained* (fixed random init) it is a random
+    projection of bag-of-words features, so lexical overlap => cosine
+    similarity; training (contrastive, examples/train_embedder path in
+    quickstart) sharpens it. This mirrors the paper's all-MiniLM [16] role.
+  * CrossEncoder — scores (query, tool) jointly. Two backends:
+      - "lexical": IDF-weighted token-overlap scoring (deterministic,
+        training-free; the benchmark default),
+      - "transformer": 2-layer joint encoder with scalar head (trainable).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import re
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, RuntimeConfig
+from repro.sharding.param import ParamDef, init_params
+
+
+_WORD_RE = re.compile(r"[a-z0-9_]+")
+
+
+def _stable_hash(word: str) -> int:
+    return int.from_bytes(hashlib.md5(word.encode()).digest()[:4], "little")
+
+
+@dataclasses.dataclass(frozen=True)
+class HashTokenizer:
+    vocab_size: int = 8192
+    max_len: int = 32
+
+    def words(self, text: str) -> List[str]:
+        return _WORD_RE.findall(text.lower())
+
+    def encode(self, text: str) -> np.ndarray:
+        ids = [2 + _stable_hash(w) % (self.vocab_size - 2) for w in self.words(text)]
+        ids = ids[: self.max_len]
+        ids += [0] * (self.max_len - len(ids))
+        return np.array(ids, np.int32)
+
+    def encode_batch(self, texts: Sequence[str]) -> np.ndarray:
+        return np.stack([self.encode(t) for t in texts])
+
+
+# ---------------------------------------------------------------------------
+# Sentence encoder
+# ---------------------------------------------------------------------------
+
+
+ENCODER_CFG = ModelConfig(
+    name="tool-encoder", family="transformer", num_layers=2, d_model=128,
+    num_heads=4, num_kv_heads=4, d_ff=256, vocab_size=8192)
+EMBED_DIM = 256
+
+
+def idf_weights(tokenizer: "HashTokenizer", corpus: Sequence[str]) -> np.ndarray:
+    """Per-hashed-token IDF over a corpus -> (vocab,) f32. Down-weights the
+    boilerplate words every tool description shares."""
+    df = np.zeros(tokenizer.vocab_size, np.float32)
+    for text in corpus:
+        ids = {2 + _stable_hash(w) % (tokenizer.vocab_size - 2)
+               for w in tokenizer.words(text)}
+        for i in ids:
+            df[i] += 1.0
+    n = max(len(corpus), 1)
+    w = np.log((n + 1.0) / (df + 0.5))
+    return (w / w.max()).astype(np.float32)
+
+
+def encoder_spec():
+    from repro.models.transformer import param_spec
+    spec = param_spec(ENCODER_CFG)
+    spec.pop("lm_head")
+    spec["proj"] = ParamDef((ENCODER_CFG.d_model, EMBED_DIM), ("embed", None))
+    return spec
+
+
+def encode_texts(params, token_ids, rcfg: RuntimeConfig = None, *,
+                 mode: str = "hybrid", idf=None):
+    """token_ids: (B, T) -> L2-normalized embeddings (B, EMBED_DIM).
+
+    mode:
+      * "bow"        — mean-pooled embedding table + projection. A random
+                       projection of bag-of-words features: training-free and
+                       lexical-overlap-faithful (untrained default for the
+                       retrieval index).
+      * "contextual" — full transformer pass (use after training).
+      * "hybrid"     — 0.7*bow + 0.3*contextual, normalized: keeps the BoW
+                       backbone while letting a trained encoder sharpen it.
+    """
+    from repro.models.transformer import forward
+    rcfg = rcfg or RuntimeConfig()
+    mask = (token_ids != 0).astype(jnp.float32)
+    if idf is not None:
+        mask = mask * jnp.take(jnp.asarray(idf), token_ids, axis=0)
+    denom = jnp.maximum(mask.sum(1, keepdims=True), 1e-3)
+    tok_emb = jnp.take(params["embed"], token_ids, axis=0).astype(jnp.float32)
+    bow = (tok_emb * mask[..., None]).sum(1) / denom
+    if mode == "bow":
+        pooled = bow
+    else:
+        h, _, _ = forward(params, {"tokens": token_ids}, ENCODER_CFG, rcfg)
+        ctx = (h.astype(jnp.float32) * mask[..., None]).sum(1) / denom
+        pooled = ctx if mode == "contextual" else 0.7 * bow + 0.3 * ctx
+    emb = pooled @ params["proj"].astype(jnp.float32)
+    return emb / jnp.maximum(jnp.linalg.norm(emb, axis=-1, keepdims=True), 1e-9)
+
+
+def init_encoder(seed: int = 0):
+    return init_params(encoder_spec(), jax.random.PRNGKey(seed))
+
+
+def contrastive_loss(params, q_tokens, t_tokens, rcfg=None, temp: float = 0.07):
+    """InfoNCE over in-batch negatives: row i of q matches row i of t."""
+    zq = encode_texts(params, q_tokens, rcfg)
+    zt = encode_texts(params, t_tokens, rcfg)
+    logits = (zq @ zt.T) / temp
+    labels = jnp.arange(zq.shape[0])
+    return -jnp.mean(jax.nn.log_softmax(logits, axis=-1)[labels, labels])
+
+
+# ---------------------------------------------------------------------------
+# Cross encoders
+# ---------------------------------------------------------------------------
+
+
+class LexicalCrossEncoder:
+    """IDF-weighted overlap: deterministic re-ranker (benchmark default)."""
+
+    def __init__(self, tokenizer: HashTokenizer, corpus: Sequence[str]):
+        self.tok = tokenizer
+        df: dict = {}
+        for text in corpus:
+            for w in set(self.tok.words(text)):
+                df[w] = df.get(w, 0) + 1
+        n = max(len(corpus), 1)
+        self.idf = {w: float(np.log((n + 1) / (c + 0.5))) for w, c in df.items()}
+        self.default_idf = float(np.log(n + 1))
+
+    def score(self, query: str, tool_text: str) -> float:
+        qw = set(self.tok.words(query))
+        tw = set(self.tok.words(tool_text))
+        # sorted iteration: float summation order must not depend on
+        # PYTHONHASHSEED (eps-level differences flip argsort ties downstream)
+        inter = sorted(qw & tw)
+        s = sum(self.idf.get(w, self.default_idf) for w in inter)
+        norm = sum(self.idf.get(w, self.default_idf) for w in sorted(tw)) + 1e-9
+        return s / norm
+
+    def score_batch(self, query: str, tool_texts: Sequence[str]) -> np.ndarray:
+        return np.array([self.score(query, t) for t in tool_texts], np.float32)
+
+
+CROSS_CFG = ModelConfig(
+    name="tool-cross", family="transformer", num_layers=2, d_model=128,
+    num_heads=4, num_kv_heads=4, d_ff=256, vocab_size=8192)
+
+
+def cross_spec():
+    from repro.models.transformer import param_spec
+    spec = param_spec(CROSS_CFG)
+    spec.pop("lm_head")
+    spec["head"] = ParamDef((CROSS_CFG.d_model, 1), ("embed", None))
+    return spec
+
+
+def cross_score(params, pair_tokens, rcfg: RuntimeConfig = None):
+    """pair_tokens: (B, T) — query ++ [SEP=1] ++ tool text -> scores (B,)."""
+    from repro.models.transformer import forward
+    rcfg = rcfg or RuntimeConfig()
+    mask = (pair_tokens != 0).astype(jnp.float32)
+    h, _, _ = forward(params, {"tokens": pair_tokens}, CROSS_CFG, rcfg)
+    pooled = (h.astype(jnp.float32) * mask[..., None]).sum(1) / \
+        jnp.maximum(mask.sum(1, keepdims=True), 1.0)
+    return (pooled @ params["head"].astype(jnp.float32))[:, 0]
+
+
+def init_cross(seed: int = 0):
+    return init_params(cross_spec(), jax.random.PRNGKey(seed))
+
+
+def pair_tokens(tok: HashTokenizer, query: str, tool_text: str,
+                max_len: int = 64) -> np.ndarray:
+    q = [2 + _stable_hash(w) % (tok.vocab_size - 2) for w in tok.words(query)]
+    t = [2 + _stable_hash(w) % (tok.vocab_size - 2) for w in tok.words(tool_text)]
+    ids = (q[: max_len // 2] + [1] + t)[: max_len]
+    ids += [0] * (max_len - len(ids))
+    return np.array(ids, np.int32)

@@ -1,0 +1,158 @@
+"""Query execution backends for the CarbonCall runtime.
+
+SimExecutor — analytic virtual-time model calibrated from the roofline
+constants in core/power.py (this container has no TPU and no power rails;
+DESIGN.md §3 records this as the central changed assumption). It models the
+full per-query pipeline the paper times:
+    select -> prefill(prompt w/ tools) -> decode(function call JSON)
+           -> tool execution (external, stubbed latency)
+           -> evaluation pass (prefill result + short decode)
+with failure->retry loops whose probability comes from the *actual* selection
+outcome plus a variant-dependent degradation (quantized models fail more,
+§III-D last paragraph).
+
+JaxExecutor — wraps serving.ServingEngine with real (tiny) models on CPU;
+used by examples/ and integration tests so the control logic is exercised
+against real token generation, not just the analytic model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.common.hardware import HardwareSpec, bytes_per_param
+from repro.core.power import OperatingMode, PowerModel
+
+
+TOKENS_PER_TOOL = 30          # prompt tokens to describe one tool
+QUERY_TOKENS = 30             # base prompt
+CALL_TOKENS = 50              # decoded tokens per structured function call
+EVAL_PROMPT = 120             # tool result fed back for evaluation
+EVAL_TOKENS = 25              # decoded evaluation summary
+TOOL_EXEC_S = 0.20            # external API latency (stub)
+SELECT_S = 0.008              # embedder+rerank latency (measured-on-CPU scale)
+Q4_ACCURACY_FACTOR = 0.93     # quantization hurts structured calling slightly
+
+
+@dataclasses.dataclass
+class QueryExecution:
+    latency_s: float
+    energy_j: float
+    decode_tokens: int
+    decode_time_s: float
+    exec_time_s: float            # latency minus external-tool wait
+    failed_attempts: int
+    succeeded: bool
+
+    @property
+    def tps(self) -> float:
+        """Paper's TPS: generated tokens over on-device execution time
+        (prefill + decode; the external API wait is not the LLM's throughput)."""
+        return self.decode_tokens / max(self.exec_time_s, 1e-9)
+
+
+@dataclasses.dataclass
+class ModelProfile:
+    """Per-LLM-family constants the TPS/power model needs."""
+    name: str
+    n_params: float               # total
+    n_active: float               # per-token active (MoE-aware)
+    kv_bytes_per_token: float     # bytes appended to the KV cache per token
+
+    def weight_bytes(self, variant: str) -> float:
+        return self.n_params * bytes_per_param(variant)
+
+    def active_bytes(self, variant: str) -> float:
+        return self.n_active * bytes_per_param(variant)
+
+
+# The paper's three model families (§IV), 8B/8B/7B class.
+HERMES2_PRO_8B = ModelProfile("hermes2-pro-8b", 8.0e9, 8.0e9, 131072)
+LLAMA31_8B = ModelProfile("llama3.1-8b", 8.0e9, 8.0e9, 131072)
+QWEN2_7B = ModelProfile("qwen2-7b", 7.6e9, 7.6e9, 28672)
+
+PAPER_MODELS = {m.name: m for m in (HERMES2_PRO_8B, LLAMA31_8B, QWEN2_7B)}
+
+
+class SimExecutor:
+    def __init__(self, profile: ModelProfile, hw: HardwareSpec,
+                 seed: int = 0):
+        self.profile = profile
+        self.power_model = PowerModel(hw)
+        self.rng = np.random.default_rng(seed)
+
+    def run_query(self, *, n_tools_in_prompt: int, n_calls: int,
+                  selection_correct: bool, variant: str,
+                  mode: OperatingMode) -> QueryExecution:
+        pm, prof = self.power_model, self.profile
+        prompt = QUERY_TOKENS + n_tools_in_prompt * TOKENS_PER_TOOL
+        # prefill is compute-bound (pulls toward the cap); decode is
+        # memory-bound (cores partially idle); tool wait is near-idle
+        p_prefill = pm.power(mode, util=0.95)
+        p_decode = pm.power(mode, util=0.70)
+        p_idle_wait = pm.power(mode, util=0.25)
+
+        def one_attempt(success: bool):
+            lat = SELECT_S
+            en = SELECT_S * pm.power(mode, util=0.3)
+            wait = 0.0
+            dec_tok = 0
+            dec_t = 0.0
+            t = pm.prefill_time(prompt, prof.n_active * 2, mode)  # 2 FLOP/param/token
+            lat += t
+            en += t * p_prefill
+            calls = n_calls if success else max(1, n_calls // 2)
+            for _ in range(calls):
+                dt = CALL_TOKENS * pm.decode_time_per_token(
+                    prof.active_bytes(variant), prof.kv_bytes_per_token, mode)
+                lat += dt
+                en += dt * p_decode
+                dec_tok += CALL_TOKENS
+                dec_t += dt
+                lat += TOOL_EXEC_S
+                wait += TOOL_EXEC_S
+                en += TOOL_EXEC_S * p_idle_wait
+                # evaluation pass
+                pe = pm.prefill_time(EVAL_PROMPT, prof.n_active * 2, mode)
+                de = EVAL_TOKENS * pm.decode_time_per_token(
+                    prof.active_bytes(variant), prof.kv_bytes_per_token, mode)
+                lat += pe + de
+                en += pe * p_prefill + de * p_decode
+                dec_tok += EVAL_TOKENS
+                dec_t += de
+            return lat, en, dec_tok, dec_t, wait
+
+        p_success = (1.0 if selection_correct else 0.0)
+        if variant == "q4":
+            p_success *= Q4_ACCURACY_FACTOR
+        lat = en = 0.0
+        tok = 0
+        dec_t = 0.0
+        wait_t = 0.0
+        failed = 0
+        succeeded = False
+        for attempt in range(2):                   # one retry on failure
+            ok = self.rng.random() < p_success
+            l, e, d, dt, w = one_attempt(ok)
+            lat += l
+            en += e
+            tok += d
+            dec_t += dt
+            wait_t += w
+            if ok:
+                succeeded = True
+                break
+            failed += 1
+        return QueryExecution(latency_s=lat, energy_j=en, decode_tokens=tok,
+                              decode_time_s=dec_t,
+                              exec_time_s=lat - wait_t,
+                              failed_attempts=failed, succeeded=succeeded)
+
+    def variant_switch_cost(self, variant: str, mode: OperatingMode):
+        """(latency, energy) to load the `variant` weights."""
+        t = self.power_model.model_load_time(
+            self.profile.weight_bytes(variant), mode)
+        return t, t * self.power_model.power(mode, util=0.5)

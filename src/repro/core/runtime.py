@@ -1,0 +1,201 @@
+"""The CarbonCall runtime (paper Fig. 1): ties together tool selection,
+carbon-aware operating modes, and mixed-quality variant switching.
+
+`run_week` drives a full week of virtual time against a CI trace with Poisson
+query arrivals — the experimental design of §IV (five consecutive days per
+model, here a full week to match the CI traces). Method behaviour is injected
+through `Policy`, so the paper's baselines (Default/Gorilla/LiS/LiS*) are the
+same loop with features disabled — see core/baselines.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.carbon import CarbonAccountant, carbon_footprint, forecast_trace
+from repro.core.executor import SimExecutor, QueryExecution
+from repro.core.governor import CarbonGovernor, GovernorState
+from repro.core.power import OperatingMode, modes_for
+from repro.core.switching import VariantSwitcher
+from repro.core.tool_select import ToolSelector
+from repro.data.workload import FunctionCallWorkload, Query
+
+
+@dataclasses.dataclass
+class Policy:
+    name: str
+    use_selection: str = "carboncall"   # carboncall | gorilla | lis | all_tools
+    carbon_modes: bool = True           # governor drives the mode?
+    variant_switching: bool = True      # Q8<->Q4 TPS switching?
+    fixed_variant: str = "q8"
+
+
+@dataclasses.dataclass
+class QueryRecord:
+    t: float
+    latency_s: float
+    energy_j: float
+    carbon_g: float
+    tps: float
+    variant: str
+    mode_idx: int
+    n_tools: int
+    succeeded: bool
+
+
+@dataclasses.dataclass
+class WeekResult:
+    name: str
+    records: List[QueryRecord]
+
+    def _mean(self, f):
+        return float(np.mean([f(r) for r in self.records])) if self.records else 0.0
+
+    @property
+    def avg_latency(self):
+        return self._mean(lambda r: r.latency_s)
+
+    @property
+    def avg_power(self):
+        return self._mean(lambda r: r.energy_j / max(r.latency_s, 1e-9))
+
+    @property
+    def avg_tps(self):
+        return self._mean(lambda r: r.tps)
+
+    @property
+    def avg_carbon(self):
+        return self._mean(lambda r: r.carbon_g)
+
+    @property
+    def success_rate(self):
+        return self._mean(lambda r: 1.0 if r.succeeded else 0.0)
+
+    def q8_utilization_by_day(self) -> List[float]:
+        out = []
+        for d in range(7):
+            day = [r for r in self.records if d * 86400 <= r.t < (d + 1) * 86400]
+            if day:
+                out.append(sum(r.variant == "q8" for r in day) / len(day))
+            else:
+                out.append(1.0)
+        return out
+
+
+class CarbonCallRuntime:
+    def __init__(self, *, selector: ToolSelector, executor: SimExecutor,
+                 policy: Policy, modes: List[OperatingMode],
+                 catalog_size: int, seed: int = 0):
+        self.selector = selector
+        self.executor = executor
+        self.policy = policy
+        self.modes = modes
+        self.catalog_size = catalog_size
+        self.governor = CarbonGovernor(modes)
+        self.switcher = VariantSwitcher()
+        # deployment-time calibration: the (m1, Q8) decode TPS reference the
+        # 80% switching threshold is measured against
+        from repro.core.executor import CALL_TOKENS, EVAL_PROMPT, EVAL_TOKENS
+        pm = executor.power_model
+        prof = executor.profile
+        tok = CALL_TOKENS + EVAL_TOKENS
+        t_ref = (pm.prefill_time(200 + EVAL_PROMPT, prof.n_active * 2, modes[0])
+                 + tok * pm.decode_time_per_token(
+                     prof.active_bytes("q8"), prof.kv_bytes_per_token, modes[0]))
+        self.switcher.set_reference(tok / t_ref)
+        self.rng = np.random.default_rng(seed)
+
+    # -- selection policies --------------------------------------------------
+
+    def _select(self, query: Query):
+        """-> (n_tools_in_prompt, selection_correct, extra_inference)."""
+        p = self.policy
+        if p.use_selection == "all_tools":
+            return self.catalog_size, True, 0.0   # all tools: never "misses",
+            # but success degrades with prompt size (handled below)
+        if p.use_selection == "gorilla":
+            cand, _ = self.selector.retrieve(query.text)
+            chosen = cand[:2]
+            return max(len(chosen), 1), all(t in chosen for t in query.true_tools), 0.0
+        if p.use_selection == "lis":
+            # LLM-recommender: good accuracy, costs an extra short inference
+            sel = self.selector.select(query.text)
+            correct = all(t in sel.tool_ids for t in query.true_tools)
+            return max(len(sel.tool_ids), 1), correct, 1.0
+        sel = self.selector.select(query.text)
+        correct = all(t in sel.tool_ids for t in query.true_tools)
+        return max(len(sel.tool_ids), 1), correct, 0.0
+
+    def _all_tools_success(self, n_calls: int) -> bool:
+        # small LLMs with the full catalog in-prompt mis-call often ([1]);
+        # chains compound the exposure
+        p1 = max(0.45, 0.97 - 0.06 * np.log(max(self.catalog_size, 1)))
+        return bool(self.rng.random() < p1 ** n_calls)
+
+    # -- main entry ------------------------------------------------------------
+
+    def handle_query(self, t: float, query: Query, ci: float,
+                     gov_state: GovernorState) -> QueryRecord:
+        p = self.policy
+        mode = self.modes[gov_state.mode_idx] if p.carbon_modes else self.modes[0]
+        variant = self.switcher.variant if p.variant_switching else p.fixed_variant
+
+        n_tools, correct, extra_inf = self._select(query)
+        if p.use_selection == "all_tools":
+            correct = self._all_tools_success(len(query.true_tools))
+
+        ex = self.executor.run_query(
+            n_tools_in_prompt=n_tools, n_calls=len(query.true_tools),
+            selection_correct=correct, variant=variant, mode=mode)
+        lat, en = ex.latency_s, ex.energy_j
+        if extra_inf:
+            # LiS recommender pass: ~200-token prompt, 30-token generation
+            pm = self.executor.power_model
+            prof = self.executor.profile
+            tpre = pm.prefill_time(200, prof.n_active * 2, mode)
+            tdec = 30 * pm.decode_time_per_token(
+                prof.active_bytes(variant), prof.kv_bytes_per_token, mode)
+            lat += tpre + tdec
+            en += (tpre + tdec) * pm.power(mode)
+
+        # TPS monitoring + variant switching
+        if p.variant_switching:
+            self.switcher.observe(t, ex.tps)
+            dec = self.switcher.decide(t)
+            if dec.switch_to and dec.switch_to != self.switcher.variant:
+                sl, se = self.executor.variant_switch_cost(dec.switch_to, mode)
+                lat += sl
+                en += se
+                self.switcher.apply(t, dec)
+
+        return QueryRecord(
+            t=t, latency_s=lat, energy_j=en,
+            carbon_g=carbon_footprint(en, ci), tps=ex.tps, variant=variant,
+            mode_idx=gov_state.mode_idx, n_tools=n_tools, succeeded=ex.succeeded)
+
+
+def run_week(runtime: CarbonCallRuntime, workload: FunctionCallWorkload,
+             ci: np.ndarray, *, step_minutes: int = 10,
+             queries_per_hour: float = 30.0, seed: int = 0) -> WeekResult:
+    """Virtual-time week: Poisson arrivals, 24h forecast refresh at midnight."""
+    rng = np.random.default_rng(seed)
+    forecast = forecast_trace(ci, seed=seed + 1)
+    gov = runtime.governor
+    steps_per_day = 24 * 60 // step_minutes
+    state = gov.init(forecast[:steps_per_day])
+    records: List[QueryRecord] = []
+    lam = queries_per_hour * step_minutes / 60.0
+    for i in range(len(ci)):
+        t = i * step_minutes * 60.0
+        if i % steps_per_day == 0:      # midnight: refresh the 24h forecast
+            fc = forecast[i:i + steps_per_day]
+            state = gov.update(state, float(ci[i]), forecast_24h=fc)
+        else:
+            state = gov.update(state, float(ci[i]))
+        for q in range(rng.poisson(lam)):
+            query = workload.sample()
+            rec = runtime.handle_query(t + 30.0 * q, query, float(ci[i]), state)
+            records.append(rec)
+    return WeekResult(name=runtime.policy.name, records=records)

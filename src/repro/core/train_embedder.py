@@ -1,0 +1,62 @@
+"""Contrastive fine-tuning for the tool-selection encoder (paper's analogue:
+the pretrained all-MiniLM [16] — here we TRAIN our own substrate, per the
+no-assumed-checkpoints rule).
+
+InfoNCE over (query, true-tool-description) pairs from the synthetic workload
+generator; the hybrid encoder mode then blends the trained contextual branch
+with the training-free BoW backbone.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import RuntimeConfig, TrainConfig
+from repro.core import embedder as E
+from repro.data.workload import FunctionCallWorkload, ToolCatalog
+from repro.train.optimizer import adamw_init, adamw_update
+
+
+def make_pairs(catalog: ToolCatalog, n: int, seed: int = 0):
+    wl = FunctionCallWorkload(catalog, seed=seed, chain_fraction=0.0)
+    tok = E.HashTokenizer()
+    qs, ts = [], []
+    for _ in range(n):
+        q = wl.sample()
+        qs.append(tok.encode(q.text))
+        ts.append(tok.encode(catalog.tools[q.true_tools[0]].description))
+    return np.stack(qs), np.stack(ts)
+
+
+def train_encoder(catalog: ToolCatalog, *, steps: int = 60, batch: int = 32,
+                  lr: float = 1e-3, seed: int = 0, rcfg: Optional[RuntimeConfig] = None,
+                  verbose: bool = False):
+    """Returns trained encoder params (use with ToolSelector(...,
+    encoder_params=..., encoder_mode='hybrid'))."""
+    rcfg = rcfg or RuntimeConfig()
+    params = E.init_encoder(seed)
+    tcfg = TrainConfig(learning_rate=lr, warmup_steps=max(steps // 10, 2),
+                       total_steps=steps, weight_decay=0.01)
+    opt = adamw_init(params)
+    q_all, t_all = make_pairs(catalog, steps * batch, seed=seed + 1)
+
+    @jax.jit
+    def step(params, opt, q, t):
+        loss, grads = jax.value_and_grad(
+            lambda p: E.contrastive_loss(p, q, t, rcfg))(params)
+        params, opt, _ = adamw_update(grads, opt, tcfg)
+        return params, opt, loss
+
+    losses = []
+    for i in range(steps):
+        sl = slice(i * batch, (i + 1) * batch)
+        params, opt, loss = step(params, opt, jnp.asarray(q_all[sl]),
+                                 jnp.asarray(t_all[sl]))
+        losses.append(float(loss))
+        if verbose and (i + 1) % 10 == 0:
+            print(f"[embedder] step {i+1}/{steps} loss {losses[-1]:.4f}")
+    return params, losses

@@ -1,0 +1,5 @@
+from repro.data.pipeline import TokenPipeline, synthetic_lm_batch
+from repro.data.workload import FunctionCallWorkload, ToolCatalog
+
+__all__ = ["TokenPipeline", "synthetic_lm_batch", "FunctionCallWorkload",
+           "ToolCatalog"]

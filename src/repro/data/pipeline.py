@@ -1,0 +1,61 @@
+"""Deterministic synthetic LM data pipeline.
+
+Determinism is the fault-tolerance story: batch(step) is a pure function of
+(seed, step, shard), so (a) restarts resume bit-identically from a checkpoint
+step, (b) any host can recompute any other host's shard (straggler/failure
+takeover needs no data redistribution), and (c) elastic resharding just
+changes the shard->host map.
+
+The generator is a Zipf-ish n-gram sampler rather than uniform noise so the
+loss curve actually decreases — useful for the train_tiny example and the
+checkpoint-restart integration tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def synthetic_lm_batch(seed: int, step: int, batch: int, seq: int, vocab: int):
+    """Pure function -> {"tokens", "labels", "loss_mask"}."""
+    key = jax.random.fold_in(jax.random.fold_in(jax.random.PRNGKey(seed), step), 7)
+    k1, k2 = jax.random.split(key)
+    # Zipf-ish marginal via squared uniform -> favors low token ids
+    u = jax.random.uniform(k1, (batch, seq + 1))
+    base = (u * u * (vocab - 3)).astype(jnp.int32) + 2
+    # inject local structure: with p=0.5 copy the previous token + 1 (bigram)
+    flip = jax.random.bernoulli(k2, 0.5, (batch, seq + 1))
+    shifted = jnp.roll(base, 1, axis=1)
+    toks = jnp.where(flip, jnp.clip(shifted + 1, 0, vocab - 1), base)
+    return {
+        "tokens": toks[:, :-1],
+        "labels": toks[:, 1:],
+        "loss_mask": jnp.ones((batch, seq), jnp.float32),
+    }
+
+
+@dataclasses.dataclass
+class TokenPipeline:
+    seed: int
+    global_batch: int
+    seq_len: int
+    vocab: int
+    num_shards: int = 1
+    shard: int = 0
+
+    def batch_at(self, step: int):
+        """This shard's slice of the global batch at `step`."""
+        full = synthetic_lm_batch(self.seed, step, self.global_batch,
+                                  self.seq_len, self.vocab)
+        per = self.global_batch // self.num_shards
+        sl = slice(self.shard * per, (self.shard + 1) * per)
+        return {k: v[sl] for k, v in full.items()}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

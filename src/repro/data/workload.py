@@ -1,0 +1,132 @@
+"""Synthetic function-calling workload: BFCL/GeoEngine stand-in.
+
+The real benchmarks are not downloadable in this offline container, so we
+generate a tool catalog and query stream with the same *shape* as the paper's
+mix (§IV): single-call queries (BFCL-like) and multi-step chains of 2–4
+sequential calls (GeoEngine-like), over a catalog large enough that naive
+all-tools prompting degrades small-model accuracy — the regime the paper's
+tool selection targets.
+
+Every query carries ground-truth tool ids so selection accuracy is measurable,
+an entity span for the NER/keyword path, and a difficulty class that the
+runtime's TPS simulation maps to output lengths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import random
+from typing import Dict, List, Sequence, Tuple
+
+DOMAINS = [
+    ("weather", ["forecast", "temperature", "humidity", "wind", "alerts"]),
+    ("maps", ["route", "distance", "traffic", "nearby", "elevation"]),
+    ("calendar", ["event", "reminder", "availability", "meeting", "schedule"]),
+    ("finance", ["price", "exchange", "portfolio", "invoice", "budget"]),
+    ("email", ["send", "search", "draft", "attachment", "label"]),
+    ("media", ["play", "playlist", "volume", "podcast", "lyrics"]),
+    ("smart_home", ["lights", "thermostat", "lock", "camera", "vacuum"]),
+    ("travel", ["flight", "hotel", "rental", "visa", "itinerary"]),
+    ("health", ["steps", "heart_rate", "sleep", "calories", "workout"]),
+    ("geo", ["geocode", "reverse_geocode", "timezone", "terrain", "satellite"]),
+]
+ACTIONS = ["get", "set", "search", "create", "update", "delete", "list", "compare"]
+ENTITIES = ["Chicago", "Berlin", "Tokyo", "Nairobi", "Oslo", "Lima", "Sydney",
+            "Austin", "Carbondale", "Zurich", "Mumbai", "Seoul"]
+
+QUERY_TEMPLATES = [
+    "Can you {action} the {topic} for {entity}?",
+    "I need to {action} {topic} near {entity} today",
+    "{action} {topic} information about {entity} please",
+    "What is the {topic} in {entity}? Please {action} it",
+    "Help me {action} a {topic} regarding {entity}",
+]
+
+PARAPHRASE_NOISE = ["", " right away", " as soon as possible", " thanks",
+                    " when you get a chance", " for my trip"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Tool:
+    tool_id: int
+    name: str
+    description: str
+    keywords: Tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    text: str
+    sentences: Tuple[str, ...]
+    true_tools: Tuple[int, ...]      # ordered chain of ground-truth tool ids
+    entities: Tuple[str, ...]
+    difficulty: str                  # "single" (BFCL-like) | "chain" (GeoEngine-like)
+
+
+@dataclasses.dataclass
+class ToolCatalog:
+    tools: List[Tool]
+
+    @property
+    def texts(self) -> List[str]:
+        return [t.description for t in self.tools]
+
+    def keyword_map(self) -> Dict[str, List[int]]:
+        out: Dict[str, List[int]] = {}
+        for t in self.tools:
+            for k in t.keywords:
+                out.setdefault(k.lower(), []).append(t.tool_id)
+        return out
+
+
+def build_catalog(num_tools: int = 240, seed: int = 0) -> ToolCatalog:
+    rng = random.Random(seed)
+    combos = [(d, t, a) for d, topics in DOMAINS for t in topics for a in ACTIONS]
+    rng.shuffle(combos)
+    tools = []
+    for i, (domain, topic, action) in enumerate(combos[:num_tools]):
+        name = f"{domain}_{action}_{topic}"
+        desc = (f"{action} {topic} data in the {domain} domain. "
+                f"Use this to {action} {topic} for a given location or item.")
+        tools.append(Tool(tool_id=i, name=name, description=desc,
+                          keywords=(domain, topic, action)))
+    return ToolCatalog(tools)
+
+
+@dataclasses.dataclass
+class FunctionCallWorkload:
+    catalog: ToolCatalog
+    seed: int = 0
+    chain_fraction: float = 0.35     # GeoEngine-like share of the mix
+
+    def __post_init__(self):
+        self._rng = random.Random(self.seed)
+
+    def _query_for(self, tool: Tool, rng) -> str:
+        domain, topic, action = tool.keywords
+        tpl = rng.choice(QUERY_TEMPLATES)
+        ent = rng.choice(ENTITIES)
+        return tpl.format(action=action, topic=topic, entity=ent) + \
+            rng.choice(PARAPHRASE_NOISE), ent
+
+    def sample(self) -> Query:
+        rng = self._rng
+        if rng.random() < self.chain_fraction:
+            n = rng.randint(2, 4)
+            tools = rng.sample(self.catalog.tools, n)
+            parts, ents = [], []
+            for t in tools:
+                s, e = self._query_for(t, rng)
+                parts.append(s)
+                ents.append(e)
+            text = ". ".join(parts)
+            return Query(text=text, sentences=tuple(parts),
+                         true_tools=tuple(t.tool_id for t in tools),
+                         entities=tuple(ents), difficulty="chain")
+        t = rng.choice(self.catalog.tools)
+        s, e = self._query_for(t, rng)
+        return Query(text=s, sentences=(s,), true_tools=(t.tool_id,),
+                     entities=(e,), difficulty="single")
+
+    def stream(self, n: int) -> List[Query]:
+        return [self.sample() for _ in range(n)]

@@ -1,0 +1,10 @@
+"""Oracle: the naive attention from models/layers (O(S^2) materialized)."""
+from __future__ import annotations
+
+from repro.models.layers import naive_attention
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, cap=0.0, q_offset=0):
+    """q: (B, Sq, N, H); k/v: (B, Skv, K, H) — model layout."""
+    return naive_attention(q, k, v, causal=causal, window=window, cap=cap,
+                           q_offset=q_offset)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused dequant-matmul kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.quant.qtensor import QTensor, dequantize
+
+
+def q8_matmul_ref(x, wq, scale):
+    w = wq.astype(jnp.float32) * scale
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def q4_matmul_ref(x, wq, scale, zero, group=128):
+    t = QTensor(q=wq, scale=scale, zero=zero, fmt="q4", group=group)
+    w = dequantize(t, jnp.float32)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def qtensor_matmul_ref(x, t: QTensor):
+    w = dequantize(t, jnp.float32)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)

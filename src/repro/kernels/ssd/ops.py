@@ -1,0 +1,15 @@
+"""Jit'd wrapper for the SSD kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.ssd import ssd_bshp
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, Bm, Cm, *, chunk=128, interpret=True):
+    y, fs = ssd_bshp(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)
+    return y.astype(x.dtype), fs

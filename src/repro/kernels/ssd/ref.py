@@ -1,0 +1,8 @@
+"""Oracle: the chunked SSD scan from models/mamba2."""
+from __future__ import annotations
+
+from repro.models.mamba2 import ssd_chunked
+
+
+def ssd_ref(x, dt, A, Bm, Cm, chunk=128):
+    return ssd_chunked(x, dt, A, Bm, Cm, chunk)

@@ -1,0 +1,14 @@
+"""Oracle for the fused similarity-max kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sim_scores_ref(tools, queries):
+    sims = tools.astype(jnp.float32) @ queries.astype(jnp.float32).T  # (N, m)
+    return jnp.max(sims, axis=1)
+
+
+def topk_tools_ref(tools, queries, k):
+    import jax
+    return jax.lax.top_k(sim_scores_ref(tools, queries), k)

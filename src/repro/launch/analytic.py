@@ -1,0 +1,193 @@
+"""Analytic FLOP/byte model for the roofline terms.
+
+Why this exists: XLA's HloCostAnalysis counts a `while` body ONCE, so any
+lax.scan'd model (all of ours — layers, attention chunks, vocab chunks)
+under-reports FLOPs/bytes by the trip counts. Rather than unroll 95-layer
+models (HLO blowup), we compute the terms analytically — exact for the
+matmuls that dominate — and validate against cost_analysis() on small
+UNROLLED variants in tests/test_analytic.py. The JSON keeps both numbers
+(`flops_per_device` raw HLO, `analytic_*` corrected); EXPERIMENTS.md §Roofline
+uses the analytic terms.
+
+Conventions:
+  * matmul fwd = 2 * params * tokens; bwd = 2x fwd; full remat adds 1x fwd.
+  * attention fwd = 4 * B * Sq * ctx * N * H (QK^T + PV), ctx = avg visible
+    context (causal: S/2; sliding window w: ~w for S >> w; decode: cache len).
+  * SSD fwd per token per head = 2QN + 2QP + 4NP (chunked dual form).
+  * bytes: weights traffic dominates training reads (fwd+bwd+remat gathered
+    reads) + optimizer (fp32 master/mu/nu r+w) + saved activations;
+    decode: full (quantized) weight sweep + KV cache sweep per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.common.hardware import bytes_per_param
+from repro.config import ModelConfig, RuntimeConfig, ShapeConfig
+
+
+def _matmul_params(cfg: ModelConfig) -> float:
+    """Active params that do matmul work per token (excludes the embedding
+    lookup; includes the LM head once)."""
+    n = cfg.active_param_count()
+    if not cfg.tie_embeddings and cfg.family != "whisper":
+        n -= cfg.vocab_size * cfg.d_model        # the lookup-only table
+    return float(n)
+
+
+def _attn_ctx(cfg: ModelConfig, S: int, kind: str) -> float:
+    """Average visible context per query token."""
+    if kind == "decode":
+        return float(S)
+    full = S / 2.0
+    if cfg.sliding_window and cfg.local_global_pattern:
+        p = cfg.local_global_pattern
+        w = min(cfg.sliding_window, S)
+        local = min(w, S / 2.0)
+        return ((p - 1) * local + full) / p
+    if cfg.sliding_window:
+        return min(cfg.sliding_window, S / 2.0)
+    return full
+
+
+def _attn_layers(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.num_attn_layers()
+    if cfg.family == "mamba2":
+        return 0
+    return cfg.num_layers
+
+
+def forward_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Global forward FLOPs for one step."""
+    B, S = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    tokens = B * (1 if kind == "decode" else S)
+    f = 2.0 * _matmul_params(cfg) * tokens
+    # attention scores/values
+    N, H = cfg.num_heads, cfg.resolved_head_dim
+    ctx = _attn_ctx(cfg, S, kind)
+    f += 4.0 * tokens * ctx * N * H * _attn_layers(cfg)
+    # SSD
+    if cfg.family in ("mamba2", "hybrid"):
+        s = cfg.ssm
+        nh, P, Nst, Q = cfg.ssm_heads, s.head_dim, s.state_dim, s.chunk_size
+        n_mamba = cfg.num_layers - _attn_layers(cfg)
+        if kind == "decode":
+            per_tok = 4.0 * Nst * P          # recurrent step
+        else:
+            per_tok = 2.0 * Q * Nst + 2.0 * Q * P + 4.0 * Nst * P
+        f += tokens * nh * per_tok * n_mamba
+    # whisper encoder runs once per request over the frames
+    if cfg.family == "whisper" and kind != "decode":
+        d, ff = cfg.d_model, cfg.d_ff
+        enc_params = cfg.encoder_layers * (4 * d * d + 2 * d * ff)
+        f += 2.0 * B * cfg.num_audio_frames * enc_params
+        f += 4.0 * B * cfg.num_audio_frames * (cfg.num_audio_frames / 2) * N * H \
+            * cfg.encoder_layers
+        # cross attention: every decoder token attends all frames
+        f += 4.0 * tokens * cfg.num_audio_frames * N * H * cfg.num_layers
+    return f
+
+
+def step_flops(cfg: ModelConfig, shape: ShapeConfig, rcfg: RuntimeConfig) -> float:
+    fwd = forward_flops(cfg, shape)
+    if shape.kind != "train":
+        return fwd
+    mult = 3.0                                   # fwd + 2x bwd
+    if rcfg.remat_policy == "full":
+        mult += 1.0                              # recompute fwd in bwd
+    elif rcfg.remat_policy == "save_dots":
+        mult += 0.4                              # elementwise recompute only
+    return fwd * mult
+
+
+def step_hbm_bytes(cfg: ModelConfig, shape: ShapeConfig, rcfg: RuntimeConfig,
+                   chips: int, *, quant: str = "bf16") -> float:
+    """Per-device HBM bytes for one step (dominant terms)."""
+    B, S = shape.global_batch, shape.seq_len
+    n_params = float(cfg.param_count())
+    n_active = float(cfg.active_param_count())
+    d = cfg.d_model
+    TP = 16                                       # model axis width (both meshes)
+    dp = max(chips // TP, 1)                      # (pod x data) replicas
+    if shape.kind == "train":
+        tokens_dev = B * S / dp
+        wb = n_params * 2.0                       # bf16
+        reads = 2.0 if rcfg.remat_policy == "none" else 3.0  # fwd(+remat)+bwd
+        # after the FSDP all-gather each device reads its full 1/TP model shard
+        weight_traffic = wb * reads / TP
+        opt = n_params * 4.0 * 3.0 * 2.0 / chips  # m/v/master fp32 r+w, sharded
+        grads = n_params * 4.0 * 2.0 / chips
+        acts = cfg.num_layers * tokens_dev * d * 2.0 * 2.0 / TP  # save+read
+        intermediate = 8.0 * tokens_dev * d * 2.0 * cfg.num_layers / TP
+        return weight_traffic + opt + grads + acts + intermediate
+    if shape.kind == "prefill":
+        tokens_dev = B * S / dp
+        weight_traffic = n_active * 2.0 / TP
+        acts = 10.0 * tokens_dev * d * 2.0 * cfg.num_layers / TP
+        kv_write = _kv_bytes_total(cfg, B, S, rcfg) / chips
+        return weight_traffic + acts + kv_write
+    # decode: the serving roofline — weights swept once + cache swept once
+    wbytes = n_active * bytes_per_param(quant)
+    weight_traffic = wbytes / TP                  # per-device model-axis share
+    kv = _kv_bytes_total(cfg, B, S, rcfg) / chips
+    small = B * d * 2.0 * cfg.num_layers * 4.0 / chips
+    return weight_traffic + kv + small
+
+
+def _kv_bytes_total(cfg: ModelConfig, B: int, S: int, rcfg: RuntimeConfig) -> float:
+    bpe = 1.0 if rcfg.kv_cache_dtype == "int8" else 2.0
+    K, H = cfg.num_kv_heads, cfg.resolved_head_dim
+    kv = 2.0 * B * S * K * H * bpe * _attn_layers(cfg)
+    if cfg.family in ("mamba2", "hybrid"):
+        s = cfg.ssm
+        n_mamba = cfg.num_layers - _attn_layers(cfg)
+        kv += B * cfg.ssm_heads * s.head_dim * s.state_dim * 4.0 * n_mamba
+    if cfg.family == "whisper":
+        kv += 2.0 * B * cfg.num_audio_frames * K * H * 2.0 * cfg.num_layers
+    return kv
+
+
+def analytic_memory(cfg: ModelConfig, shape: ShapeConfig, rcfg: RuntimeConfig,
+                    chips: int, *, quant: str = "bf16") -> float:
+    """Per-device HBM residency estimate for TPU (bf16 native).
+
+    The CPU backend's memory_analysis() stores bf16 tensors as f32 (no native
+    bf16) and its buffer assignment reuses less aggressively, so the measured
+    number is a ~2x-pessimistic upper bound; this analytic estimate is what a
+    TPU deployment budgets: params (+opt for train) + remat-saved activations
+    (SP-sharded) + cache + a transient high-water allowance.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    TP = 16
+    dp = max(chips // TP, 1)
+    d = cfg.d_model
+    n_params = float(cfg.param_count())
+    if shape.kind == "train":
+        params = n_params * 2.0 / chips
+        opt = n_params * 4.0 * 3.0 / chips
+        grads_live = n_params * 4.0 / chips
+        saved = cfg.num_layers * (B / dp) * S * d * 2.0 / TP
+        transient = 4.0 * (B / dp) * S * d * 2.0 + 2e9 / 16
+        return params + opt + grads_live + saved + transient
+    wpd = n_params * bytes_per_param(quant) / TP      # resident TP weights
+    cache = _kv_bytes_total(cfg, B, S, rcfg) / chips
+    if shape.kind == "prefill":
+        act = 3.0 * (B / dp) * S * d * 2.0 / TP + 1e9 / 4
+        return wpd + cache + act
+    return wpd + cache + 0.5e9
+
+
+def analytic_summary(cfg: ModelConfig, shape: ShapeConfig, rcfg: RuntimeConfig,
+                     chips: int, *, quant: str = "bf16") -> Dict[str, float]:
+    fl = step_flops(cfg, shape, rcfg)
+    return {
+        "analytic_flops_global": fl,
+        "analytic_flops_per_device": fl / chips,
+        "analytic_bytes_per_device": step_hbm_bytes(cfg, shape, rcfg, chips,
+                                                    quant=quant),
+        "analytic_memory_per_device": analytic_memory(cfg, shape, rcfg, chips,
+                                                      quant=quant),
+    }

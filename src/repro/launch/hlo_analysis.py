@@ -1,0 +1,234 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+collective_bytes is not in cost_analysis(): we parse the post-SPMD HLO
+(compiled.as_text()) and sum per-device traffic of every collective:
+  all-gather          -> result bytes (what each device receives)
+  reduce-scatter      -> operand bytes (what each device cycles through)
+  all-reduce          -> 2 x operand bytes (ring = RS + AG)
+  all-to-all          -> operand bytes
+  collective-permute  -> operand bytes
+
+Hardware constants (assignment): 197 TFLOP/s bf16/chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.common.hardware import TPU_V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 0.5, "u4": 0.5,
+}
+
+_TYPE_RE = re.compile(r"(pred|s4|u4|s8|u8|s16|u16|s32|u32|s64|u64|f16|bf16|"
+                      r"f32|f64|c64|c128)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+"
+                     r"([a-z][\w\-]*)\(", re.M)
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _type_bytes(type_str: str) -> float:
+    total = 0.0
+    for m in _TYPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_WHILE_RE = re.compile(r"condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s(?:32|64)\[\]\s+constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, list]:
+    """computation name -> list of instruction lines.
+
+    Computation headers sit at column 0 and end with '{' (parameter types may
+    contain nested parens, so only the leading name is parsed)."""
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        stripped = line.rstrip()
+        if (not line.startswith(" ") and stripped.endswith("{")
+                and not stripped.startswith("HloModule")):
+            m = _COMP_START_RE.match(stripped)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if stripped.startswith("ENTRY"):
+                    comps["__entry__"] = comps[cur]
+                continue
+        if line.startswith("}"):
+            cur = None
+        elif cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _trip_count(cond_lines: list) -> int:
+    """Scan conditions compare the induction var against a constant."""
+    consts = []
+    for line in cond_lines:
+        consts += [int(c) for c in _CONST_RE.findall(line)]
+    return max(consts) if consts else 1
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, float]:
+    """-> {op_kind: per-device bytes moved} summed over the program.
+
+    XLA's HLO represents lax.scan as a `while` whose body appears ONCE in the
+    module — a naive line scan undercounts in-loop collectives (FSDP weight
+    all-gathers, TP all-reduces) by the layer count. We walk the computation
+    tree from ENTRY, multiply each computation's collectives by the product of
+    enclosing while trip counts (nested scans compose: layers x attn chunks).
+    """
+    comps = _split_computations(hlo_text)
+    # name -> result bytes for operand lookup (global: names are unique)
+    sizes: Dict[str, float] = {}
+    for m in _DEF_RE.finditer(hlo_text):
+        sizes[m.group(1)] = _type_bytes(m.group(2))
+
+    out = {k: 0.0 for k in _COLLECTIVES}
+    ops_count = {k: 0 for k in _COLLECTIVES}
+    bf16eq = [0.0]
+
+    def visit(comp_name: str, mult: float, seen):
+        if comp_name not in comps or comp_name in seen:
+            return
+        seen = seen | {comp_name}
+        for line in comps[comp_name]:
+            m = _DEF_RE.match(line)
+            if m:
+                name, result_type, op = m.group(1), m.group(2), m.group(3)
+                kind = next((k for k in _COLLECTIVES if op.startswith(k)), None)
+                if kind and not op.endswith("-done"):
+                    result_bytes = _type_bytes(result_type)
+                    paren = line[line.index("(") + 1:]
+                    operand_names = re.findall(r"%?([\w.\-]+)",
+                                               paren.split(")")[0])
+                    operand_bytes = sum(sizes.get(n, 0.0) for n in operand_names)
+                    if kind == "all-gather":
+                        bytes_moved = result_bytes
+                    elif kind == "all-reduce":
+                        bytes_moved = 2.0 * (operand_bytes or result_bytes)
+                    else:
+                        bytes_moved = operand_bytes or result_bytes
+                    out[kind] += bytes_moved * mult
+                    ops_count[kind] += 1
+                    # XLA:CPU has no native bf16: activation tensors (and the
+                    # collectives on them) are upcast to f32 — on TPU they are
+                    # bf16. Count f32 float collectives at half for the
+                    # TPU-native estimate (genuinely-f32 payloads are rare in
+                    # this codebase: dots/activations/grads are all bf16).
+                    scale = 0.5 if "f32[" in result_type else 1.0
+                    bf16eq[0] += bytes_moved * mult * scale
+            # recurse into whiles with trip multipliers
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                visit(body, mult * trips, seen)
+            else:
+                # conditionals / calls execute their computations once
+                for ref in re.findall(
+                        r"(?:true_computation|false_computation|branch_computations|"
+                        r"to_apply|called_computations)=\{?%?([\w.\-]+)", line):
+                    visit(ref, mult, seen)
+
+    entry = "__entry__" if "__entry__" in comps else next(iter(comps), None)
+    if entry:
+        visit(entry, 1.0, frozenset())
+    out["_counts"] = ops_count
+    out["_bf16eq_total"] = bf16eq[0]
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    collective_breakdown: Dict[str, float]
+    model_flops: float               # 6*N*D (dense) / 6*N_active*D global
+    memory_per_device: Optional[float] = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / TPU_V5E.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / TPU_V5E.hbm_bandwidth
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / TPU_V5E.ici_bandwidth
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO flops x chips): remat/redundancy waste."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total > 0 else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the chips' peak the step achieves on useful model
+        FLOPs: model_flops / (chips*peak) / step_time."""
+        ideal = self.model_flops / (self.chips * TPU_V5E.peak_flops)
+        return ideal / self.step_time_s if self.step_time_s > 0 else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes": self.collective_bytes,
+            "collective_breakdown": self.collective_breakdown,
+            "model_flops": self.model_flops,
+            "memory_per_device": self.memory_per_device,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_time_s": self.step_time_s,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6*N*D with N = active params; decode D = global_batch tokens (one new
+    token per row), prefill/train D = batch x seq."""
+    n = cfg.active_param_count()
+    if shape.kind == "decode":
+        tokens = shape.global_batch
+        return 2.0 * n * tokens  # decode fwd only
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens      # prefill fwd only

@@ -1,0 +1,33 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state — dryrun.py must set XLA_FLAGS before the first jax
+call, and test processes must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = one v5e pod (256 chips); 2x16x16 = two pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} (dryrun.py "
+            f"does this automatically)")
+    import numpy as np
+    return jax.sharding.Mesh(np.array(devices).reshape(shape), axes)
+
+
+def make_host_mesh():
+    """Single-device mesh with the production axis names (tests, examples)."""
+    import numpy as np
+    return jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                             ("data", "model"))

@@ -1,0 +1,89 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run lowers
+against these; nothing is ever allocated.
+
+Batch inputs are sharded batch->(pod,data); the KV cache follows the
+cache_batch/cache_seq rules (sequence sharded over `model`, and over
+(data, model) for batch=1 long-context). Stub-frontend inputs (whisper frames,
+VLM patches) ride along as extra ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RuntimeConfig, ShapeConfig
+from repro.models import get_model
+from repro.quant import quant_spec
+from repro.sharding.param import ParamDef, abstract_params
+from repro.sharding.rules import logical_sharding
+
+
+def _sds(shape, dtype, logical, mesh):
+    sharding = logical_sharding(logical, shape, mesh) if mesh is not None else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
+                *, kind: Optional[str] = None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for one step. kind overrides shape.kind."""
+    kind = kind or shape.kind
+    B, S = shape.global_batch, shape.seq_len
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if kind in ("train", "prefill"):
+        out["tokens"] = _sds((B, S), jnp.int32, ("act_batch", "act_seq"), mesh)
+        if kind == "train":
+            out["labels"] = _sds((B, S), jnp.int32, ("act_batch", "act_seq"), mesh)
+            out["loss_mask"] = _sds((B, S), jnp.float32,
+                                    ("act_batch", "act_seq"), mesh)
+        if cfg.family == "whisper":
+            out["frames"] = _sds((B, cfg.num_audio_frames, cfg.d_model),
+                                 jnp.bfloat16, ("act_batch", None, None), mesh)
+        if cfg.family == "vlm":
+            out["patch_embeds"] = _sds((B, cfg.num_vision_patches, cfg.d_model),
+                                       jnp.bfloat16, ("act_batch", None, None),
+                                       mesh)
+            out["positions"] = _sds((3, B, S), jnp.int32,
+                                    (None, "act_batch", "act_seq"), mesh)
+    elif kind == "decode":
+        out["tokens"] = _sds((B, 1), jnp.int32, ("act_batch", None), mesh)
+        out["lengths"] = _sds((B,), jnp.int32, ("act_batch",), mesh)
+        if cfg.use_mrope:
+            out["positions"] = _sds((3, B, 1), jnp.int32,
+                                    (None, "act_batch", None), mesh)
+    else:
+        raise ValueError(kind)
+    return out
+
+
+def param_specs(cfg: ModelConfig, mesh=None, *, quant: str = "bf16",
+                serving: bool = False):
+    from repro.sharding.rules import SERVING_RULES
+    model = get_model(cfg)
+    spec = model.param_spec()
+    if quant not in ("bf16", "none"):
+        spec = quant_spec(spec, quant)
+    return abstract_params(spec, mesh, rules=SERVING_RULES if serving else None)
+
+
+def cache_specs(cfg: ModelConfig, rcfg: RuntimeConfig, shape: ShapeConfig,
+                mesh=None):
+    model = get_model(cfg)
+    spec = model.cache_spec(rcfg, shape.global_batch, shape.seq_len)
+    return abstract_params(spec, mesh)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, rcfg: RuntimeConfig,
+                mesh=None, *, quant: str = "bf16"):
+    """Everything a step function consumes, as ShapeDtypeStructs.
+
+    train   -> (train_state? handled by dryrun), batch
+    prefill -> params, cache, batch
+    decode  -> params, cache, tokens, lengths
+    """
+    out = {"batch": batch_specs(cfg, shape, mesh)}
+    out["params"] = param_specs(cfg, mesh, quant=quant)
+    if shape.kind in ("prefill", "decode"):
+        out["cache"] = cache_specs(cfg, rcfg, shape, mesh)
+    return out

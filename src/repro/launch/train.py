@@ -1,0 +1,82 @@
+"""Training launcher: config -> data -> train loop with checkpoint/restart.
+
+CPU-runnable on reduced configs; the full configs are exercised via dryrun.py.
+Fault tolerance: auto-resumes from the latest valid checkpoint; the data
+pipeline is a pure function of (seed, step), so restarts are bit-identical
+(tests/test_checkpoint.py::test_training_resume_bitwise).
+
+  PYTHONPATH=src python -m repro.launch.train --arch carboncall-qwen2-7b \
+      --reduced --steps 100 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.checkpoint import Checkpointer, latest_step
+from repro.common.registry import get_arch
+from repro.config import RuntimeConfig, TrainConfig
+from repro.configs.reduced import reduce_config
+from repro.data.pipeline import TokenPipeline
+from repro.models import get_model
+from repro.sharding.param import init_params, count_params
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="carboncall-qwen2-7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-compression", default="none")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    rcfg = RuntimeConfig(grad_compression=args.grad_compression)
+    tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                       warmup_steps=max(args.steps // 20, 5),
+                       checkpoint_dir=args.ckpt_dir,
+                       checkpoint_every=args.ckpt_every)
+    model = get_model(cfg)
+    spec = model.param_spec()
+    print(f"[train] {cfg.name}: {count_params(spec):,} params")
+
+    step_fn = jax.jit(make_train_step(cfg, rcfg, tcfg), donate_argnums=(0,))
+    pipe = TokenPipeline(seed=tcfg.seed, global_batch=args.batch,
+                         seq_len=args.seq, vocab=cfg.vocab_size)
+    ck = Checkpointer(tcfg.checkpoint_dir, keep=tcfg.keep_checkpoints)
+
+    params = init_params(spec, jax.random.PRNGKey(tcfg.seed))
+    state = init_train_state(params, rcfg)
+    start = 0
+    if latest_step(tcfg.checkpoint_dir) is not None:
+        start, state = ck.restore_tree(state)
+        print(f"[train] resumed from step {start}")
+
+    t0 = time.time()
+    for i in range(start, args.steps):
+        state, metrics = step_fn(state, pipe.batch_at(i))
+        if (i + 1) % 10 == 0 or i == start:
+            dt = (time.time() - t0) / max(i - start + 1, 1)
+            print(f"[train] step {i+1}/{args.steps} "
+                  f"loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"lr={float(metrics['lr']):.2e} {dt:.2f}s/step")
+        if (i + 1) % tcfg.checkpoint_every == 0:
+            ck.save(i + 1, state)
+    ck.save(args.steps, state, block=True)
+    ck.wait()
+    print(f"[train] done; checkpoints in {tcfg.checkpoint_dir}")
+
+
+if __name__ == "__main__":
+    main()

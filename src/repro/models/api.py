@@ -1,0 +1,65 @@
+"""Uniform Model API over the family modules.
+
+Every family exposes: param_spec, forward, prefill, decode_step, cache_spec.
+`get_model(cfg)` binds the right module; launch/serving/training code only
+talks to this wrapper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RuntimeConfig
+
+
+def _module_for(cfg: ModelConfig):
+    from repro.models import transformer, mamba2, hybrid, whisper
+    return {
+        "transformer": transformer,
+        "moe": transformer,
+        "vlm": transformer,
+        "mamba2": mamba2,
+        "hybrid": hybrid,
+        "whisper": whisper,
+    }[cfg.family]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    @property
+    def mod(self):
+        return _module_for(self.cfg)
+
+    def param_spec(self):
+        return self.mod.param_spec(self.cfg)
+
+    def forward(self, params, batch, rcfg: RuntimeConfig, *, train: bool = False):
+        """-> (hidden (B,S,d), aux)."""
+        h, _, aux = self.mod.forward(params, batch, self.cfg, rcfg, train=train)
+        return h, aux
+
+    def logits(self, params, h, rcfg: RuntimeConfig):
+        from repro.models.transformer import unembed
+        return unembed(params, h, self.cfg, rcfg)
+
+    def cache_spec(self, rcfg: RuntimeConfig, batch: int, max_seq: int):
+        return self.mod.cache_spec(self.cfg, rcfg, batch, max_seq)
+
+    def prefill(self, params, cache, batch, rcfg: RuntimeConfig):
+        """-> (last-position logits (B,V), filled cache, lengths (B,))."""
+        return self.mod.prefill(params, cache, batch, self.cfg, rcfg)
+
+    def decode_step(self, params, cache, tokens, lengths, rcfg: RuntimeConfig,
+                    positions=None):
+        """-> (logits (B,V), cache')."""
+        return self.mod.decode_step(params, cache, tokens, lengths, self.cfg,
+                                    rcfg, positions=positions)
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

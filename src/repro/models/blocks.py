@@ -1,0 +1,184 @@
+"""Transformer building blocks shared across families.
+
+All parameters are ParamDef-spec'd (see sharding/param.py). Attention weights
+are stored with flattened head dims — (d, N*H) — so tensor-parallel sharding
+of the feature dim survives architectures whose head count does not divide the
+`model` axis (e.g. gemma2's 8 heads on a 16-way axis).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.quant import dense
+from repro.sharding.param import ParamDef
+from repro.sharding.rules import constrain
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+def attn_spec(cfg: ModelConfig, lead=(), lead_log=()):
+    d, N, K = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    H = cfg.resolved_head_dim
+    s = {
+        "wq": ParamDef((*lead, d, N * H), (*lead_log, "embed", "heads")),
+        "wk": ParamDef((*lead, d, K * H), (*lead_log, "embed", "kv_heads")),
+        "wv": ParamDef((*lead, d, K * H), (*lead_log, "embed", "kv_heads")),
+        "wo": ParamDef((*lead, N * H, d), (*lead_log, "heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamDef((*lead, N * H), (*lead_log, "heads"), init="zeros")
+        s["bk"] = ParamDef((*lead, K * H), (*lead_log, "kv_heads"), init="zeros")
+        s["bv"] = ParamDef((*lead, K * H), (*lead_log, "kv_heads"), init="zeros")
+    return s
+
+
+def mlp_spec(cfg: ModelConfig, lead=(), lead_log=(), d_ff: Optional[int] = None,
+             gated: bool = True, fused: bool = False):
+    """`fused` gate|up was tried as §Perf iter2 and REFUTED: it removed ~9%
+    of per-layer all-gather volume (XLA had not fully CSE'd the duplicate
+    gathers) but splitting the (B,S,2f) output at the f boundary is not
+    shard-aligned on the 16-way `model` axis, and GSPMD paid 600 GB/step in
+    collective-permutes/all-to-alls to realign — net regression. Kept as an
+    option for TP widths that divide f evenly into both halves."""
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if gated:
+        if fused:
+            return {
+                "wgu": ParamDef((*lead, d, 2 * f), (*lead_log, "embed", "mlp")),
+                "wo": ParamDef((*lead, f, d), (*lead_log, "mlp", "embed")),
+            }
+        return {
+            "wg": ParamDef((*lead, d, f), (*lead_log, "embed", "mlp")),
+            "wu": ParamDef((*lead, d, f), (*lead_log, "embed", "mlp")),
+            "wo": ParamDef((*lead, f, d), (*lead_log, "mlp", "embed")),
+        }
+    return {
+        "wi": ParamDef((*lead, d, f), (*lead_log, "embed", "mlp")),
+        "wo": ParamDef((*lead, f, d), (*lead_log, "mlp", "embed")),
+    }
+
+
+def norm_spec(cfg: ModelConfig, lead=(), lead_log=()):
+    return ParamDef((*lead, cfg.d_model), (*lead_log, None), init="zeros")
+
+
+# ---------------------------------------------------------------------------
+# Applies
+# ---------------------------------------------------------------------------
+
+
+def act(x, kind: str):
+    return jax.nn.silu(x) if kind == "silu" else jax.nn.gelu(x, approximate=True)
+
+
+def mlp_apply(p, x, cfg: ModelConfig, rcfg):
+    if "wgu" in p:
+        gu = dense(x, p["wgu"], rcfg)
+        g, u = jnp.split(gu, 2, axis=-1)
+        h = act(g, cfg.act_fn) * u
+    elif "wg" in p:
+        h = act(dense(x, p["wg"], rcfg), cfg.act_fn) * dense(x, p["wu"], rcfg)
+    else:
+        h = act(dense(x, p["wi"], rcfg), cfg.act_fn)
+    # rank-generic: the MoE shared expert calls this with (T, f) tokens
+    h = constrain(h, ("act_batch",) + (None,) * (h.ndim - 2) + ("act_mlp",))
+    return dense(h, p["wo"], rcfg)
+
+
+def qkv_proj(p, x, cfg: ModelConfig, rcfg, cos, sin):
+    """Project + reshape to heads + RoPE. Returns q (B,S,N,H), k/v (B,S,K,H)."""
+    B, S, _ = x.shape
+    N, K, H = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = dense(x, p["wq"], rcfg)
+    k = dense(x, p["wk"], rcfg)
+    v = dense(x, p["wv"], rcfg)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(B, S, N, H)
+    k = k.reshape(B, S, K, H)
+    v = v.reshape(B, S, K, H)
+    if cos is not None:
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def attn_apply(p, x, cfg: ModelConfig, rcfg, *, cos, sin, window=0,
+               causal=True, kv_override=None):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
+    B, S, _ = x.shape
+    q, k, v = qkv_proj(p, x, cfg, rcfg, cos, sin)
+    if kv_override is not None:                 # cross-attention
+        k, v = kv_override
+    q = constrain(q, ("act_batch", None, "act_heads", None))
+    o = L.attention(q, k, v, rcfg, causal=causal, window=window,
+                    cap=cfg.attn_logit_softcap)
+    o = o.reshape(B, S, -1)
+    return dense(o, p["wo"], rcfg), (k, v)
+
+
+def _blend_row(cache, new_row, lengths):
+    """Write one (B, ...) row at per-row position `lengths` via masked blend —
+    per-row dynamic scatter into a sequence-sharded cache makes GSPMD gather
+    the whole cache; the blend is elementwise, so each shard updates only its
+    own slice."""
+    Smax = cache.shape[1]
+    write = jnp.arange(Smax)[None, :] == lengths[:, None]    # (B, Smax)
+    write = write.reshape(write.shape + (1,) * (cache.ndim - 2))
+    return jnp.where(write, new_row[:, None].astype(cache.dtype), cache)
+
+
+def attn_decode_apply(p, x, cfg: ModelConfig, rcfg, *, cos, sin,
+                      cache_i, lengths, window=0):
+    """One-token decode against a per-layer cache dict {k, v[, k_scale,
+    v_scale]}. Writes this step at `lengths`, returns (out, new_cache_i).
+    int8 caches quantize only the new row; reads dequantize lazily (XLA fuses
+    the dequant into the attention matmuls, HBM traffic stays int8)."""
+    B = x.shape[0]
+    q, k, v = qkv_proj(p, x, cfg, rcfg, cos, sin)
+    k1, v1 = k[:, 0], v[:, 0]                                # (B, K, H)
+    new_cache = dict(cache_i)
+    if "k_scale" in cache_i:
+        ks = jnp.maximum(jnp.max(jnp.abs(k1), axis=-1), 1e-8) / 127.0
+        vs = jnp.maximum(jnp.max(jnp.abs(v1), axis=-1), 1e-8) / 127.0
+        new_cache["k"] = _blend_row(cache_i["k"],
+                                    jnp.round(k1 / ks[..., None]).astype(jnp.int8),
+                                    lengths)
+        new_cache["v"] = _blend_row(cache_i["v"],
+                                    jnp.round(v1 / vs[..., None]).astype(jnp.int8),
+                                    lengths)
+        new_cache["k_scale"] = _blend_row(cache_i["k_scale"], ks, lengths)
+        new_cache["v_scale"] = _blend_row(cache_i["v_scale"], vs, lengths)
+        k_read = (new_cache["k"].astype(jnp.float32)
+                  * new_cache["k_scale"][..., None]).astype(jnp.bfloat16)
+        v_read = (new_cache["v"].astype(jnp.float32)
+                  * new_cache["v_scale"][..., None]).astype(jnp.bfloat16)
+    else:
+        new_cache["k"] = _blend_row(cache_i["k"], k1, lengths)
+        new_cache["v"] = _blend_row(cache_i["v"], v1, lengths)
+        k_read, v_read = new_cache["k"], new_cache["v"]
+    o = L.decode_attention(q, k_read, v_read, lengths + 1, window=window,
+                           cap=cfg.attn_logit_softcap)
+    o = o.reshape(B, 1, -1)
+    return dense(o, p["wo"], rcfg), new_cache
+
+
+def block_norms_spec(cfg: ModelConfig, lead=(), lead_log=()):
+    s = {
+        "pre_attn": norm_spec(cfg, lead, lead_log),
+        "pre_mlp": norm_spec(cfg, lead, lead_log),
+    }
+    if cfg.post_block_norm:
+        s["post_attn"] = norm_spec(cfg, lead, lead_log)
+        s["post_mlp"] = norm_spec(cfg, lead, lead_log)
+    return s

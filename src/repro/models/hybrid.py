@@ -1,0 +1,222 @@
+"""Zamba2-style hybrid: Mamba2 backbone with *shared* attention blocks.
+
+Layout for `num_layers` total block applications with `attn_every = k`:
+  * groups of (k-1) mamba blocks followed by one shared attention+MLP block,
+  * `num_shared_attn_sets` (=2) weight sets alternate across groups (Zamba2's
+    parameter-sharing trick: 13 attention applications, 2 unique weight sets),
+  * leftover applications at the end are plain mamba blocks.
+
+Simplification vs the released Zamba2 (documented in DESIGN.md): the shared
+block attends over the current hidden state rather than concat(hidden,
+original embedding); LoRA adapters on the shared block are omitted.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RuntimeConfig
+from repro.models import layers as L
+from repro.models import blocks as B_
+from repro.models.mamba2 import mamba_spec, mamba_block, mamba_cache_spec
+from repro.sharding.param import ParamDef
+from repro.sharding.rules import constrain
+
+
+def _layout(cfg: ModelConfig):
+    k = cfg.attn_every
+    groups = cfg.num_layers // k           # full (k-1 mamba + attn) groups
+    per_group_mamba = k - 1
+    trailing = cfg.num_layers - groups * k  # extra mamba blocks at the end
+    return groups, per_group_mamba, trailing
+
+
+def param_spec(cfg: ModelConfig):
+    d, V = cfg.d_model, cfg.vocab_size
+    groups, pgm, trailing = _layout(cfg)
+    S = cfg.num_shared_attn_sets
+    spec = {
+        "embed": ParamDef((V, d), ("vocab", "embed"), init="embed"),
+        "mamba": mamba_spec(cfg, (groups * pgm,), ("layers",)),
+        "shared_attn": {
+            "attn": B_.attn_spec(cfg, (S,), ("layers",)),
+            "mlp": B_.mlp_spec(cfg, (S,), ("layers",)),
+            "norms": B_.block_norms_spec(cfg, (S,), ("layers",)),
+        },
+        "final_norm": ParamDef((d,), (None,), init="zeros"),
+    }
+    if trailing:
+        spec["mamba_tail"] = mamba_spec(cfg, (trailing,), ("layers",))
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = ParamDef((d, V), ("embed", "vocab"))
+    return spec
+
+
+def cache_spec(cfg: ModelConfig, rcfg: RuntimeConfig, batch: int, max_seq: int):
+    from repro.models.transformer import cache_spec as t_cache_spec
+    groups, pgm, trailing = _layout(cfg)
+    attn_cfg_cache = t_cache_spec(
+        dataclass_replace_layers(cfg, groups), rcfg, batch, max_seq)
+    spec = {
+        "mamba": mamba_cache_spec(cfg, groups * pgm, batch),
+        "attn": attn_cfg_cache,
+    }
+    if trailing:
+        spec["mamba_tail"] = mamba_cache_spec(cfg, trailing, batch)
+    return spec
+
+
+def dataclass_replace_layers(cfg: ModelConfig, n: int) -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(cfg, num_layers=n)
+
+
+def _attn_block(p_i, x, cfg, rcfg, cos, sin):
+    n = p_i["norms"]
+    h = L.rms_norm(x, n["pre_attn"], cfg.norm_eps)
+    a, kv = B_.attn_apply(p_i["attn"], h, cfg, rcfg, cos=cos, sin=sin, window=0)
+    x = x + a
+    h = L.rms_norm(x, n["pre_mlp"], cfg.norm_eps)
+    x = x + B_.mlp_apply(p_i["mlp"], h, cfg, rcfg)
+    return constrain(x, ("act_batch", "act_seq", "act_embed")), kv
+
+
+def _attn_block_decode(p_i, x, c_i, lengths, cfg, rcfg, cos, sin):
+    n = p_i["norms"]
+    h = L.rms_norm(x, n["pre_attn"], cfg.norm_eps)
+    a, c_i = B_.attn_decode_apply(
+        p_i["attn"], h, cfg, rcfg, cos=cos, sin=sin,
+        cache_i=c_i, lengths=lengths, window=0)
+    x = x + a
+    h = L.rms_norm(x, n["pre_mlp"], cfg.norm_eps)
+    x = x + B_.mlp_apply(p_i["mlp"], h, cfg, rcfg)
+    return x, c_i
+
+
+def forward(params, batch, cfg: ModelConfig, rcfg: RuntimeConfig, *,
+            collect_kv: bool = False, train: bool = False):
+    from repro.models.transformer import embed_tokens, quantize_kv_for_cache
+    x = embed_tokens(params, batch, cfg)
+    Bb, S, _ = x.shape
+    cos, sin = L.rope_cos_sin(jnp.arange(S)[None, :], cfg.resolved_head_dim,
+                              cfg.rope_theta)
+    groups, pgm, trailing = _layout(cfg)
+    nsets = cfg.num_shared_attn_sets
+    mamba_p = jax.tree.map(
+        lambda a: a.reshape(groups, pgm, *a.shape[1:]), params["mamba"])
+
+    def group_body(carry, xs):
+        x, = carry
+        p_g, g_idx = xs
+
+        def mamba_sub(x, p_i):
+            x, st = mamba_block(p_i, x, cfg, rcfg)
+            return x, (st if collect_kv else None)
+
+        x, m_states = jax.lax.scan(mamba_sub, x, p_g)
+        set_idx = jnp.mod(g_idx, nsets)
+        p_attn = jax.tree.map(lambda a: a[set_idx], params["shared_attn"])
+        x, kv = _attn_block(p_attn, x, cfg, rcfg, cos, sin)
+        ys = (m_states, kv if collect_kv else None)
+        return (x,), ys
+
+    body = group_body
+    if train and rcfg.remat_policy != "none":
+        policy = (jax.checkpoint_policies.checkpoint_dots
+                  if rcfg.remat_policy == "save_dots" else None)
+        body = jax.checkpoint(group_body, policy=policy, prevent_cse=False)
+
+    (x,), (m_states, kvs) = jax.lax.scan(
+        body, (x,), (mamba_p, jnp.arange(groups)))
+
+    tail_states = None
+    if trailing:
+        def tail_sub(x, p_i):
+            x, st = mamba_block(p_i, x, cfg, rcfg)
+            return x, (st if collect_kv else None)
+        x, tail_states = jax.lax.scan(tail_sub, x, params["mamba_tail"])
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    states = None
+    if collect_kv:
+        m_states = jax.tree.map(
+            lambda a: a.reshape(a.shape[0] * a.shape[1], *a.shape[2:]), m_states)
+        states = {"mamba": m_states, "attn_kv": kvs, "mamba_tail": tail_states}
+    return x, states, jnp.zeros((), jnp.float32)
+
+
+def prefill(params, cache, batch, cfg: ModelConfig, rcfg: RuntimeConfig):
+    from repro.models.transformer import unembed, quantize_kv_for_cache
+    h, states, _ = forward(params, batch, cfg, rcfg, collect_kv=True)
+    logits = unembed(params, h[:, -1:, :], cfg, rcfg)[:, 0]
+    Bb, S = batch["tokens"].shape
+    Smax = cache["attn"]["k"].shape[2]
+    k, v = states["attn_kv"]
+    has_scale = "k_scale" in cache["attn"]
+    entry = quantize_kv_for_cache(has_scale, k, v)
+    attn_cache = {}
+    for key, val in entry.items():
+        pad = [(0, 0)] * val.ndim
+        pad[2] = (0, Smax - S)
+        attn_cache[key] = jnp.pad(val, pad).astype(cache["attn"][key].dtype)
+    new_cache = {
+        "mamba": jax.tree.map(lambda a, c: a.astype(c.dtype),
+                              states["mamba"], cache["mamba"]),
+        "attn": attn_cache,
+    }
+    if "mamba_tail" in cache:
+        new_cache["mamba_tail"] = jax.tree.map(
+            lambda a, c: a.astype(c.dtype), states["mamba_tail"], cache["mamba_tail"])
+    lengths = jnp.full((Bb,), S, jnp.int32)
+    return logits, new_cache, lengths
+
+
+def decode_step(params, cache, tokens, lengths, cfg: ModelConfig,
+                rcfg: RuntimeConfig, positions=None):
+    from repro.models.transformer import embed_tokens, unembed
+    x = embed_tokens(params, {"tokens": tokens}, cfg)
+    Bb = x.shape[0]
+    cos, sin = L.rope_cos_sin(lengths[:, None], cfg.resolved_head_dim,
+                              cfg.rope_theta)
+    groups, pgm, trailing = _layout(cfg)
+    nsets = cfg.num_shared_attn_sets
+    mamba_p = jax.tree.map(
+        lambda a: a.reshape(groups, pgm, *a.shape[1:]), params["mamba"])
+    mamba_c = jax.tree.map(
+        lambda a: a.reshape(groups, pgm, *a.shape[1:]), cache["mamba"])
+
+    def group_body(x, xs):
+        p_g, c_g, ac_i, g_idx = xs
+
+        def mamba_sub(x, pc):
+            p_i, c_i = pc
+            x, c_new = mamba_block(p_i, x, cfg, rcfg, cache=c_i)
+            return x, c_new
+
+        x, new_mc = jax.lax.scan(mamba_sub, x, (p_g, c_g))
+        set_idx = jnp.mod(g_idx, nsets)
+        p_attn = jax.tree.map(lambda a: a[set_idx], params["shared_attn"])
+        x, new_ac = _attn_block_decode(p_attn, x, ac_i, lengths, cfg, rcfg,
+                                       cos, sin)
+        return x, (new_mc, new_ac)
+
+    x, (new_mamba, new_attn) = jax.lax.scan(
+        group_body, x, (mamba_p, mamba_c, cache["attn"], jnp.arange(groups)))
+    new_cache = {
+        "mamba": jax.tree.map(
+            lambda a: a.reshape(a.shape[0] * a.shape[1], *a.shape[2:]), new_mamba),
+        "attn": new_attn,
+    }
+    if trailing:
+        def tail_sub(x, pc):
+            p_i, c_i = pc
+            x, c_new = mamba_block(p_i, x, cfg, rcfg, cache=c_i)
+            return x, c_new
+        x, new_tail = jax.lax.scan(tail_sub, x,
+                                   (params["mamba_tail"], cache["mamba_tail"]))
+        new_cache["mamba_tail"] = new_tail
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, x, cfg, rcfg)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,309 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunked-scan formulation.
+
+The O(L) chunked algorithm from the Mamba2 paper: the sequence is split into
+chunks of Q tokens; within a chunk the recurrence is computed as dense masked
+matmuls (MXU-friendly — this is the part the Pallas `ssd` kernel tiles), and
+states propagate across chunks through a sequential lax.scan carry. Decode is
+the O(1) recurrent step on a (B, H, P, N) state.
+
+The reference here is pure jnp and doubles as the oracle for kernels/ssd.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RuntimeConfig
+from repro.models import layers as L
+from repro.quant import dense
+from repro.sharding.param import ParamDef
+from repro.sharding.rules import constrain
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, initial_state=None):
+    """xh: (B,S,H,P); dt: (B,S,H) (post-softplus); A: (H,) negative;
+    Bm/Cm: (B,S,G,N). Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bb, S, H, Pd = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    if S % chunk != 0:
+        chunk = S
+    r = S // chunk
+
+    f32 = jnp.float32
+    # keep the big scan xs in the input dtype (bf16 from the model) and
+    # convert per chunk inside the body — halves the O(B*S*H*N) buffers;
+    # accumulation stays f32
+    Bh = jnp.repeat(Bm, rep, axis=2)                         # (B,S,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+    Bh = constrain(Bh, ("act_batch", None, "act_heads", None))
+    Ch = constrain(Ch, ("act_batch", None, "act_heads", None))
+    xf = constrain(xh, ("act_batch", None, "act_heads", None))
+    dtf = dt.astype(f32)
+    dA = dtf * A.astype(f32)                                 # (B,S,H) negative
+
+    def rsh(t):
+        return t.reshape(Bb, r, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = (rsh(xf), rsh(dtf), rsh(Bh), rsh(Ch), rsh(dA))
+    state0 = (initial_state.astype(f32) if initial_state is not None
+              else jnp.zeros((Bb, H, Pd, N), f32))
+
+    def body(state, inp):
+        x_c, dt_c, B_c, C_c, dA_c = inp                      # (B,Q,...)
+        x_c = x_c.astype(f32)
+        B_c = B_c.astype(f32)
+        C_c = C_c.astype(f32)
+        cs = jnp.cumsum(dA_c, axis=1)                        # (B,Q,H) inclusive
+        # intra-chunk: decay matrix L[q,k] = exp(cs_q - cs_k) for q >= k
+        diff = cs[:, :, None, :] - cs[:, None, :, :]         # (B,Q,K,H)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        Lmat = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bqhn,bkhn->bqkh", C_c, B_c)
+        xdt = x_c * dt_c[..., None]                          # (B,Q,H,P)
+        y_diag = jnp.einsum("bqkh,bkhp->bqhp", scores * Lmat, xdt)
+        # inter-chunk: read previous state
+        y_off = jnp.einsum("bqhn,bhpn->bqhp", C_c, state) * jnp.exp(cs)[..., None]
+        # state update
+        total = cs[:, -1, :]                                 # (B,H)
+        w = jnp.exp(total[:, None, :] - cs)                  # (B,Q,H)
+        state_new = state * jnp.exp(total)[:, :, None, None] + \
+            jnp.einsum("bkhn,bkhp,bkh->bhpn", B_c, xdt, w)
+        return state_new, y_diag + y_off
+
+    # nested remat: the chunk body's saved intermediates (decay matrices,
+    # expanded B/C products) are O(B*Q*Q*H) f32 per chunk and would coexist
+    # for every chunk during the backward; recomputing them keeps only the
+    # (B,H,P,N) carry per chunk.
+    final_state, ys = jax.lax.scan(jax.checkpoint(body, prevent_cse=False),
+                                   state0, xs)
+    y = ys.swapaxes(0, 1).reshape(Bb, S, H, Pd)
+    return y.astype(xh.dtype), final_state
+
+
+def ssd_decode(state, x, dt, A, Bv, Cv):
+    """One step. state: (B,H,P,N) f32; x: (B,H,P); dt: (B,H); Bv/Cv: (B,G,N)."""
+    H = x.shape[1]
+    rep = H // Bv.shape[1]
+    Bh = jnp.repeat(Bv, rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cv, rep, axis=1).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A.astype(jnp.float32))                # (B,H)
+    state = state * dA[..., None, None] + jnp.einsum(
+        "bhn,bhp,bh->bhpn", Bh, x.astype(jnp.float32), dtf)
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    return state, y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def mamba_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = cfg.ssm_heads
+    conv_dim = d_in + 2 * s.ngroups * s.state_dim
+    return d_in, nh, conv_dim
+
+
+def mamba_spec(cfg: ModelConfig, lead=(), lead_log=()):
+    """Projections are SPLIT (z/x/B/C/dt + three depthwise convs) rather than
+    the reference's fused in_proj/conv: identical math, but the z/x paths
+    shard cleanly over `model` while the small B/C/dt paths stay replicated —
+    a fused layout puts shard boundaries mid-concat and GSPMD pays
+    collective-permutes per layer to realign (measured in the dry-run)."""
+    d = cfg.d_model
+    s = cfg.ssm
+    d_in, nh, conv_dim = mamba_dims(cfg)
+    gn = s.ngroups * s.state_dim
+    w = s.conv_width
+    return {
+        "norm": ParamDef((*lead, d), (*lead_log, None), init="zeros"),
+        "wz": ParamDef((*lead, d, d_in), (*lead_log, "embed", "mlp")),
+        "wx": ParamDef((*lead, d, d_in), (*lead_log, "embed", "mlp")),
+        "wb": ParamDef((*lead, d, gn), (*lead_log, "embed", None)),
+        "wc": ParamDef((*lead, d, gn), (*lead_log, "embed", None)),
+        "wdt": ParamDef((*lead, d, nh), (*lead_log, "embed", None)),
+        "conv_x_w": ParamDef((*lead, d_in, w), (*lead_log, "mlp", None),
+                             init="normal", scale=0.5),
+        "conv_x_b": ParamDef((*lead, d_in), (*lead_log, "mlp"), init="zeros"),
+        "conv_b_w": ParamDef((*lead, gn, w), (*lead_log, None, None),
+                             init="normal", scale=0.5),
+        "conv_b_b": ParamDef((*lead, gn), (*lead_log, None), init="zeros"),
+        "conv_c_w": ParamDef((*lead, gn, w), (*lead_log, None, None),
+                             init="normal", scale=0.5),
+        "conv_c_b": ParamDef((*lead, gn), (*lead_log, None), init="zeros"),
+        "a_log": ParamDef((*lead, nh), (*lead_log, None), init="ones"),
+        "dt_bias": ParamDef((*lead, nh), (*lead_log, None), init="zeros"),
+        "d_skip": ParamDef((*lead, nh), (*lead_log, None), init="ones"),
+        "gate_norm": ParamDef((*lead, d_in), (*lead_log, None), init="zeros"),
+        "out_proj": ParamDef((*lead, d_in, d), (*lead_log, "mlp", "embed")),
+    }
+
+
+def mamba_cache_spec(cfg: ModelConfig, n_layers: int, batch: int):
+    s = cfg.ssm
+    d_in, nh, conv_dim = mamba_dims(cfg)
+    return {
+        "conv": ParamDef((n_layers, batch, s.conv_width - 1, conv_dim),
+                         ("layers", "cache_batch", None, None),
+                         init="zeros", dtype="bf16"),
+        "ssm": ParamDef((n_layers, batch, nh, s.head_dim, s.state_dim),
+                        ("layers", "cache_batch", "act_heads", None, None),
+                        init="zeros", dtype="fp32"),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: (B,S,C); w: (C,W); b: (C,). Explicit shifted-sum formulation."""
+    W = w.shape[-1]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[:, i] for i in range(W))
+    return out + b
+
+
+def mamba_block(p, x, cfg: ModelConfig, rcfg, *, cache=None, lengths=None):
+    """Full-sequence (cache=None -> returns (y, final_states)) or one-step
+    decode (cache = dict(conv, ssm), x: (B,1,d))."""
+    s = cfg.ssm
+    d_in, nh, conv_dim = mamba_dims(cfg)
+    gn = s.ngroups * s.state_dim
+    res = x
+    h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    z = dense(h, p["wz"], rcfg)                              # (B,S,d_in) mlp-sharded
+    xr = dense(h, p["wx"], rcfg)
+    Bf = dense(h, p["wb"], rcfg)                             # (B,S,gn) replicated
+    Cf = dense(h, p["wc"], rcfg)
+    dt_raw = dense(h, p["wdt"], rcfg)                        # (B,S,nh)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    if cache is None:
+        # conv + SSD need the full sequence locally: replicate S, shard d_in
+        xr = constrain(xr, ("act_batch", None, "act_mlp"))
+        conv_tail = jnp.concatenate(
+            [t[:, -(s.conv_width - 1):, :] for t in (xr, Bf, Cf)], axis=-1)
+        xc = jax.nn.silu(_causal_conv(xr, p["conv_x_w"], p["conv_x_b"]))
+        Bc = jax.nn.silu(_causal_conv(Bf, p["conv_b_w"], p["conv_b_b"]))
+        Cc = jax.nn.silu(_causal_conv(Cf, p["conv_c_w"], p["conv_c_b"]))
+        Bb, S, _ = xc.shape
+        xh = xc.reshape(Bb, S, nh, s.head_dim)
+        Bm = Bc.reshape(Bb, S, s.ngroups, s.state_dim)
+        Cm = Cc.reshape(Bb, S, s.ngroups, s.state_dim)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+        if rcfg is not None and rcfg.use_pallas:
+            from repro.kernels.ssd import ops as ssd_ops
+            y, final = ssd_ops.ssd(xh, dt, A, Bm, Cm, chunk=s.chunk_size,
+                                   interpret=rcfg.interpret)
+        else:
+            y, final = ssd_chunked(xh, dt, A, Bm, Cm, s.chunk_size)
+        y = y + xh * p["d_skip"].astype(jnp.float32)[None, None, :, None].astype(y.dtype)
+        y = y.reshape(Bb, S, d_in)
+        y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                       p["gate_norm"], cfg.norm_eps)
+        out = dense(y, p["out_proj"], rcfg)
+        out = constrain(out, ("act_batch", "act_seq", "act_embed"))
+        new_cache = {"conv": conv_tail.astype(jnp.bfloat16), "ssm": final}
+        return res + out, new_cache
+
+    # ---- decode: one token ----
+    Bb = x.shape[0]
+    raw1 = jnp.concatenate([xr[:, 0], Bf[:, 0], Cf[:, 0]], axis=-1)
+    full = jnp.concatenate([cache["conv"].astype(raw1.dtype),
+                            raw1[:, None]], axis=1)          # (B, W, conv_dim)
+    conv_w = jnp.concatenate([p["conv_x_w"], p["conv_b_w"], p["conv_c_w"]],
+                             axis=0)
+    conv_b = jnp.concatenate([p["conv_x_b"], p["conv_b_b"], p["conv_c_b"]],
+                             axis=0)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,cw->bc", full.astype(jnp.float32),
+                   conv_w.astype(jnp.float32)) + conv_b.astype(jnp.float32)
+    ).astype(x.dtype)
+    new_conv = full[:, 1:].astype(cache["conv"].dtype)
+    xr2, Bf2, Cf2 = jnp.split(conv_out, [d_in, d_in + gn], axis=-1)
+    xh = xr2.reshape(Bb, nh, s.head_dim)
+    Bv = Bf2.reshape(Bb, s.ngroups, s.state_dim)
+    Cv = Cf2.reshape(Bb, s.ngroups, s.state_dim)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    state, y = ssd_decode(cache["ssm"], xh, dt, A, Bv, Cv)
+    y = y + xh * p["d_skip"].astype(y.dtype)[None, :, None]
+    y = y.reshape(Bb, 1, d_in)
+    y = L.rms_norm(y * jax.nn.silu(z[:, :1].astype(jnp.float32)).astype(y.dtype),
+                   p["gate_norm"], cfg.norm_eps)
+    out = dense(y, p["out_proj"], rcfg)
+    return res + out, {"conv": new_conv, "ssm": state}
+
+
+# ---------------------------------------------------------------------------
+# Full mamba2 LM (attention-free)
+# ---------------------------------------------------------------------------
+
+
+def param_spec(cfg: ModelConfig):
+    Lc, d, V = cfg.num_layers, cfg.d_model, cfg.vocab_size
+    spec = {
+        "embed": ParamDef((V, d), ("vocab", "embed"), init="embed"),
+        "layers": mamba_spec(cfg, (Lc,), ("layers",)),
+        "final_norm": ParamDef((d,), (None,), init="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = ParamDef((d, V), ("embed", "vocab"))
+    return spec
+
+
+def cache_spec(cfg: ModelConfig, rcfg: RuntimeConfig, batch: int, max_seq: int):
+    return mamba_cache_spec(cfg, cfg.num_layers, batch)
+
+
+def forward(params, batch, cfg: ModelConfig, rcfg: RuntimeConfig, *,
+            collect_kv: bool = False, train: bool = False):
+    from repro.models.transformer import embed_tokens
+    x = embed_tokens(params, batch, cfg)
+
+    def body(x, p_i):
+        x, st = mamba_block(p_i, x, cfg, rcfg)
+        return x, (st if collect_kv else None)
+
+    scan_body = body
+    if train and rcfg.remat_policy != "none":
+        policy = (jax.checkpoint_policies.checkpoint_dots
+                  if rcfg.remat_policy == "save_dots" else None)
+        scan_body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+    x, states = jax.lax.scan(scan_body, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, states, jnp.zeros((), jnp.float32)
+
+
+def prefill(params, cache, batch, cfg: ModelConfig, rcfg: RuntimeConfig):
+    from repro.models.transformer import unembed
+    h, states, _ = forward(params, batch, cfg, rcfg, collect_kv=True)
+    logits = unembed(params, h[:, -1:, :], cfg, rcfg)[:, 0]
+    Bb, S = batch["tokens"].shape
+    lengths = jnp.full((Bb,), S, jnp.int32)
+    new_cache = {"conv": states["conv"].astype(cache["conv"].dtype),
+                 "ssm": states["ssm"].astype(cache["ssm"].dtype)}
+    return logits, new_cache, lengths
+
+
+def decode_step(params, cache, tokens, lengths, cfg: ModelConfig,
+                rcfg: RuntimeConfig, positions=None):
+    from repro.models.transformer import embed_tokens, unembed
+    x = embed_tokens(params, {"tokens": tokens}, cfg)
+
+    def body(x, xs):
+        p_i, c_i = xs
+        x, c_new = mamba_block(p_i, x, cfg, rcfg, cache=c_i)
+        return x, c_new
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, x, cfg, rcfg)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,182 @@
+"""Mixture-of-Experts block: top-k routing with capacity-based dispatch.
+
+Two execution paths with identical math:
+  * local   — scatter/gather dispatch in plain jnp; used on single devices and
+              as the oracle in tests.
+  * shardmap — expert parallelism: tokens stay batch-sharded on `data`, each
+              `model` shard owns E/tp experts and sees every local token (the
+              activations are all-gathered over `model` exactly once, mirroring
+              the TP MLP all-gather), selects + computes its own experts, and
+              the per-expert partial outputs reduce-scatter back to the
+              `act_embed` layout. No all-to-all, no GSPMD scatter resharding;
+              per-layer comm equals a dense TP MLP.
+
+FSDP interplay: expert weights are 2-D sharded (experts->model, embed->data);
+inside shard_map the `data`-sharded contraction dim is all-gathered per layer,
+which is exactly the FSDP weight all-gather GSPMD would emit.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models.blocks import act, mlp_spec
+from repro.quant import dense, QTensor, dequantize
+from repro.sharding.param import ParamDef
+from repro.sharding.rules import current_mesh, constrain
+
+
+def moe_spec(cfg: ModelConfig, lead=(), lead_log=()):
+    d, m = cfg.d_model, cfg.moe
+    E, f = m.num_experts, m.d_ff
+    s = {
+        "router": ParamDef((*lead, d, E), (*lead_log, "embed", None), init="small"),
+        "wg": ParamDef((*lead, E, d, f), (*lead_log, "experts", "embed", "expert_mlp")),
+        "wu": ParamDef((*lead, E, d, f), (*lead_log, "experts", "embed", "expert_mlp")),
+        "wo": ParamDef((*lead, E, f, d), (*lead_log, "experts", "expert_mlp", "embed")),
+    }
+    if m.shared_expert:
+        s["shared"] = mlp_spec(cfg, lead, lead_log, d_ff=f)
+    return s
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(math.ceil(m.experts_per_token * tokens * m.capacity_factor / m.num_experts))
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def _route(x2d, router_w, cfg: ModelConfig):
+    """x2d: (T, d) -> (weights (T,k), experts (T,k), aux losses)."""
+    m = cfg.moe
+    logits = (x2d.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                  # (T, E)
+    topw, topi = jax.lax.top_k(probs, m.experts_per_token)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    # aux: load-balance (Switch) + router z-loss
+    density = jnp.mean(jax.nn.one_hot(topi[:, 0], m.num_experts), axis=0)
+    p_mean = probs.mean(axis=0)
+    aux = m.num_experts * jnp.sum(density * p_mean) * m.aux_loss
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * m.router_z_loss
+    return topw, topi, aux + z
+
+
+def _dispatch_compute(x2d, topw, topi, wg, wu, wo, cfg: ModelConfig, rcfg,
+                      e_start: int, e_local: int):
+    """Capacity dispatch for experts [e_start, e_start+e_local) over all rows
+    of x2d. Returns the weighted-combined output (T, d) — zero rows for tokens
+    not routed to these experts."""
+    T, d = x2d.shape
+    k = cfg.moe.experts_per_token
+    C = _capacity(T, cfg)
+    slot_e = topi.reshape(T * k)
+    slot_w = topw.reshape(T * k)
+    slot_tok = jnp.repeat(jnp.arange(T), k)
+    local_e = slot_e - e_start
+    mine = (local_e >= 0) & (local_e < e_local)
+    oh = jax.nn.one_hot(jnp.where(mine, local_e, e_local), e_local + 1,
+                        dtype=jnp.int32)[:, :e_local]        # (T*k, E_loc)
+    pos = jnp.sum((jnp.cumsum(oh, axis=0) - 1) * oh, axis=-1)  # (T*k,)
+    keep = mine & (pos < C)
+    idx_e = jnp.where(keep, local_e, 0)
+    idx_c = jnp.where(keep, pos, 0)
+    contrib = x2d[slot_tok] * keep[:, None].astype(x2d.dtype)
+    buf = jnp.zeros((e_local, C, d), x2d.dtype).at[idx_e, idx_c].add(
+        contrib, mode="drop")
+    # expert FFN (batched over experts)
+    h = act(dense(buf, wg, rcfg), cfg.act_fn) * dense(buf, wu, rcfg)
+    out_e = dense(h, wo, rcfg)                               # (E_loc, C, d)
+    gathered = out_e[idx_e, idx_c] * (slot_w[:, None] * keep[:, None]).astype(x2d.dtype)
+    y = jnp.zeros((T, d), x2d.dtype).at[slot_tok].add(gathered, mode="drop")
+    return y
+
+
+def moe_local(p, x, cfg: ModelConfig, rcfg):
+    """Single-shard oracle. x: (B, S, d) -> (y, aux)."""
+    B, S, d = x.shape
+    x2d = x.reshape(B * S, d)
+    topw, topi, aux = _route(x2d, _maybe_dq(p["router"]), cfg)
+    y = _dispatch_compute(x2d, topw, topi, p["wg"], p["wu"], p["wo"], cfg, rcfg,
+                          0, cfg.moe.num_experts)
+    if "shared" in p:
+        from repro.models.blocks import mlp_apply
+        y = y + mlp_apply(p["shared"], x2d, cfg, rcfg)
+    return y.reshape(B, S, d), aux
+
+
+def _maybe_dq(w):
+    return dequantize(w) if isinstance(w, QTensor) else w
+
+
+def _as_arr(w, dtype):
+    return dequantize(w, dtype) if isinstance(w, QTensor) else w.astype(dtype)
+
+
+def moe_shardmap(p, x, cfg: ModelConfig, rcfg):
+    """Expert-parallel path (see module docstring). x: (B, S, d) -> (y, aux)."""
+    mesh = current_mesh()
+    assert mesh is not None
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    tp = mesh.shape.get("model", 1)
+    E = cfg.moe.num_experts
+    B, S, d = x.shape
+    bshard = math.prod(mesh.shape[a] for a in batch_axes) if batch_axes else 1
+    if (tp == 1 or E % tp != 0 or isinstance(p["router"], QTensor)
+            or B % max(bshard, 1) != 0 or S % tp != 0):
+        # decode (S=1) and quantized trees take the GSPMD local path
+        return moe_local(p, x, cfg, rcfg)
+    e_local = E // tp
+
+    in_specs = (
+        P(batch_axes or None, "model", None),          # x: SP residual layout
+        P("data", None),                               # router (d/dp, E)
+        P("model", "data", None),                      # wg (E_loc, d/dp, f)
+        P("model", "data", None),                      # wu
+        P("model", None, "data"),                      # wo (E_loc, f, d/dp)
+    )
+    out_specs = (P(batch_axes or None, "model", None), P())
+
+    def body(x_loc, router, wg, wu, wo):
+        # SP all-gather: every expert shard sees every local token
+        x_full = jax.lax.all_gather(x_loc, "model", axis=1, tiled=True)
+        router = jax.lax.all_gather(router, "data", axis=0, tiled=True)
+        wg = jax.lax.all_gather(wg, "data", axis=1, tiled=True)
+        wu = jax.lax.all_gather(wu, "data", axis=1, tiled=True)
+        wo = jax.lax.all_gather(wo, "data", axis=2, tiled=True)
+        Bl, Sl, dl = x_full.shape
+        x2d = x_full.reshape(Bl * Sl, dl)
+        topw, topi, aux = _route(x2d, router, cfg)
+        j = jax.lax.axis_index("model")
+        y = _dispatch_compute(x2d, topw, topi, wg, wu, wo, cfg, rcfg,
+                              j * e_local, e_local)
+        y = y.reshape(Bl, Sl, dl)
+        # combine expert partials and return to the SP layout in one op
+        y = jax.lax.psum_scatter(y, "model", scatter_dimension=1, tiled=True)
+        aux = jax.lax.pmean(aux, "model")
+        if batch_axes:
+            aux = jax.lax.pmean(aux, batch_axes)
+        return y, aux
+
+    y, aux = jax.shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False,
+    )(x, p["router"], p["wg"], p["wu"], p["wo"])
+    if "shared" in p:
+        from repro.models.blocks import mlp_apply
+        y = y + mlp_apply(p["shared"], x, cfg, rcfg)
+    return y, aux
+
+
+def moe_apply(p, x, cfg: ModelConfig, rcfg):
+    mesh = current_mesh()
+    use_sm = (mesh is not None and "model" in mesh.shape
+              and (rcfg is None or rcfg.moe_dispatch != "scatter_gspmd"))
+    if use_sm:
+        return moe_shardmap(p, x, cfg, rcfg)
+    return moe_local(p, x, cfg, rcfg)

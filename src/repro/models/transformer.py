@@ -1,0 +1,326 @@
+"""Decoder-only transformer LM covering the dense, MoE, and VLM families.
+
+Design notes:
+  * Layers are stacked on a leading dim and executed with lax.scan — HLO size
+    is O(1) in depth (95-layer deepseek compiles as fast as 6-layer whisper).
+  * Architectures with a layer-type *pattern* (gemma2's local/global
+    alternation) scan over groups of `pattern` layers; within a group the
+    members run unrolled with static window sizes, so sliding-window layers
+    keep a static mask.
+  * Forward returns hidden states; the LM head is applied separately
+    (training uses chunked cross-entropy that never materializes full logits).
+  * decode_step writes one token into a (layers, B, Smax, K, H) cache whose
+    sequence dim is sharded over `model` (flash-decode layout); per-row
+    `lengths` supports ragged continuous batching.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RuntimeConfig
+from repro.models import layers as L
+from repro.models import blocks as B_
+from repro.models.moe import moe_spec, moe_apply
+from repro.quant import dense
+from repro.sharding.param import ParamDef
+from repro.sharding.rules import constrain
+
+
+# ---------------------------------------------------------------------------
+# Spec
+# ---------------------------------------------------------------------------
+
+
+def param_spec(cfg: ModelConfig):
+    Lc = cfg.num_layers
+    d, V = cfg.d_model, cfg.vocab_size
+    layer = {
+        "attn": B_.attn_spec(cfg, (Lc,), ("layers",)),
+        "norms": B_.block_norms_spec(cfg, (Lc,), ("layers",)),
+    }
+    if cfg.family == "moe":
+        layer["moe"] = moe_spec(cfg, (Lc,), ("layers",))
+    else:
+        layer["mlp"] = B_.mlp_spec(cfg, (Lc,), ("layers",))
+    spec = {
+        "embed": ParamDef((V, d), ("vocab", "embed"), init="embed"),
+        "layers": layer,
+        "final_norm": ParamDef((d,), (None,), init="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = ParamDef((d, V), ("embed", "vocab"))
+    return spec
+
+
+def _pattern(cfg: ModelConfig) -> int:
+    return cfg.local_global_pattern or 1
+
+
+def window_for(cfg: ModelConfig, member: int) -> int:
+    """Static sliding window for the member-th layer within a pattern group."""
+    p = _pattern(cfg)
+    if p == 1:
+        return cfg.sliding_window
+    # gemma2-style: members 0..p-2 are local, the last member is global
+    return cfg.sliding_window if member < p - 1 else 0
+
+
+# ---------------------------------------------------------------------------
+# Rope helpers
+# ---------------------------------------------------------------------------
+
+
+def rope_for(cfg: ModelConfig, positions, B: int, S: int):
+    H = cfg.resolved_head_dim
+    if cfg.use_mrope:
+        assert positions is not None and positions.ndim == 3, \
+            "M-RoPE archs need positions (3, B, S)"
+        return L.mrope_cos_sin(positions, H, cfg.rope_theta, cfg.mrope_sections)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    return L.rope_cos_sin(positions, H, cfg.rope_theta)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype)
+        Pn = pe.shape[1]
+        x = jnp.concatenate([pe, x[:, Pn:]], axis=1)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    return constrain(x, ("act_batch", "act_seq", "act_embed"))
+
+
+def unembed(params, h, cfg: ModelConfig, rcfg):
+    if cfg.tie_embeddings:
+        logits = jax.lax.dot_general(
+            h, params["embed"].astype(h.dtype),
+            (((h.ndim - 1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:
+        logits = dense(h, params["lm_head"], rcfg).astype(jnp.float32)
+    return L.softcap(logits, cfg.final_logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies
+# ---------------------------------------------------------------------------
+
+
+def _layer_decode(p_i, x, cache_i, lengths, cfg, rcfg, cos, sin, window):
+    n = p_i["norms"]
+    h = L.rms_norm(x, n["pre_attn"], cfg.norm_eps)
+    a, cache_i = B_.attn_decode_apply(
+        p_i["attn"], h, cfg, rcfg, cos=cos, sin=sin,
+        cache_i=cache_i, lengths=lengths, window=window)
+    if "post_attn" in n:
+        a = L.rms_norm(a, n["post_attn"], cfg.norm_eps)
+    x = x + a
+    h = L.rms_norm(x, n["pre_mlp"], cfg.norm_eps)
+    if cfg.family == "moe":
+        m, _ = moe_apply(p_i["moe"], h, cfg, rcfg)
+    else:
+        m = B_.mlp_apply(p_i["mlp"], h, cfg, rcfg)
+    if "post_mlp" in n:
+        m = L.rms_norm(m, n["post_mlp"], cfg.norm_eps)
+    x = x + m
+    return x, cache_i
+
+
+# ---------------------------------------------------------------------------
+# Cache (bf16 or int8 with per-(pos, head) scales)
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(cfg: ModelConfig, rcfg: RuntimeConfig, batch: int, max_seq: int):
+    Lc, K, H = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    log = ("layers", "cache_batch", "cache_seq", "cache_heads", None)
+    if rcfg.kv_cache_dtype == "int8":
+        slog = ("layers", "cache_batch", "cache_seq", "cache_heads")
+        return {
+            "k": ParamDef((Lc, batch, max_seq, K, H), log, init="zeros", dtype="int8"),
+            "v": ParamDef((Lc, batch, max_seq, K, H), log, init="zeros", dtype="int8"),
+            "k_scale": ParamDef((Lc, batch, max_seq, K), slog, init="zeros", dtype="fp32"),
+            "v_scale": ParamDef((Lc, batch, max_seq, K), slog, init="zeros", dtype="fp32"),
+        }
+    return {
+        "k": ParamDef((Lc, batch, max_seq, K, H), log, init="zeros", dtype="bf16"),
+        "v": ParamDef((Lc, batch, max_seq, K, H), log, init="zeros", dtype="bf16"),
+    }
+
+
+def dequant_cache(cache_i):
+    """Per-layer cache dict -> (k, v) bf16 views (XLA fuses the dequant into
+    the attention matmuls; HBM traffic stays int8)."""
+    if "k_scale" in cache_i:
+        k = cache_i["k"].astype(jnp.float32) * cache_i["k_scale"][..., None]
+        v = cache_i["v"].astype(jnp.float32) * cache_i["v_scale"][..., None]
+        return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+    return cache_i["k"], cache_i["v"]
+
+
+def requant_cache(cache_i, k, v):
+    if "k_scale" not in cache_i:
+        return {"k": k, "v": v}
+    ks = jnp.maximum(jnp.max(jnp.abs(k), axis=-1), 1e-8) / 127.0
+    vs = jnp.maximum(jnp.max(jnp.abs(v), axis=-1), 1e-8) / 127.0
+    return {
+        "k": jnp.round(k / ks[..., None]).astype(jnp.int8),
+        "v": jnp.round(v / vs[..., None]).astype(jnp.int8),
+        "k_scale": ks.astype(jnp.float32),
+        "v_scale": vs.astype(jnp.float32),
+    }
+
+
+def quantize_kv_for_cache(cache_has_scale: bool, k, v):
+    if not cache_has_scale:
+        return {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
+    return requant_cache({"k_scale": True}, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _group_tree(tree, groups: int, gs: int):
+    return jax.tree.map(lambda a: a.reshape(groups, gs, *a.shape[1:]), tree)
+
+
+def forward(params, batch, cfg: ModelConfig, rcfg: RuntimeConfig, *,
+            collect_kv: bool = False, train: bool = False):
+    """-> (hidden (B,S,d), stacked (k,v) or None, aux scalar)."""
+    x = embed_tokens(params, batch, cfg)
+    Bb, S, _ = x.shape
+    cos, sin = rope_for(cfg, batch.get("positions"), Bb, S)
+    gs = _pattern(cfg)
+    groups = cfg.num_layers // gs
+    layer_params = _group_tree(params["layers"], groups, gs)
+
+    def body_moe_aware(carry, p_g):
+        x, aux = carry
+        # SP constraint on the block INPUT as well as its output: without it
+        # the backward cotangent of the residual enters the layer transpose
+        # replicated and every dgrad partial resolves with a full (B,S,d)
+        # all-reduce; anchored at both ends GSPMD emits reduce-scatters
+        # (half the bytes) and keeps the saved residual S-sharded.
+        x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+        kvs = []
+        for m in range(gs):
+            p_i = jax.tree.map(lambda a: a[m], p_g)
+            n = p_i["norms"]
+            h = L.rms_norm(x, n["pre_attn"], cfg.norm_eps)
+            a, kv = B_.attn_apply(p_i["attn"], h, cfg, rcfg, cos=cos, sin=sin,
+                                  window=window_for(cfg, m))
+            if "post_attn" in n:
+                a = L.rms_norm(a, n["post_attn"], cfg.norm_eps)
+            x = x + a
+            h = L.rms_norm(x, n["pre_mlp"], cfg.norm_eps)
+            if cfg.family == "moe":
+                mm, aux_i = moe_apply(p_i["moe"], h, cfg, rcfg)
+                aux = aux + aux_i
+            else:
+                mm = B_.mlp_apply(p_i["mlp"], h, cfg, rcfg)
+            if "post_mlp" in n:
+                mm = L.rms_norm(mm, n["post_mlp"], cfg.norm_eps)
+            x = x + mm
+            x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+            kvs.append(kv)
+        out = jax.tree.map(lambda *xs: jnp.stack(xs), *kvs) if collect_kv else None
+        return (x, aux), out
+
+    scan_body = body_moe_aware
+    if train and rcfg.remat_policy != "none":
+        policy = None
+        if rcfg.remat_policy == "save_dots":
+            policy = jax.checkpoint_policies.checkpoint_dots
+        scan_body = jax.checkpoint(scan_body, policy=policy,
+                                   prevent_cse=False)
+
+    if rcfg.scan_layers:
+        (x, aux), kv_stack = jax.lax.scan(
+            scan_body, (x, jnp.zeros((), jnp.float32)), layer_params)
+    else:
+        # unrolled (HLO grows with depth): used by the analytic-flops
+        # validation tests, where scan would hide per-layer cost
+        carry = (x, jnp.zeros((), jnp.float32))
+        kvs = []
+        for g in range(groups):
+            p_g = jax.tree.map(lambda a: a[g], layer_params)
+            carry, kv = scan_body(carry, p_g)
+            kvs.append(kv)
+        x, aux = carry
+        kv_stack = (jax.tree.map(lambda *xs: jnp.stack(xs), *kvs)
+                    if collect_kv else None)
+    if collect_kv:
+        # (groups, gs, B, S, K, H) -> (L, B, S, K, H)
+        kv_stack = jax.tree.map(
+            lambda a: a.reshape(a.shape[0] * a.shape[1], *a.shape[2:]), kv_stack)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, kv_stack, aux
+
+
+def prefill(params, cache, batch, cfg: ModelConfig, rcfg: RuntimeConfig):
+    """Fill the cache from a full prompt; returns last-position logits.
+
+    batch["tokens"]: (B, S_prompt) — assumed right-aligned dense (length = S).
+    """
+    h, kv, _ = forward(params, batch, cfg, rcfg, collect_kv=True)
+    k, v = kv
+    Smax = cache["k"].shape[2]
+    S = k.shape[2]
+    has_scale = "k_scale" in cache
+    entry = quantize_kv_for_cache(has_scale, k, v)
+    new_cache = {}
+    for key, val in entry.items():
+        pad = [(0, 0)] * val.ndim
+        pad[2] = (0, Smax - S)
+        new_cache[key] = jnp.pad(val, pad).astype(cache[key].dtype)
+    logits = unembed(params, h[:, -1:, :], cfg, rcfg)[:, 0]
+    lengths = jnp.full((k.shape[1],), S, jnp.int32)
+    return logits, new_cache, lengths
+
+
+def decode_step(params, cache, tokens, lengths, cfg: ModelConfig,
+                rcfg: RuntimeConfig, positions=None):
+    """One token per row. tokens: (B,1); lengths: (B,) cache fill counts."""
+    x = embed_tokens(params, {"tokens": tokens}, cfg)
+    Bb = x.shape[0]
+    pos = positions if positions is not None else lengths[None, :, None] \
+        if cfg.use_mrope else lengths[:, None]
+    if cfg.use_mrope and positions is None:
+        pos = jnp.broadcast_to(lengths[None, :, None], (3, Bb, 1))
+    cos, sin = rope_for(cfg, pos, Bb, 1)
+    gs = _pattern(cfg)
+    groups = cfg.num_layers // gs
+    layer_params = _group_tree(params["layers"], groups, gs)
+    cache_g = _group_tree(cache, groups, gs)
+
+    def body(x, xs):
+        p_g, c_g = xs
+        new_c = []
+        for m in range(gs):
+            p_i = jax.tree.map(lambda a: a[m], p_g)
+            c_i = jax.tree.map(lambda a: a[m], c_g)
+            x, c_i2 = _layer_decode(p_i, x, c_i, lengths, cfg, rcfg, cos, sin,
+                                    window_for(cfg, m))
+            new_c.append(c_i2)
+        stacked = jax.tree.map(lambda *xs_: jnp.stack(xs_), *new_c)
+        return x, stacked
+
+    x, new_cache = jax.lax.scan(body, x, (layer_params, cache_g))
+    new_cache = jax.tree.map(
+        lambda a: a.reshape(a.shape[0] * a.shape[1], *a.shape[2:]), new_cache)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, x, cfg, rcfg)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,203 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the assignment, the conv frontend is a STUB: `input_specs()` provides
+precomputed frame embeddings (B, n_frames, d_model) — i.e. the output of
+Whisper's two conv layers. The encoder adds sinusoidal positions and runs
+bidirectional self-attention; the decoder is causal self-attention +
+cross-attention into the encoder output.
+
+Deviations from released Whisper (documented): RMSNorm instead of LayerNorm,
+RoPE-free sinusoidal positions on both stacks, gated MLPs per cfg.act_fn.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RuntimeConfig
+from repro.models import layers as L
+from repro.models import blocks as B_
+from repro.quant import dense
+from repro.sharding.param import ParamDef
+from repro.sharding.rules import constrain
+
+
+def param_spec(cfg: ModelConfig):
+    d, V = cfg.d_model, cfg.vocab_size
+    Le, Ld = cfg.encoder_layers, cfg.num_layers
+    spec = {
+        "embed": ParamDef((V, d), ("vocab", "embed"), init="embed"),
+        "encoder": {
+            "attn": B_.attn_spec(cfg, (Le,), ("layers",)),
+            "mlp": B_.mlp_spec(cfg, (Le,), ("layers",)),
+            "norms": B_.block_norms_spec(cfg, (Le,), ("layers",)),
+        },
+        "enc_final_norm": ParamDef((d,), (None,), init="zeros"),
+        "decoder": {
+            "attn": B_.attn_spec(cfg, (Ld,), ("layers",)),
+            "cross": B_.attn_spec(cfg, (Ld,), ("layers",)),
+            "cross_norm": ParamDef((Ld, d), ("layers", None), init="zeros"),
+            "mlp": B_.mlp_spec(cfg, (Ld,), ("layers",)),
+            "norms": B_.block_norms_spec(cfg, (Ld,), ("layers",)),
+        },
+        "final_norm": ParamDef((d,), (None,), init="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = ParamDef((d, V), ("embed", "vocab"))
+    return spec
+
+
+def cache_spec(cfg: ModelConfig, rcfg: RuntimeConfig, batch: int, max_seq: int):
+    from repro.models.transformer import cache_spec as t_cache_spec
+    self_cache = t_cache_spec(cfg, rcfg, batch, max_seq)
+    K, H = cfg.num_kv_heads, cfg.resolved_head_dim
+    Ld, F = cfg.num_layers, cfg.num_audio_frames
+    log = ("layers", "cache_batch", None, "cache_heads", None)
+    return {
+        "self": self_cache,
+        "cross_k": ParamDef((Ld, batch, F, K, H), log, init="zeros", dtype="bf16"),
+        "cross_v": ParamDef((Ld, batch, F, K, H), log, init="zeros", dtype="bf16"),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig, rcfg: RuntimeConfig):
+    """frames: (B, F, d) precomputed embeddings -> encoder hidden (B, F, d)."""
+    x = frames.astype(jnp.bfloat16)
+    x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+
+    def body(x, p_i):
+        n = p_i["norms"]
+        h = L.rms_norm(x, n["pre_attn"], cfg.norm_eps)
+        a, _ = B_.attn_apply(p_i["attn"], h, cfg, rcfg, cos=None, sin=None,
+                             causal=False)
+        x = x + a
+        h = L.rms_norm(x, n["pre_mlp"], cfg.norm_eps)
+        x = x + B_.mlp_apply(p_i["mlp"], h, cfg, rcfg)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _cross_kv(p_cross, enc, cfg, rcfg):
+    """Precompute cross-attention K/V from encoder output, per decoder layer."""
+    B, F, _ = enc.shape
+    K, H = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def body(_, p_i):
+        k = dense(enc, p_i["wk"], rcfg).reshape(B, F, K, H)
+        v = dense(enc, p_i["wv"], rcfg).reshape(B, F, K, H)
+        if cfg.qkv_bias:
+            k = k + p_i["bk"].reshape(K, H).astype(k.dtype)
+            v = v + p_i["bv"].reshape(K, H).astype(v.dtype)
+        return None, (k, v)
+
+    _, (ks, vs) = jax.lax.scan(body, None, p_cross)
+    return ks, vs                                            # (Ld, B, F, K, H)
+
+
+def _decoder_layer(p_i, x, cfg, rcfg, cos, sin, cross_k, cross_v,
+                   self_cache=None, lengths=None):
+    n = p_i["norms"]
+    h = L.rms_norm(x, n["pre_attn"], cfg.norm_eps)
+    if self_cache is None:
+        a, kv = B_.attn_apply(p_i["attn"], h, cfg, rcfg, cos=cos, sin=sin)
+        new_self = kv
+    else:
+        a, new_self = B_.attn_decode_apply(
+            p_i["attn"], h, cfg, rcfg, cos=cos, sin=sin,
+            cache_i=self_cache, lengths=lengths, window=0)
+    x = x + a
+    # cross attention: query from decoder, kv precomputed from encoder
+    h = L.rms_norm(x, p_i["cross_norm"], cfg.norm_eps)
+    B2, S2, _ = h.shape
+    N, H = cfg.num_heads, cfg.resolved_head_dim
+    q = dense(h, p_i["cross"]["wq"], rcfg)
+    if cfg.qkv_bias:
+        q = q + p_i["cross"]["bq"].astype(q.dtype)
+    q = q.reshape(B2, S2, N, H)
+    o = L.attention(q, cross_k, cross_v, rcfg, causal=False, window=0, cap=0.0)
+    x = x + dense(o.reshape(B2, S2, -1), p_i["cross"]["wo"], rcfg)
+    h = L.rms_norm(x, n["pre_mlp"], cfg.norm_eps)
+    x = x + B_.mlp_apply(p_i["mlp"], h, cfg, rcfg)
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    return x, new_self
+
+
+def forward(params, batch, cfg: ModelConfig, rcfg: RuntimeConfig, *,
+            collect_kv: bool = False, train: bool = False):
+    """Teacher-forced decoder pass. batch: {"tokens", "frames"}."""
+    enc = encode(params, batch["frames"], cfg, rcfg)
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    Bb, S, _ = x.shape
+    x = x + L.sinusoidal_positions(S, cfg.d_model).astype(x.dtype)[None]
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    cross_k, cross_v = _cross_kv(params["decoder"]["cross"], enc, cfg, rcfg)
+
+    def body(x, xs):
+        p_i, ck, cv = xs
+        x, kv = _decoder_layer(p_i, x, cfg, rcfg, None, None, ck, cv)
+        return x, (kv if collect_kv else None)
+
+    scan_body = body
+    if train and rcfg.remat_policy != "none":
+        policy = (jax.checkpoint_policies.checkpoint_dots
+                  if rcfg.remat_policy == "save_dots" else None)
+        scan_body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+    x, kvs = jax.lax.scan(scan_body, x, (params["decoder"], cross_k, cross_v))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if collect_kv:
+        return x, (kvs, (cross_k, cross_v)), jnp.zeros((), jnp.float32)
+    return x, None, jnp.zeros((), jnp.float32)
+
+
+def prefill(params, cache, batch, cfg: ModelConfig, rcfg: RuntimeConfig):
+    from repro.models.transformer import unembed, quantize_kv_for_cache
+    h, (kvs, (cross_k, cross_v)), _ = forward(params, batch, cfg, rcfg,
+                                              collect_kv=True)
+    k, v = kvs
+    Smax = cache["self"]["k"].shape[2]
+    S = k.shape[2]
+    has_scale = "k_scale" in cache["self"]
+    entry = quantize_kv_for_cache(has_scale, k, v)
+    self_cache = {}
+    for key, val in entry.items():
+        pad = [(0, 0)] * val.ndim
+        pad[2] = (0, Smax - S)
+        self_cache[key] = jnp.pad(val, pad).astype(cache["self"][key].dtype)
+    new_cache = {
+        "self": self_cache,
+        "cross_k": cross_k.astype(cache["cross_k"].dtype),
+        "cross_v": cross_v.astype(cache["cross_v"].dtype),
+    }
+    logits = unembed(params, h[:, -1:, :], cfg, rcfg)[:, 0]
+    Bb = batch["tokens"].shape[0]
+    return logits, new_cache, jnp.full((Bb,), S, jnp.int32)
+
+
+def decode_step(params, cache, tokens, lengths, cfg: ModelConfig,
+                rcfg: RuntimeConfig, positions=None):
+    from repro.models.transformer import unembed
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    Bb = x.shape[0]
+    # per-row position: gather one sinusoid row per sequence
+    pos_table = L.sinusoidal_positions(cache["self"]["k"].shape[2], cfg.d_model)
+    x = x + jnp.take(pos_table, lengths, axis=0)[:, None, :].astype(x.dtype)
+
+    def body(x, xs):
+        p_i, sc_i, ck, cv = xs
+        x, new_sc = _decoder_layer(p_i, x, cfg, rcfg, None, None,
+                                   ck.astype(jnp.bfloat16), cv.astype(jnp.bfloat16),
+                                   self_cache=sc_i, lengths=lengths)
+        return x, new_sc
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["decoder"], cache["self"], cache["cross_k"],
+                  cache["cross_v"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, x, cfg, rcfg)[:, 0]
+    new_cache = dict(cache)
+    new_cache["self"] = new_self
+    return logits, new_cache

@@ -1,0 +1,10 @@
+from repro.quant.qtensor import (
+    QTensor,
+    quantize,
+    dequantize,
+    quantize_tree,
+    dense,
+    quant_spec,
+)
+
+__all__ = ["QTensor", "quantize", "dequantize", "quantize_tree", "dense", "quant_spec"]

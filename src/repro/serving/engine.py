@@ -1,0 +1,214 @@
+"""Continuous-batching serving engine.
+
+Fixed-size slot model (vLLM-style at the granularity this framework needs):
+`max_batch` decode slots share one batched cache; new requests prefill into a
+free slot (prompt padded to a bucket so jit reuse is bounded); every step()
+decodes all active slots in one batched call. Completed rows free their slot
+immediately — no head-of-line blocking on long generations.
+
+The engine is deliberately params-agnostic: `swap_params()` installs a new
+weight tree (e.g. the Q4 variant) between steps, which is exactly the hot-swap
+CarbonCall's TPS governor performs. Caches are untouched by a swap — both
+variants share the same cache layout (weight-only quantization).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, RuntimeConfig
+from repro.models import get_model
+from repro.serving.sampler import sample_tokens
+from repro.sharding.param import init_params
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    eos_id: int = 1
+    temperature: float = 0.0
+    # filled by the engine:
+    output: List[int] = dataclasses.field(default_factory=list)
+    submit_time: float = 0.0
+    first_token_time: Optional[float] = None
+    done_time: Optional[float] = None
+
+
+def _bucket(n: int, buckets) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, rcfg: RuntimeConfig, *,
+                 max_batch: int = 4, max_seq: int = 256,
+                 prompt_buckets=(32, 64, 128), clock: Callable[[], float] = time.monotonic):
+        self.cfg = cfg
+        self.rcfg = rcfg
+        self.model = get_model(cfg)
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.prompt_buckets = tuple(b for b in prompt_buckets if b < max_seq)
+        self.clock = clock
+        self.variant_name = "bf16"
+
+        cache_spec = self.model.cache_spec(rcfg, max_batch, max_seq)
+        self.cache = init_params(cache_spec, jax.random.PRNGKey(0))
+        self.lengths = jnp.zeros((max_batch,), jnp.int32)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.pending: List[Request] = []
+        self.key = jax.random.PRNGKey(42)
+
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._prefill = jax.jit(self._prefill_impl)
+        # telemetry
+        self.tokens_emitted = 0
+        self.step_log: List[Dict] = []
+
+    # -- jitted bodies ------------------------------------------------------
+
+    def _decode_impl(self, params, cache, tokens, lengths):
+        logits, cache = self.model.decode_step(params, cache, tokens, lengths,
+                                               self.rcfg)
+        return logits, cache
+
+    def _prefill_impl(self, params, batch):
+        cache_spec = self.model.cache_spec(self.rcfg, 1, self.max_seq)
+        cache = init_params(cache_spec, jax.random.PRNGKey(0))
+        return self.model.prefill(params, cache, batch, self.rcfg)
+
+    # -- public API ---------------------------------------------------------
+
+    def swap_params(self, params, variant_name: str):
+        """Hot-swap the weight tree (CarbonCall Q8<->Q4 switch)."""
+        self.params = params
+        self.variant_name = variant_name
+
+    def submit(self, req: Request):
+        req.submit_time = self.clock()
+        self.pending.append(req)
+
+    @property
+    def active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def has_work(self) -> bool:
+        return self.active > 0 or bool(self.pending)
+
+    def step(self) -> List[Request]:
+        """Admit one pending request (prefill) or run one batched decode step.
+        Returns requests completed during this step."""
+        t0 = self.clock()
+        completed: List[Request] = []
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if self.pending and free:
+            req = self.pending.pop(0)
+            slot = free[0]
+            self._admit(req, slot)
+            tokens_this_step = 1
+            kind = "prefill"
+        elif self.active:
+            tokens_this_step = self._decode_active(completed)
+            kind = "decode"
+        else:
+            return completed
+        dt = max(self.clock() - t0, 1e-9)
+        self.tokens_emitted += tokens_this_step
+        self.step_log.append({
+            "kind": kind, "tokens": tokens_this_step, "dt": dt,
+            "tps": tokens_this_step / dt, "variant": self.variant_name,
+            "active": self.active,
+        })
+        return completed
+
+    def run_until_drained(self, max_steps: int = 100000) -> List[Request]:
+        done = []
+        for _ in range(max_steps):
+            if not self.has_work():
+                break
+            done.extend(self.step())
+        return done
+
+    # -- internals ----------------------------------------------------------
+
+    def _admit(self, req: Request, slot: int):
+        b = _bucket(len(req.prompt), self.prompt_buckets)
+        toks = req.prompt[-b:] if len(req.prompt) > b else \
+            [0] * (b - len(req.prompt)) + list(req.prompt)
+        batch = self._prefill_batch(np.array([toks], np.int32))
+        logits, cache1, lengths1 = self._prefill(self.params, batch)
+        # insert single-row cache into the batch cache at `slot`
+        self.cache = jax.tree.map(
+            lambda c, p: c.at[:, slot].set(p[:, 0].astype(c.dtype))
+            if c.ndim >= 2 else c, self.cache, cache1)
+        self.lengths = self.lengths.at[slot].set(int(lengths1[0]))
+        self.slots[slot] = req
+        tok = self._sample(logits, req)
+        self._emit(req, slot, int(tok[0]))
+
+    def _prefill_batch(self, tokens):
+        batch = {"tokens": jnp.asarray(tokens)}
+        if self.cfg.family == "whisper":
+            batch["frames"] = jnp.zeros(
+                (tokens.shape[0], self.cfg.num_audio_frames, self.cfg.d_model),
+                jnp.bfloat16)
+        if self.cfg.family == "vlm":
+            B, S = tokens.shape
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32)[None, None, :], (3, B, S))
+        return batch
+
+    def _decode_active(self, completed: List[Request]) -> int:
+        last = np.zeros((self.max_batch, 1), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is not None:
+                last[i, 0] = req.output[-1] if req.output else (
+                    req.prompt[-1] if req.prompt else 0)
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(last), self.lengths)
+        self.lengths = jnp.where(
+            jnp.asarray([s is not None for s in self.slots]),
+            jnp.minimum(self.lengths + 1, self.max_seq - 1), self.lengths)
+        emitted = 0
+        toks = None
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if toks is None:
+                toks = np.asarray(self._sample(logits, req))
+            tok = int(toks[i])
+            self._emit(req, i, tok)
+            emitted += 1
+            if tok == req.eos_id or len(req.output) >= req.max_new_tokens:
+                req.done_time = self.clock()
+                completed.append(req)
+                self.slots[i] = None
+                self.lengths = self.lengths.at[i].set(0)
+        return emitted
+
+    def _sample(self, logits, req: Request):
+        self.key, sub = jax.random.split(self.key)
+        return sample_tokens(logits, sub, temperature=req.temperature)
+
+    def _emit(self, req: Request, slot: int, tok: int):
+        if req.first_token_time is None:
+            req.first_token_time = self.clock()
+        req.output.append(tok)
+
+    # -- telemetry ----------------------------------------------------------
+
+    def recent_tps(self, window: int = 50) -> float:
+        log = [s for s in self.step_log[-window:] if s["kind"] == "decode"]
+        if not log:
+            return 0.0
+        return sum(s["tokens"] for s in log) / max(sum(s["dt"] for s in log), 1e-9)

@@ -1,0 +1,20 @@
+"""Token sampling: greedy / temperature / top-k."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("temperature", "top_k"))
+def sample_tokens(logits, key, *, temperature: float = 0.0, top_k: int = 0):
+    """logits: (B, V) -> (B,) int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    l = logits / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(l, top_k)
+        cut = vals[:, -1][:, None]
+        l = jnp.where(l < cut, -1e30, l)
+    return jax.random.categorical(key, l, axis=-1).astype(jnp.int32)

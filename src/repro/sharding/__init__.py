@@ -1,0 +1,29 @@
+from repro.sharding.rules import (
+    DEFAULT_RULES,
+    resolve_spec,
+    logical_sharding,
+    tree_shardings,
+    constrain,
+)
+from repro.sharding.param import (
+    ParamDef,
+    init_params,
+    abstract_params,
+    spec_logical_axes,
+    param_bytes,
+    count_params,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "resolve_spec",
+    "logical_sharding",
+    "tree_shardings",
+    "constrain",
+    "ParamDef",
+    "init_params",
+    "abstract_params",
+    "spec_logical_axes",
+    "param_bytes",
+    "count_params",
+]

@@ -1,0 +1,8 @@
+from repro.train.optimizer import AdamWState, adamw_init, adamw_update, lr_schedule
+from repro.train.losses import chunked_cross_entropy
+from repro.train.train_step import make_train_step, TrainState
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update", "lr_schedule",
+    "chunked_cross_entropy", "make_train_step", "TrainState",
+]

@@ -1,0 +1,55 @@
+"""Gradient compression: int8 block-quantized all-reduce with error feedback.
+
+For the inter-pod (DCN) reduction, fp32/bf16 gradient all-reduce dominates the
+collective term. We quantize each gradient leaf to int8 with one fp32 scale
+per block of 256 values, psum the int8 payload (accumulated in int32 — exact),
+and dequantize. The quantization error is carried in an error-feedback buffer
+so the compression is unbiased over steps (momentum-SGD-style EF).
+
+Engaged via RuntimeConfig.grad_compression == "int8" inside a shard_map over
+the mesh's batch axes; with GSPMD-only flows the same transform is applied to
+the gradient tree pre-psum (see make_train_step).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def quantize_int8_blocked(g):
+    """g: any shape -> (q int8 flat-padded, scales f32, pad)."""
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1, keepdims=True), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale, pad
+
+
+def dequantize_int8_blocked(q, scale, pad, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+def compress_roundtrip(g, err):
+    """One leaf with error feedback: returns (decompressed, new_err)."""
+    q, s, pad = quantize_int8_blocked(g + err)
+    deq = dequantize_int8_blocked(q, s, pad, g.shape)
+    return deq, (g + err) - deq
+
+
+def compress_tree(grads, err_tree):
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(err_tree)
+    outs = [compress_roundtrip(g, e) for g, e in zip(flat_g, flat_e)]
+    return tdef.unflatten([o[0] for o in outs]), tdef.unflatten([o[1] for o in outs])
+
+
+def init_error_tree(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

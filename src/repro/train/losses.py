@@ -1,0 +1,116 @@
+"""Cross-entropy without materializing (T, vocab) logits.
+
+For 100k–256k vocabularies the dense logits of a 4k x 256 batch are the
+single biggest activation (gemma2 train: 4.3 GB/chip fp32). We scan over
+vocab chunks computing an online logsumexp and gathering the label logit;
+jax.checkpoint on the chunk body makes the backward recompute per-chunk, so
+peak memory is O(T x chunk) for both passes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import QTensor, dequantize
+from repro.sharding.rules import constrain
+
+
+def _best_chunk(vocab: int, requested: int) -> int:
+    """Largest divisor of `vocab` that is <= requested (dense if none >1)."""
+    if requested >= vocab:
+        return vocab
+    best = vocab
+    for n in range(2, 257):
+        if vocab % n == 0 and vocab // n <= requested:
+            best = vocab // n
+            break
+    return best
+
+
+def _head_matrix(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"], True           # (V, d): use as W^T
+    w = params["lm_head"]
+    if isinstance(w, QTensor):
+        w = dequantize(w)
+    return w, False                            # (d, V)
+
+
+def chunked_cross_entropy(params, h, labels, cfg, rcfg, *, mask=None):
+    """h: (B, S, d); labels: (B, S) -> (mean loss, aux dict).
+
+    Applies the model's final-logit softcap (gemma2) inside each chunk.
+    """
+    B, S, d = h.shape
+    T = B * S
+    # sequence-parallel loss: tokens shard over `model` for the head matmul,
+    # so every device computes a T/(dp*tp) slice of the logits
+    h = constrain(h, ("act_batch", "act_xent_seq", None))
+    labels = constrain(labels, ("act_batch", "act_xent_seq"))
+    x = h.reshape(T, d)
+    y = labels.reshape(T)
+    m = jnp.ones((T,), jnp.float32) if mask is None else mask.reshape(T).astype(jnp.float32)
+    if mask is not None:
+        m = constrain(m.reshape(B, S), ("act_batch", "act_xent_seq")).reshape(T)
+    W, transposed = _head_matrix(params, cfg)
+    V = cfg.vocab_size
+    chunk = _best_chunk(V, rcfg.xent_chunk or V)
+    n_chunks = V // chunk
+    cap = cfg.final_logit_softcap
+
+    if n_chunks == 1:
+        if transposed:
+            logits = jax.lax.dot_general(
+                x, W.astype(x.dtype), (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        else:
+            logits = jax.lax.dot_general(
+                x, W.astype(x.dtype), (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        if cap > 0:
+            logits = jnp.tanh(logits / cap) * cap
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        cols = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        ll = jnp.where(cols == y[:, None], logits, 0.0).sum(axis=1)
+        nll = (lse - ll) * m
+        return nll.sum() / jnp.maximum(m.sum(), 1.0), {"lse_mean": lse.mean()}
+
+    # reshape the head into (n_chunks, ...) for scan
+    if transposed:
+        Wc = W.reshape(n_chunks, chunk, d)
+    else:
+        Wc = W.reshape(d, n_chunks, chunk).swapaxes(0, 1)   # (n, d, chunk)
+
+    def body(carry, inp):
+        m_run, l_run, ll = carry
+        w_i, start = inp
+        if transposed:
+            lg = jax.lax.dot_general(
+                x, w_i.astype(x.dtype), (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)          # (T, chunk)
+        else:
+            lg = jax.lax.dot_general(
+                x, w_i.astype(x.dtype), (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        if cap > 0:
+            lg = jnp.tanh(lg / cap) * cap
+        m_new = jnp.maximum(m_run, lg.max(axis=-1))
+        l_run = l_run * jnp.exp(m_run - m_new) + jnp.exp(
+            lg - m_new[:, None]).sum(axis=-1)
+        # label logit if it falls in this chunk — mask-reduce instead of
+        # take_along_axis: gather's transpose is a scatter-add that GSPMD
+        # resolves with a full-logits all-reduce (6.6 GB/step measured)
+        cols = start + jax.lax.broadcasted_iota(jnp.int32, lg.shape, 1)
+        ll = ll + jnp.where(cols == y[:, None], lg, 0.0).sum(axis=1)
+        return (m_new, l_run, ll), None
+
+    starts = jnp.arange(n_chunks) * chunk
+    carry0 = (jnp.full((T,), -1e30, jnp.float32), jnp.zeros((T,), jnp.float32),
+              jnp.zeros((T,), jnp.float32))
+    (m_fin, l_fin, ll), _ = jax.lax.scan(
+        jax.checkpoint(body, prevent_cse=False), carry0, (Wc, starts))
+    lse = m_fin + jnp.log(jnp.maximum(l_fin, 1e-37))
+    nll = (lse - ll) * m
+    return nll.sum() / jnp.maximum(m.sum(), 1.0), {"lse_mean": lse.mean()}

@@ -1,0 +1,87 @@
+"""AdamW from scratch (no optax in this container), with bf16 params +
+fp32 master copies and moments, global-norm clipping, and warmup-cosine LR.
+
+Optimizer state shards like the params (the 2-D FSDPxTP layout in
+sharding/rules.py), so 70B-class AdamW fits 256 chips (~3.4 GB/chip).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class AdamWState:
+    step: jax.Array
+    mu: Any            # fp32, same tree as params
+    nu: Any            # fp32
+    master: Any        # fp32 master weights
+
+    def tree_flatten(self):
+        return (self.step, self.mu, self.nu, self.master), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def adamw_init(params) -> AdamWState:
+    f32 = lambda t: jax.tree.map(lambda p: p.astype(jnp.float32), t)
+    zeros = lambda t: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), t)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(params),
+                      nu=zeros(params), master=f32(params))
+
+
+def lr_schedule(step, tcfg: TrainConfig):
+    warm = jnp.minimum(step / jnp.maximum(tcfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - tcfg.warmup_steps) /
+                    jnp.maximum(tcfg.total_steps - tcfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tcfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads, state: AdamWState, tcfg: TrainConfig, params_dtype=jnp.bfloat16):
+    """Returns (new_params (model dtype), new_state, metrics)."""
+    step = state.step + 1
+    lr = lr_schedule(step, tcfg)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if tcfg.grad_clip > 0 else 1.0
+
+    b1, b2 = tcfg.b1, tcfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, mu, nu, master):
+        g = g.astype(jnp.float32) * clip
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mu_hat = mu / c1
+        nu_hat = nu / c2
+        delta = mu_hat / (jnp.sqrt(nu_hat) + 1e-8) + tcfg.weight_decay * master
+        master = master - lr * delta
+        return mu, nu, master
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_mu = treedef.flatten_up_to(state.mu)
+    flat_nu = treedef.flatten_up_to(state.nu)
+    flat_ma = treedef.flatten_up_to(state.master)
+    out = [upd(g, m, n, w) for g, m, n, w in zip(flat_g, flat_mu, flat_nu, flat_ma)]
+    mu = treedef.unflatten([o[0] for o in out])
+    nu = treedef.unflatten([o[1] for o in out])
+    master = treedef.unflatten([o[2] for o in out])
+    new_params = jax.tree.map(lambda w: w.astype(params_dtype), master)
+    new_state = AdamWState(step=step, mu=mu, nu=nu, master=master)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

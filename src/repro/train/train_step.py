@@ -1,0 +1,60 @@
+"""Train step factory: loss -> grad -> AdamW, with remat/chunked-xent/
+grad-compression wired from RuntimeConfig. Pure function of (state, batch) —
+jit it with the shardings from launch/dryrun or launch/train.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RuntimeConfig, TrainConfig
+from repro.models import get_model
+from repro.train.losses import chunked_cross_entropy
+from repro.train.optimizer import AdamWState, adamw_init, adamw_update
+from repro.train import compression
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: AdamWState
+    err: Any = None          # grad-compression error feedback (optional)
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.err), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_train_state(params, rcfg: RuntimeConfig) -> TrainState:
+    err = compression.init_error_tree(params) if rcfg.grad_compression == "int8" else None
+    return TrainState(params=params, opt=adamw_init(params), err=err)
+
+
+def make_train_step(cfg: ModelConfig, rcfg: RuntimeConfig, tcfg: TrainConfig):
+    model = get_model(cfg)
+
+    def loss_fn(params, batch):
+        h, aux = model.forward(params, batch, rcfg, train=True)
+        loss, extras = chunked_cross_entropy(
+            params, h, batch["labels"], cfg, rcfg,
+            mask=batch.get("loss_mask"))
+        return loss + aux, {"xent": loss, "moe_aux": aux, **extras}
+
+    def train_step(state: TrainState, batch) -> tuple:
+        (loss, extras), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, batch)
+        err = state.err
+        if rcfg.grad_compression == "int8":
+            grads, err = compression.compress_tree(grads, err)
+        new_params, new_opt, om = adamw_update(grads, state.opt, tcfg)
+        metrics = {"loss": loss, **extras, **om}
+        return TrainState(params=new_params, opt=new_opt, err=err), metrics
+
+    return train_step

@@ -1,0 +1,76 @@
+"""Validate the analytic FLOP model against XLA cost analysis on an UNROLLED
+tiny model (no scan => HloCostAnalysis counts everything)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import (ModelConfig, RuntimeConfig, ShapeConfig)
+from repro.launch.analytic import forward_flops, step_flops
+from repro.models import get_model
+from repro.sharding.param import abstract_params
+
+
+def _unrolled_forward_flops(cfg, B, S):
+    """Lower the forward pass with scan disabled via a 1-layer model times L
+    (plus the head counted once): layers are identical, so
+    flops(L) = L * (flops(1-layer model) - head) + head."""
+    rcfg = RuntimeConfig(xent_chunk=0, attn_chunk=10**9, scan_layers=False)
+
+    def flops_of(num_layers):
+        c = dataclasses.replace(cfg, num_layers=num_layers)
+        model = get_model(c)
+        params = abstract_params(model.param_spec())
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+        def fwd(p, b):
+            h, _, _ = model.mod.forward(p, b, c, rcfg)
+            from repro.models.transformer import unembed
+            return unembed(p, h, c, rcfg)
+
+        compiled = jax.jit(fwd).lower(params, batch).compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        return float(cost["flops"])
+
+    f1 = flops_of(1)
+    f2 = flops_of(2)
+    per_layer = f2 - f1
+    head = f1 - per_layer
+    return cfg.num_layers * per_layer + head
+
+
+@pytest.mark.slow
+def test_forward_flops_matches_hlo():
+    cfg = ModelConfig(name="val", family="transformer", num_layers=4,
+                      d_model=128, num_heads=4, num_kv_heads=2, d_ff=512,
+                      vocab_size=1024)
+    B, S = 2, 256
+    shape = ShapeConfig("val", S, B, "prefill")
+    analytic = forward_flops(cfg, shape)
+    hlo = _unrolled_forward_flops(cfg, B, S)
+    # analytic counts matmuls + attention; HLO adds elementwise/softmax ops
+    assert 0.75 < analytic / hlo < 1.15, (analytic, hlo)
+
+
+def test_train_multipliers():
+    cfg = ModelConfig(name="val", family="transformer", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=256)
+    shape = ShapeConfig("t", 128, 2, "train")
+    fwd = forward_flops(cfg, shape)
+    full = step_flops(cfg, shape, RuntimeConfig(remat_policy="full"))
+    none = step_flops(cfg, shape, RuntimeConfig(remat_policy="none"))
+    assert full == pytest.approx(4 * fwd)
+    assert none == pytest.approx(3 * fwd)
+
+
+def test_decode_flops_scale_with_batch_not_seq():
+    cfg = ModelConfig(name="val", family="transformer", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=256)
+    a = forward_flops(cfg, ShapeConfig("d", 1024, 8, "decode"))
+    b = forward_flops(cfg, ShapeConfig("d", 1024, 16, "decode"))
+    assert b == pytest.approx(2 * a, rel=1e-6)

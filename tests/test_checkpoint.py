@@ -1,0 +1,115 @@
+"""Checkpointing: atomicity, checksums, retention, resume, failure injection,
+elastic restore."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, latest_step
+from repro.config import ModelConfig, RuntimeConfig, TrainConfig
+from repro.data.pipeline import TokenPipeline
+from repro.models import get_model
+from repro.sharding.param import init_params
+from repro.train.train_step import make_train_step, init_train_state
+
+CFG = ModelConfig(name="tiny", family="transformer", num_layers=2, d_model=32,
+                  num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=128)
+
+
+def _tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_writes=False)
+    ck.save(3, _tree())
+    step, tree = ck.restore_tree(_tree())
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(tree["a"]), np.arange(12.0).reshape(3, 4))
+
+
+def test_corruption_detected(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_writes=False)
+    ck.save(1, _tree())
+    # flip bytes in a leaf
+    target = os.path.join(str(tmp_path), "step_1", "a.npy")
+    raw = bytearray(open(target, "rb").read())
+    raw[-4] ^= 0xFF
+    open(target, "wb").write(bytes(raw))
+    with pytest.raises(IOError, match="corruption"):
+        ck.restore_tree(_tree())
+
+
+def test_retention_keeps_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2, async_writes=False)
+    for s in [1, 2, 3, 4, 5]:
+        ck.save(s, _tree())
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path)
+                   if d.startswith("step_"))
+    assert steps == [4, 5]
+
+
+def test_async_save_then_restore(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_writes=True)
+    ck.save(7, _tree())
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 7
+
+
+def test_crash_mid_write_keeps_previous(tmp_path):
+    """A stale .tmp dir (simulated crash) must not shadow the last valid
+    checkpoint, and the next save must clean it up."""
+    ck = Checkpointer(str(tmp_path), async_writes=False)
+    ck.save(1, _tree())
+    os.makedirs(os.path.join(str(tmp_path), "step_2.tmp"))
+    assert latest_step(str(tmp_path)) == 1
+    ck.save(2, _tree())
+    assert latest_step(str(tmp_path)) == 2
+
+
+def test_training_resume_bitwise(tmp_path):
+    """Kill-and-restart: state restored from step k continues identically to
+    an uninterrupted run (deterministic data pipeline => same batches)."""
+    rcfg = RuntimeConfig(xent_chunk=0)
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=2, total_steps=20)
+    step_fn = jax.jit(make_train_step(CFG, rcfg, tcfg))
+    pipe = TokenPipeline(seed=0, global_batch=4, seq_len=32, vocab=128)
+    params = init_params(get_model(CFG).param_spec(), jax.random.PRNGKey(0))
+
+    # uninterrupted 6 steps
+    s_ref = init_train_state(params, rcfg)
+    for i in range(6):
+        s_ref, m_ref = step_fn(s_ref, pipe.batch_at(i))
+
+    # run 3 steps, checkpoint, "crash", restore, run 3 more
+    ck = Checkpointer(str(tmp_path), async_writes=False)
+    s = init_train_state(params, rcfg)
+    for i in range(3):
+        s, _ = step_fn(s, pipe.batch_at(i))
+    ck.save(3, s)
+    del s
+    step0, s2 = ck.restore_tree(init_train_state(params, rcfg))
+    assert step0 == 3
+    for i in range(3, 6):
+        s2, m2 = step_fn(s2, pipe.batch_at(i))
+    np.testing.assert_allclose(float(m2["loss"]), float(m_ref["loss"]),
+                               rtol=1e-5)
+
+
+def test_elastic_restore_new_sharding(tmp_path):
+    """Restore onto a different device topology (here: explicit single-device
+    mesh) — shapes and values survive resharding."""
+    from repro.launch.mesh import make_host_mesh
+    model = get_model(CFG)
+    spec = model.param_spec()
+    params = init_params(spec, jax.random.PRNGKey(0))
+    ck = Checkpointer(str(tmp_path), async_writes=False)
+    ck.save(1, params)
+    mesh = make_host_mesh()
+    _, restored = ck.restore_tree(params, mesh=mesh, spec=spec)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))

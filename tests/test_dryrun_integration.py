@@ -1,0 +1,34 @@
+"""End-to-end dry-run integration: lower + compile a real cell on the
+256-chip production mesh in a subprocess (dryrun.py forces 512 host devices —
+must not leak into this test process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_dryrun_cell_compiles_and_reports():
+    out = os.path.join(ROOT, "experiments", "dryrun",
+                       "whisper-base_decode_32k_pod_citest.json")
+    if os.path.exists(out):
+        os.remove(out)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "whisper-base",
+         "--shape", "decode_32k", "--mesh", "pod", "--tag", "citest"],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=500)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    with open(out) as f:
+        d = json.load(f)
+    assert d["chips"] == 256
+    assert d["compute_s"] > 0 and d["bytes_per_device"] > 0
+    assert d["dominant"] in ("compute", "memory", "collective")
+    assert d["analytic_memory_per_device"] < 16e9      # fits a v5e chip
+    os.remove(out)

@@ -1,0 +1,91 @@
+"""Kernel vs pure-jnp-oracle sweeps (shapes x dtypes), interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.quant import quantize
+from repro.kernels.quant_matmul import ops as qm_ops, ref as qm_ref
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.ssd import ops as ssd_ops, ref as ssd_ref
+from repro.kernels.topk_sim import ops as tk_ops, ref as tk_ref
+
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("fmt", ["q8", "q4"])
+@pytest.mark.parametrize("shape", [(128, 512, 256), (4, 256, 512),
+                                   (64, 1024, 384), (8, 128, 128),
+                                   (200, 384, 640)])
+@pytest.mark.parametrize("xdtype", [jnp.bfloat16, jnp.float32])
+def test_quant_matmul(fmt, shape, xdtype):
+    M, K, N = shape
+    seed = (M * 31 + K * 7 + N + (1 if fmt == "q4" else 0)) % (2 ** 31)
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, seed))
+    x = jax.random.normal(k1, (M, K), xdtype)
+    w = jax.random.normal(k2, (K, N), jnp.float32) * 0.05
+    t = quantize(w, fmt)
+    got = qm_ops.quant_matmul(x, t, interpret=True)
+    want = qm_ref.qtensor_matmul_ref(x, t)
+    gf = np.asarray(got, np.float32)
+    wf = np.asarray(want, np.float32)
+    rel = np.max(np.abs(gf - wf)) / max(np.max(np.abs(wf)), 1e-6)
+    assert rel < 0.02, rel
+
+
+@pytest.mark.parametrize(
+    "B,Sq,Skv,N,K,H,causal,window,cap",
+    [
+        (2, 256, 256, 4, 2, 64, True, 0, 0.0),
+        (1, 256, 256, 8, 8, 128, True, 64, 50.0),   # gemma2-style local+cap
+        (2, 128, 256, 4, 4, 64, False, 0, 0.0),     # cross-attn style
+        (1, 512, 512, 4, 1, 32, True, 0, 0.0),      # MQA
+        (2, 128, 128, 2, 2, 256, True, 0, 30.0),
+    ])
+def test_flash_attention(B, Sq, Skv, N, K, H, causal, window, cap):
+    kq, kk, kv = jax.random.split(jax.random.fold_in(KEY, Sq * Skv + N), 3)
+    q = jax.random.normal(kq, (B, Sq, N, H), jnp.bfloat16)
+    k = jax.random.normal(kk, (B, Skv, K, H), jnp.bfloat16)
+    v = jax.random.normal(kv, (B, Skv, K, H), jnp.bfloat16)
+    off = Skv - Sq if causal else 0
+    got = fa_ops.flash_attention(q, k, v, causal=causal, window=window,
+                                 cap=cap, q_offset=off, interpret=True)
+    want = fa_ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                      cap=cap, q_offset=off)
+    err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                - want.astype(jnp.float32))))
+    assert err < 0.03, err
+
+
+@pytest.mark.parametrize("B,S,H,P,G,N,Q", [
+    (2, 256, 4, 64, 1, 128, 128),
+    (1, 128, 8, 32, 2, 64, 64),
+    (2, 64, 4, 16, 1, 32, 32),
+    (1, 256, 2, 64, 1, 16, 64),
+])
+def test_ssd(B, S, H, P, G, N, Q):
+    ks = jax.random.split(jax.random.fold_in(KEY, S * H + N), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, G, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, G, N)) * 0.3
+    y1, f1 = ssd_ops.ssd(x, dt, A, Bm, Cm, chunk=Q, interpret=True)
+    y2, f2 = ssd_ref.ssd_ref(x, dt, A, Bm, Cm, chunk=Q)
+    assert float(jnp.max(jnp.abs(y1 - y2))) < 0.05
+    assert float(jnp.max(jnp.abs(f1 - f2))) < 0.05
+
+
+@pytest.mark.parametrize("n_tools,d,m,k", [(2048, 64, 3, 5), (512, 128, 1, 8),
+                                           (1024, 256, 7, 16)])
+def test_topk_sim(n_tools, d, m, k):
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, n_tools + d))
+    tools = jax.random.normal(k1, (n_tools, d))
+    tools = tools / jnp.linalg.norm(tools, axis=-1, keepdims=True)
+    qs = jax.random.normal(k2, (m, d))
+    s1, i1 = tk_ops.topk_tools(tools, qs, k=k, interpret=True)
+    qn = qs / jnp.linalg.norm(qs, axis=-1, keepdims=True)
+    s2, i2 = tk_ref.topk_tools_ref(tools, qn, k)
+    assert bool(jnp.all(i1 == i2))
+    assert float(jnp.max(jnp.abs(s1 - s2))) < 1e-5

@@ -1,0 +1,130 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CarbonGovernor, ORIN_MODES, carbon_footprint
+from repro.core.switching import VariantSwitcher
+from repro.quant import quantize, dequantize
+from repro.sharding.rules import resolve_spec
+from repro.train.compression import compress_roundtrip
+from jax.sharding import Mesh
+
+MESH = None
+
+
+def _mesh():
+    global MESH
+    if MESH is None:
+        MESH = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    return MESH
+
+
+# -- CF = E x CI ------------------------------------------------------------
+
+
+@given(st.floats(0, 1e7), st.floats(0, 1000))
+def test_cf_linear_nonneg(e, ci):
+    cf = carbon_footprint(e, ci)
+    assert cf >= 0
+    assert np.isclose(carbon_footprint(2 * e, ci), 2 * cf, rtol=1e-9, atol=1e-12)
+
+
+# -- governor ----------------------------------------------------------------
+
+
+@given(st.lists(st.floats(1, 1000), min_size=2, max_size=48),
+       st.floats(1, 1000))
+def test_governor_mode_in_range(forecast, ci):
+    gov = CarbonGovernor(ORIN_MODES)
+    s = gov.init(forecast)
+    s = gov.update(s, ci)
+    assert 0 <= s.mode_idx < len(ORIN_MODES)
+
+
+@given(st.floats(100, 199), st.floats(100, 199))
+def test_governor_small_moves_never_switch(ci1, ci2):
+    """Any two CI values within 10% of the range of [0, 1000]: no remap."""
+    gov = CarbonGovernor(ORIN_MODES)
+    s = gov.init([0.0, 1000.0])
+    s = gov.update(s, ci1)
+    base = s.mode_idx
+    if abs(ci2 - ci1) < 100.0:
+        s = gov.update(s, ci2)
+        assert s.mode_idx == base
+
+
+# -- switcher -----------------------------------------------------------------
+
+
+@given(st.lists(st.floats(0.1, 100), min_size=3, max_size=50))
+def test_switcher_variant_always_valid(tps_seq):
+    sw = VariantSwitcher(window_s=10)
+    sw.set_reference(50.0)
+    for i, tps in enumerate(tps_seq):
+        sw.observe(float(i), tps)
+        d = sw.decide(float(i))
+        sw.apply(float(i), d)
+        assert sw.variant in ("q8", "q4")
+
+
+@given(st.floats(1.0, 100.0))
+def test_switcher_above_threshold_stays_q8(tps_scale):
+    sw = VariantSwitcher(window_s=10)
+    sw.set_reference(tps_scale)
+    for t in range(0, 40):
+        sw.observe(float(t), tps_scale * 0.95)   # above the 80% floor
+        d = sw.decide(float(t))
+        sw.apply(float(t), d)
+    assert sw.variant == "q8"
+
+
+# -- quantization -------------------------------------------------------------
+
+
+@given(st.integers(1, 4), st.sampled_from([64, 128, 256]),
+       st.sampled_from([32, 96]), st.sampled_from(["q8", "q4"]))
+@settings(max_examples=20, deadline=None)
+def test_quant_error_bounds(seed, din, dout, fmt):
+    w = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (din, dout)),
+                   np.float32)
+    t = quantize(jnp.asarray(w), fmt, group=min(128, din))
+    back = np.asarray(dequantize(t, jnp.float32))
+    # per-channel amax bound: q8 error <= amax/127, q4 <= range/15 (asym)
+    if fmt == "q8":
+        bound = np.abs(w).max(axis=0, keepdims=True) / 127.0 + 1e-6
+    else:
+        bound = (w.max(axis=0, keepdims=True) - w.min(axis=0, keepdims=True)) \
+            / 15.0 * 0.51 + 1e-6
+    assert (np.abs(back - w) <= bound + 1e-5).all()
+
+
+# -- gradient compression ------------------------------------------------------
+
+
+@given(st.integers(0, 5))
+@settings(max_examples=10, deadline=None)
+def test_compression_error_feedback_bounded(seed):
+    g = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (300,)),
+                   np.float32)
+    err = jnp.zeros_like(jnp.asarray(g))
+    total_dec = np.zeros_like(g)
+    for _ in range(8):
+        dec, err = compress_roundtrip(jnp.asarray(g), err)
+        total_dec += np.asarray(dec)
+    # error feedback: cumulative decompressed ~= cumulative true gradient
+    rel = np.abs(total_dec - 8 * g).max() / (np.abs(8 * g).max() + 1e-9)
+    assert rel < 0.05
+
+
+# -- sharding resolver ----------------------------------------------------------
+
+
+@given(st.sampled_from([1, 2, 4, 6, 8, 16, 64, 100, 8192]),
+       st.sampled_from(["heads", "mlp", "vocab", "act_batch", None]))
+def test_resolver_divisibility(dim, logical):
+    mesh = _mesh()
+    spec = resolve_spec((logical,), (dim,), mesh)
+    # on the 1x1 mesh everything resolves (1 divides all); never crashes
+    assert len(spec) == 1
