@@ -2,6 +2,8 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.
   week_eval            — Figs 2–5 (normalized T/P/TPS/CF, 5 methods x 4 weeks)
+  engine_week          — engine backend: batched-decode TPS scaling + a
+                         compressed day through run_week(backend="engine")
   variant_utilization  — Fig 6 (Q8 share per weekday, weeks 3/4)
   operating_modes      — Table I + §III-C TPS/power ladder
   tool_selection       — §III-B selection quality/latency
@@ -16,14 +18,16 @@ import sys
 def main() -> None:
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
-    from benchmarks import (kernels_bench, operating_modes, roofline_table,
-                            tool_selection, variant_utilization, week_eval)
+    from benchmarks import (engine_week, kernels_bench, operating_modes,
+                            roofline_table, tool_selection,
+                            variant_utilization, week_eval)
     suites = {
         "operating_modes": operating_modes.run,
         "tool_selection": tool_selection.run,
         "kernels": kernels_bench.run,
         "variant_utilization": variant_utilization.run,
         "week_eval": week_eval.run,
+        "engine_week": engine_week.run,
         "roofline": roofline_table.run,
     }
     for name, fn in suites.items():

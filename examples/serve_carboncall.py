@@ -1,105 +1,61 @@
-"""End-to-end serving driver (the paper's kind): batched requests through the
-continuous-batching engine while CarbonCall's governor + variant switcher run
-a compressed simulated day of carbon intensity.
+"""End-to-end serving driver (the paper's kind): the full CarbonCall closed
+loop — governor -> operating mode, switcher -> live Q8/Q4 param swap,
+selector -> real prompt lengths — over a compressed stretch of carbon
+intensity.
 
-Real token generation on CPU (reduced model); power/TPS numbers for the
-governor come from the Orin-calibrated model (core/power.py).
+Two execution backends share the control loop:
+  * --backend sim     analytic roofline executor (fast, no token generation)
+  * --backend engine  real continuous-batching ServingEngine decode on CPU
+                      (reduced model) under the calibrated virtual clock
 
-    PYTHONPATH=src python examples/serve_carboncall.py --hours 24 --qph 2
+    PYTHONPATH=src python examples/serve_carboncall.py --hours 24 --qph 12
 """
 import argparse
-
-import jax
-import numpy as np
+from collections import Counter
 
 from repro.common.hardware import ORIN_AGX
-from repro.common.registry import get_arch
-from repro.config import RuntimeConfig
-from repro.configs.reduced import reduce_config
-from repro.core import (CarbonGovernor, ORIN_MODES, ToolSelector,
-                        VariantSwitcher, carbon_footprint, ci_trace,
-                        forecast_trace)
-from repro.core.power import PowerModel
+from repro.core import (CarbonCallRuntime, EngineExecutor, ORIN_MODES,
+                        PAPER_MODELS, POLICIES, ToolSelector, ci_trace,
+                        make_executor, run_week)
 from repro.data.workload import build_catalog, FunctionCallWorkload
-from repro.models import get_model
-from repro.quant import quantize_tree
-from repro.serving import Request, ServingEngine
-from repro.sharding.param import init_params
 
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=["sim", "engine"], default="engine")
     ap.add_argument("--hours", type=int, default=24)
-    ap.add_argument("--qph", type=float, default=2.0, help="queries per hour")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--max-new-tokens", type=int, default=10)
+    ap.add_argument("--qph", type=float, default=12.0, help="queries per hour")
+    ap.add_argument("--week", default="week4")
+    ap.add_argument("--model", default="qwen2-7b", choices=sorted(PAPER_MODELS))
     args = ap.parse_args()
 
-    cfg = reduce_config(get_arch("carboncall-qwen2-7b"))
-    rcfg = RuntimeConfig()
-    model = get_model(cfg)
-    spec = model.param_spec()
-    params = init_params(spec, jax.random.PRNGKey(0))
-    variants = {"q8": quantize_tree(params, spec, "q8"),
-                "q4": quantize_tree(params, spec, "q4")}
-    engine = ServingEngine(cfg, variants["q8"], rcfg, max_batch=args.batch,
-                           max_seq=128)
-    engine.variant_name = "q8"
-
     catalog = build_catalog(64, seed=0)
-    selector = ToolSelector(catalog)
-    workload = FunctionCallWorkload(catalog, seed=3)
-    governor = CarbonGovernor(ORIN_MODES)
-    switcher = VariantSwitcher(window_s=600.0)
-    pm = PowerModel(ORIN_AGX)
-    ci = ci_trace("week4", seed=0)
-    state = governor.init(forecast_trace(ci)[:144])
-    switcher.set_reference(20.0)
+    executor = make_executor(args.backend, PAPER_MODELS[args.model], ORIN_AGX,
+                             seed=0)
+    runtime = CarbonCallRuntime(
+        selector=ToolSelector(catalog), executor=executor,
+        policy=POLICIES["carboncall"], modes=ORIN_MODES,
+        catalog_size=len(catalog.tools), seed=0)
+    ci = ci_trace(args.week, seed=0)[:args.hours * 6]
+    res = run_week(runtime, FunctionCallWorkload(catalog, seed=3), ci,
+                   queries_per_hour=args.qph)
 
-    rng = np.random.default_rng(0)
-    total_cf = total_energy = 0.0
-    served = 0
-    mode_hist = {m.index: 0 for m in ORIN_MODES}
-    rid = 0
-    for step10 in range(args.hours * 6):          # 10-minute ticks
-        t = step10 * 600.0
-        cinow = float(ci[step10 % len(ci)])
-        state = governor.update(state, cinow)
-        mode = governor.mode(state)
-        mode_hist[mode.index] += 1
-        # admit a Poisson batch of queries, serve them together
-        n = rng.poisson(args.qph / 6.0)
-        if n == 0:
-            continue
-        for _ in range(n):
-            q = workload.sample()
-            sel = selector.select(q.text)
-            prompt = [2 + int.from_bytes(__import__('hashlib').md5(w.encode()).digest()[:4], 'little') % (cfg.vocab_size - 2)
-                      for w in q.text.lower().split()][:24]
-            engine.submit(Request(rid=rid, prompt=prompt,
-                                  max_new_tokens=args.max_new_tokens, eos_id=-1))
-            rid += 1
-        done = engine.run_until_drained()
-        served += len(done)
-        # Orin-calibrated TPS feeds the switcher; engine does real tokens
-        mode_tps = 20.0 * (0.3 + 0.7 * mode.f_gpu / ORIN_MODES[0].f_gpu) * \
-            (1.9 if switcher.variant == "q4" else 1.0)
-        switcher.observe(t, mode_tps)
-        dec = switcher.decide(t)
-        if dec.switch_to:
-            switcher.apply(t, dec)
-            engine.swap_params(variants[switcher.variant], switcher.variant)
-            print(f"[{step10//6:02d}:{step10%6}0] variant -> {switcher.variant} "
-                  f"({dec.reason})")
-        toks = sum(len(d.output) for d in done)
-        exec_s = toks / mode_tps
-        energy = pm.power(mode) * exec_s
-        total_energy += energy
-        total_cf += carbon_footprint(energy, cinow)
-    print(f"\nserved {served} requests over {args.hours}h simulated")
-    print(f"mode residency: " + " ".join(f"m{k}:{v}" for k, v in mode_hist.items()))
-    print(f"energy {total_energy/3600:.2f} Wh, carbon {total_cf*1000:.1f} mgCO2")
-    print(f"final variant: {switcher.variant}")
+    modes = Counter(r.mode_idx + 1 for r in res.records)
+    variants = Counter(r.variant for r in res.records)
+    print(f"[{args.backend}] served {len(res.records)} queries over "
+          f"{args.hours}h simulated ({args.model}, {args.week})")
+    print(f"  T={res.avg_latency:.2f}s  P={res.avg_power:.1f}W  "
+          f"TPS={res.avg_tps:.1f}  CF={res.avg_carbon * 1000:.1f}mg  "
+          f"ok={res.success_rate:.2f}")
+    print("  mode residency: " +
+          " ".join(f"m{k}:{modes[k]}" for k in sorted(modes)))
+    print("  variant mix:    " +
+          " ".join(f"{k}:{v}" for k, v in sorted(variants.items())))
+    if isinstance(runtime.executor, EngineExecutor):
+        eng = runtime.executor.engine
+        print(f"  engine: {eng.tokens_emitted} real tokens decoded, "
+              f"{runtime.executor.swap_count} live param swaps, "
+              f"recent TPS {eng.recent_tps():.1f} (virtual clock)")
 
 
 if __name__ == "__main__":

@@ -7,7 +7,8 @@ switching.py  mixed-quality Q8/Q4 variant switching               (§III-D)
 governor.py   CI -> mode mapping with 10% hysteresis              (§III-E)
 runtime.py    the runtime loop + weekly virtual-time driver       (§III-E, §IV)
 baselines.py  Default / Gorilla / LiS / LiS* comparison policies  (§IV)
-executor.py   simulated + real-JAX execution backends
+executor.py   analytic (sim) execution backend
+engine_executor.py  real ServingEngine-backed execution backend
 fleet.py      multi-pod carbon-aware routing (beyond-paper scale-out)
 embedder.py   sentence encoder / cross-encoder substrate (in JAX)
 """
@@ -21,6 +22,7 @@ from repro.core.tool_select import ToolSelector, SelectionResult
 from repro.core.runtime import CarbonCallRuntime, Policy, run_week, WeekResult
 from repro.core.baselines import POLICIES
 from repro.core.executor import SimExecutor, PAPER_MODELS, ModelProfile
+from repro.core.engine_executor import EngineExecutor, make_executor
 
 __all__ = [
     "WEEKS", "ci_trace", "forecast_trace", "carbon_footprint",
@@ -28,5 +30,6 @@ __all__ = [
     "PowerModel", "modes_for", "CarbonGovernor", "GovernorState",
     "VariantSwitcher", "SwitchDecision", "ToolSelector", "SelectionResult",
     "CarbonCallRuntime", "Policy", "run_week", "WeekResult", "POLICIES",
-    "SimExecutor", "PAPER_MODELS", "ModelProfile",
+    "SimExecutor", "EngineExecutor", "make_executor", "PAPER_MODELS",
+    "ModelProfile",
 ]

@@ -72,10 +72,16 @@ def ci_trace(week: str, *, seed: int = 0, step_minutes: int = 10) -> np.ndarray:
 def forecast_trace(truth: np.ndarray, *, seed: int = 1,
                    mape: float = 0.05) -> np.ndarray:
     """CarbonCast-style 24h-ahead forecast: truth + smooth multiplicative error."""
+    truth = np.asarray(truth, dtype=float)
+    if len(truth) == 0:
+        return truth.copy()
     rng = np.random.default_rng(seed)
-    raw = rng.standard_normal(len(truth))
     kernel = np.exp(-0.5 * (np.arange(-30, 31) / 10.0) ** 2)
-    err = np.convolve(raw, kernel / kernel.sum(), mode="same")
+    # pad so the smoothed error always matches len(truth) ("same" flips the
+    # alignment when the trace is shorter than the kernel)
+    pad = len(kernel) // 2
+    raw = rng.standard_normal(len(truth) + 2 * pad)
+    err = np.convolve(raw, kernel / kernel.sum(), mode="valid")
     err = err / (np.abs(err).mean() + 1e-9) * mape
     return truth * (1.0 + err)
 

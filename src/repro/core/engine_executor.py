@@ -1,0 +1,178 @@
+"""Engine-backed query execution: the CarbonCall control loop driving the
+real continuous-batching ServingEngine.
+
+`SimExecutor` (core/executor.py) is purely analytic; this module closes the
+loop the paper actually runs: the governor's mode and the switcher's variant
+decisions land on a live engine — tool prompts become token prompts sized by
+`n_tools_in_prompt`, decode runs through the batched slot loop, and Q8<->Q4
+switches call `engine.swap_params` with pre-built quantized param trees.
+
+Timing/energy: the container has no power rails and the reduced model is not
+the paper's 7B, so the engine runs on a `VirtualClock` whose per-step
+durations come from the same roofline power model the simulator uses,
+evaluated at the *profile* scale (8B-class bytes/FLOPs) and the current
+operating mode. Token generation is real; seconds and joules are calibrated.
+The external tool wait and the evaluation-pass re-prefill are charged
+analytically (the engine folds the evaluation decode into the request's token
+budget — one engine request per attempt keeps the slot loop hot).
+
+`EngineExecutor` satisfies the exact interface `CarbonCallRuntime.handle_query`
+consumes: `run_query`, `variant_switch_cost`, `reference_tps`, `power_model`,
+`profile`.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.common.hardware import HardwareSpec
+from repro.common.registry import get_arch
+from repro.config import RuntimeConfig
+from repro.configs.reduced import reduce_config
+from repro.core.executor import (
+    EVAL_PROMPT, QUERY_TOKENS, QueryExecution, SELECT_S, TOKENS_PER_TOOL,
+    TOOL_EXEC_S, ModelProfile, attempt_loop, success_probability)
+from repro.core.power import OperatingMode, PowerModel, modes_for
+from repro.models import get_model
+from repro.quant import quantize_tree
+from repro.serving import Request, ServingEngine, VirtualClock
+from repro.sharding.param import init_params
+
+
+class EngineExecutor:
+    """Executes runtime queries on a real (reduced-config) ServingEngine."""
+
+    def __init__(self, profile: ModelProfile, hw: HardwareSpec, *,
+                 arch: str = "carboncall-qwen2-7b", seed: int = 0,
+                 max_batch: int = 2, max_seq: int = 256,
+                 tokens_per_call: int = 8, eval_tokens: int = 4):
+        self.profile = profile
+        self.power_model = PowerModel(hw)
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+        self.tokens_per_call = tokens_per_call
+        self.eval_tokens = eval_tokens
+
+        self.cfg = reduce_config(get_arch(arch))
+        rcfg = RuntimeConfig()
+        model = get_model(self.cfg)
+        spec = model.param_spec()
+        params = init_params(spec, jax.random.PRNGKey(seed))
+        self.variants = {"q8": quantize_tree(params, spec, "q8"),
+                         "q4": quantize_tree(params, spec, "q4")}
+        self.clock = VirtualClock()
+        self._mode: OperatingMode = modes_for(hw)[0]
+        self.engine = ServingEngine(self.cfg, self.variants["q8"], rcfg,
+                                    max_batch=max_batch, max_seq=max_seq,
+                                    clock=self.clock,
+                                    step_cost_fn=self._step_cost)
+        self.engine.variant_name = "q8"
+        self._rid = 0
+
+    @property
+    def swap_count(self) -> int:
+        """Live engine.swap_params performed (the engine is the only counter;
+        run_query swaps exclusively through it)."""
+        return self.engine.swap_count
+
+    # -- virtual-clock step costs -------------------------------------------
+
+    def _step_cost(self, kind: str, tokens: int, active: int) -> float:
+        """Roofline duration of one engine step at profile scale: prefill is
+        compute-bound on the prompt tokens; batched decode streams the weights
+        once per step plus one KV read per active slot (this is what makes
+        batched TPS scale with occupancy under the virtual clock)."""
+        pm, prof, mode = self.power_model, self.profile, self._mode
+        if kind == "prefill":
+            return pm.prefill_time(max(tokens, 1), prof.n_active * 2, mode)
+        return pm.decode_time_per_token(
+            prof.active_bytes(self.engine.variant_name),
+            prof.kv_bytes_per_token * max(active, 1), mode)
+
+    # -- executor interface --------------------------------------------------
+
+    def reference_tps(self, mode: OperatingMode) -> float:
+        """Deployment-time calibration: TPS of a nominal single-call (3-tool)
+        query at Q8 in `mode` — mirrors what run_query measures so the 80%
+        switching threshold is meaningful against engine telemetry."""
+        pm, prof = self.power_model, self.profile
+        tok = self.tokens_per_call + self.eval_tokens
+        prompt = QUERY_TOKENS + 3 * TOKENS_PER_TOOL
+        t = (SELECT_S
+             + pm.prefill_time(prompt, prof.n_active * 2, mode)
+             + pm.prefill_time(EVAL_PROMPT, prof.n_active * 2, mode)
+             + tok * pm.decode_time_per_token(
+                 prof.active_bytes("q8"), prof.kv_bytes_per_token, mode))
+        return tok / t
+
+    def run_query(self, *, n_tools_in_prompt: int, n_calls: int,
+                  selection_correct: bool, variant: str,
+                  mode: OperatingMode) -> QueryExecution:
+        self._mode = mode
+        if variant != self.engine.variant_name:
+            # live hot-swap: the switcher's decision lands on the engine
+            self.engine.swap_params(self.variants[variant], variant)
+
+        prompt_len = QUERY_TOKENS + n_tools_in_prompt * TOKENS_PER_TOOL
+        return attempt_loop(
+            self.rng, success_probability(selection_correct, variant), n_calls,
+            lambda calls: self._one_attempt(prompt_len, calls, mode))
+
+    def variant_switch_cost(self, variant: str, mode: OperatingMode):
+        """(latency, energy) to load the `variant` weights; the engine is
+        stalled for the reload, so virtual time advances too."""
+        t = self.power_model.model_load_time(
+            self.profile.weight_bytes(variant), mode)
+        self.clock.advance(t)
+        return t, t * self.power_model.power(mode, util=0.5)
+
+    # -- internals -----------------------------------------------------------
+
+    def _one_attempt(self, prompt_len: int, calls: int, mode: OperatingMode):
+        pm = self.power_model
+        eng = self.engine
+        lat = SELECT_S
+        en = SELECT_S * pm.power(mode, util=0.3)
+        # one engine request per attempt: prompt sized by the tool selection,
+        # decode budget covering every structured call + its evaluation pass
+        new_toks = calls * (self.tokens_per_call + self.eval_tokens)
+        req = Request(rid=self._rid, prompt=self._prompt_tokens(prompt_len),
+                      max_new_tokens=new_toks, eos_id=-1)
+        self._rid += 1
+        log_start = len(eng.step_log)
+        eng.submit(req)
+        eng.run_until_drained()
+        dec_tok = len(req.output)
+        dec_t = 0.0
+        for s in eng.step_log[log_start:]:
+            util = 0.95 if s["kind"] == "prefill" else 0.70
+            lat += s["dt"]
+            en += s["dt"] * pm.power(mode, util=util)
+            if s["kind"] == "decode":
+                dec_t += s["dt"]
+        # per call: external tool wait (near-idle) + evaluation re-prefill
+        wait = calls * TOOL_EXEC_S
+        lat += wait
+        en += wait * pm.power(mode, util=0.25)
+        pe = calls * pm.prefill_time(EVAL_PROMPT, self.profile.n_active * 2, mode)
+        lat += pe
+        en += pe * pm.power(mode, util=0.95)
+        return lat, en, dec_tok, dec_t, wait
+
+    def _prompt_tokens(self, n: int):
+        ids = 2 + self.rng.integers(0, self.cfg.vocab_size - 2, size=max(n, 1))
+        return [int(i) for i in ids]
+
+
+def make_executor(backend: str, profile: ModelProfile, hw: HardwareSpec, *,
+                  seed: int = 0, **engine_kw):
+    """Backend factory: "sim" -> analytic SimExecutor, "engine" -> real
+    ServingEngine-backed executor."""
+    if backend == "sim":
+        from repro.core.executor import SimExecutor
+        return SimExecutor(profile, hw, seed=seed)
+    if backend == "engine":
+        return EngineExecutor(profile, hw, seed=seed, **engine_kw)
+    raise ValueError(f"unknown backend {backend!r}; expected 'sim' or 'engine'")

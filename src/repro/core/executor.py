@@ -11,9 +11,9 @@ with failure->retry loops whose probability comes from the *actual* selection
 outcome plus a variant-dependent degradation (quantized models fail more,
 §III-D last paragraph).
 
-JaxExecutor — wraps serving.ServingEngine with real (tiny) models on CPU;
-used by examples/ and integration tests so the control logic is exercised
-against real token generation, not just the analytic model.
+The engine-backed counterpart (EngineExecutor, core/engine_executor.py) runs
+the same query pipeline on a real serving.ServingEngine; both share the
+per-query retry scaffold defined here (`attempt_loop`).
 """
 from __future__ import annotations
 
@@ -77,12 +77,63 @@ QWEN2_7B = ModelProfile("qwen2-7b", 7.6e9, 7.6e9, 28672)
 PAPER_MODELS = {m.name: m for m in (HERMES2_PRO_8B, LLAMA31_8B, QWEN2_7B)}
 
 
+def success_probability(selection_correct: bool, variant: str) -> float:
+    """A call only succeeds if selection put the right tool in the prompt;
+    quantized variants degrade structured calling slightly (§III-D)."""
+    p = 1.0 if selection_correct else 0.0
+    if variant == "q4":
+        p *= Q4_ACCURACY_FACTOR
+    return p
+
+
+def attempt_loop(rng, p_success: float, n_calls: int,
+                 attempt) -> QueryExecution:
+    """Shared per-query retry scaffold (one retry on failure), used by both
+    execution backends. `attempt(calls)` performs one full pipeline pass and
+    returns (latency, energy, decode_tokens, decode_time, external_wait);
+    a failed attempt aborts its chain roughly halfway through."""
+    lat = en = 0.0
+    tok = 0
+    dec_t = 0.0
+    wait_t = 0.0
+    failed = 0
+    succeeded = False
+    for _ in range(2):
+        ok = rng.random() < p_success
+        calls = n_calls if ok else max(1, n_calls // 2)
+        l, e, d, dt, w = attempt(calls)
+        lat += l
+        en += e
+        tok += d
+        dec_t += dt
+        wait_t += w
+        if ok:
+            succeeded = True
+            break
+        failed += 1
+    return QueryExecution(latency_s=lat, energy_j=en, decode_tokens=tok,
+                          decode_time_s=dec_t,
+                          exec_time_s=lat - wait_t,
+                          failed_attempts=failed, succeeded=succeeded)
+
+
 class SimExecutor:
     def __init__(self, profile: ModelProfile, hw: HardwareSpec,
                  seed: int = 0):
         self.profile = profile
         self.power_model = PowerModel(hw)
+        self.seed = seed
         self.rng = np.random.default_rng(seed)
+
+    def reference_tps(self, mode: OperatingMode) -> float:
+        """Deployment-time calibration: the (mode, Q8) decode TPS the 80%
+        switching threshold is measured against."""
+        pm, prof = self.power_model, self.profile
+        tok = CALL_TOKENS + EVAL_TOKENS
+        t = (pm.prefill_time(200 + EVAL_PROMPT, prof.n_active * 2, mode)
+             + tok * pm.decode_time_per_token(
+                 prof.active_bytes("q8"), prof.kv_bytes_per_token, mode))
+        return tok / t
 
     def run_query(self, *, n_tools_in_prompt: int, n_calls: int,
                   selection_correct: bool, variant: str,
@@ -95,7 +146,7 @@ class SimExecutor:
         p_decode = pm.power(mode, util=0.70)
         p_idle_wait = pm.power(mode, util=0.25)
 
-        def one_attempt(success: bool):
+        def one_attempt(calls: int):
             lat = SELECT_S
             en = SELECT_S * pm.power(mode, util=0.3)
             wait = 0.0
@@ -104,7 +155,6 @@ class SimExecutor:
             t = pm.prefill_time(prompt, prof.n_active * 2, mode)  # 2 FLOP/param/token
             lat += t
             en += t * p_prefill
-            calls = n_calls if success else max(1, n_calls // 2)
             for _ in range(calls):
                 dt = CALL_TOKENS * pm.decode_time_per_token(
                     prof.active_bytes(variant), prof.kv_bytes_per_token, mode)
@@ -125,31 +175,9 @@ class SimExecutor:
                 dec_t += de
             return lat, en, dec_tok, dec_t, wait
 
-        p_success = (1.0 if selection_correct else 0.0)
-        if variant == "q4":
-            p_success *= Q4_ACCURACY_FACTOR
-        lat = en = 0.0
-        tok = 0
-        dec_t = 0.0
-        wait_t = 0.0
-        failed = 0
-        succeeded = False
-        for attempt in range(2):                   # one retry on failure
-            ok = self.rng.random() < p_success
-            l, e, d, dt, w = one_attempt(ok)
-            lat += l
-            en += e
-            tok += d
-            dec_t += dt
-            wait_t += w
-            if ok:
-                succeeded = True
-                break
-            failed += 1
-        return QueryExecution(latency_s=lat, energy_j=en, decode_tokens=tok,
-                              decode_time_s=dec_t,
-                              exec_time_s=lat - wait_t,
-                              failed_attempts=failed, succeeded=succeeded)
+        return attempt_loop(self.rng,
+                            success_probability(selection_correct, variant),
+                            n_calls, one_attempt)
 
     def variant_switch_cost(self, variant: str, mode: OperatingMode):
         """(latency, energy) to load the `variant` weights."""

@@ -78,8 +78,12 @@ class FleetRouter:
 
 def run_fleet(pods: List[PodState], workload: FunctionCallWorkload, *,
               n_steps: int, step_minutes: int = 10,
-              queries_per_hour: float = 60.0, seed: int = 0
+              queries_per_hour: float = 60.0, seed: int = 0,
+              backend: Optional[str] = None
               ) -> Dict[int, List[QueryRecord]]:
+    if backend is not None:
+        for p in pods:
+            p.runtime.use_backend(backend)
     rng = np.random.default_rng(seed)
     router = FleetRouter(pods)
     steps_per_day = 24 * 60 // step_minutes

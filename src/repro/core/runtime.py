@@ -96,16 +96,25 @@ class CarbonCallRuntime:
         self.governor = CarbonGovernor(modes)
         self.switcher = VariantSwitcher()
         # deployment-time calibration: the (m1, Q8) decode TPS reference the
-        # 80% switching threshold is measured against
-        from repro.core.executor import CALL_TOKENS, EVAL_PROMPT, EVAL_TOKENS
-        pm = executor.power_model
-        prof = executor.profile
-        tok = CALL_TOKENS + EVAL_TOKENS
-        t_ref = (pm.prefill_time(200 + EVAL_PROMPT, prof.n_active * 2, modes[0])
-                 + tok * pm.decode_time_per_token(
-                     prof.active_bytes("q8"), prof.kv_bytes_per_token, modes[0]))
-        self.switcher.set_reference(tok / t_ref)
+        # 80% switching threshold is measured against — each backend knows its
+        # own TPS model (sim: analytic pipeline; engine: roofline of the
+        # virtual-clock request it actually runs)
+        self.switcher.set_reference(executor.reference_tps(modes[0]))
+        self.seed = seed
         self.rng = np.random.default_rng(seed)
+
+    def use_backend(self, backend: str):
+        """Swap the execution backend in place ("sim" | "engine"), rebuilding
+        the switcher's TPS reference against the new backend's timing model."""
+        from repro.core.engine_executor import EngineExecutor, make_executor
+        current = "engine" if isinstance(self.executor, EngineExecutor) else "sim"
+        if backend == current:
+            return self
+        self.executor = make_executor(backend, self.executor.profile,
+                                      self.executor.power_model.hw,
+                                      seed=self.executor.seed)
+        self.switcher.set_reference(self.executor.reference_tps(self.modes[0]))
+        return self
 
     # -- selection policies --------------------------------------------------
 
@@ -178,8 +187,18 @@ class CarbonCallRuntime:
 
 def run_week(runtime: CarbonCallRuntime, workload: FunctionCallWorkload,
              ci: np.ndarray, *, step_minutes: int = 10,
-             queries_per_hour: float = 30.0, seed: int = 0) -> WeekResult:
-    """Virtual-time week: Poisson arrivals, 24h forecast refresh at midnight."""
+             queries_per_hour: float = 30.0, seed: int = 0,
+             backend: Optional[str] = None) -> WeekResult:
+    """Virtual-time week: Poisson arrivals, 24h forecast refresh at midnight.
+
+    `backend="sim"` (analytic) or `"engine"` (real ServingEngine decode under
+    the calibrated virtual clock) selects the execution backend; None keeps
+    whatever executor the runtime was built with.
+    """
+    if backend is not None:
+        runtime.use_backend(backend)
+    if len(ci) == 0:
+        return WeekResult(name=runtime.policy.name, records=[])
     rng = np.random.default_rng(seed)
     forecast = forecast_trace(ci, seed=seed + 1)
     gov = runtime.governor

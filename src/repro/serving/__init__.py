@@ -1,4 +1,4 @@
-from repro.serving.engine import ServingEngine, Request
+from repro.serving.engine import ServingEngine, Request, VirtualClock
 from repro.serving.sampler import sample_tokens
 
-__all__ = ["ServingEngine", "Request", "sample_tokens"]
+__all__ = ["ServingEngine", "Request", "VirtualClock", "sample_tokens"]

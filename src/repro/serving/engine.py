@@ -1,15 +1,26 @@
 """Continuous-batching serving engine.
 
 Fixed-size slot model (vLLM-style at the granularity this framework needs):
-`max_batch` decode slots share one batched cache; new requests prefill into a
-free slot (prompt padded to a bucket so jit reuse is bounded); every step()
+`max_batch` decode slots share one batched cache; new requests prefill into
+free slots (prompts padded to a bucket so jit reuse is bounded); every step()
 decodes all active slots in one batched call. Completed rows free their slot
 immediately — no head-of-line blocking on long generations.
+
+Admission is batched: one step admits up to *all* free slots through a single
+padded prefill call (admission batch always padded to `max_batch` rows, so the
+jit cache holds one prefill executable per prompt bucket, not per admission
+count). Decode/prefill executables are kept in per-variant caches so Q8<->Q4
+hot swaps reuse their compilations instead of retracing.
 
 The engine is deliberately params-agnostic: `swap_params()` installs a new
 weight tree (e.g. the Q4 variant) between steps, which is exactly the hot-swap
 CarbonCall's TPS governor performs. Caches are untouched by a swap — both
 variants share the same cache layout (weight-only quantization).
+
+Timebase: `clock` defaults to wall time, but tests and the engine-backed
+carbon simulation inject a `VirtualClock` plus a `step_cost_fn`; each step
+then advances virtual time by a deterministic, power-model-derived duration
+instead of measuring the (meaningless on CPU) wall clock.
 """
 from __future__ import annotations
 
@@ -41,6 +52,23 @@ class Request:
     done_time: Optional[float] = None
 
 
+class VirtualClock:
+    """Deterministic virtual time source for tests and carbon simulation.
+
+    Only `advance()` moves time — reading it is free, so step durations are
+    exactly what the injected `step_cost_fn` says they are.
+    """
+
+    def __init__(self, t0: float = 0.0):
+        self.t = float(t0)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float):
+        self.t += float(dt)
+
+
 def _bucket(n: int, buckets) -> int:
     for b in buckets:
         if n <= b:
@@ -51,7 +79,9 @@ def _bucket(n: int, buckets) -> int:
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, rcfg: RuntimeConfig, *,
                  max_batch: int = 4, max_seq: int = 256,
-                 prompt_buckets=(32, 64, 128), clock: Callable[[], float] = time.monotonic):
+                 prompt_buckets=(32, 64, 128),
+                 clock: Callable[[], float] = time.monotonic,
+                 step_cost_fn: Optional[Callable[[str, int, int], float]] = None):
         self.cfg = cfg
         self.rcfg = rcfg
         self.model = get_model(cfg)
@@ -60,7 +90,12 @@ class ServingEngine:
         self.max_seq = max_seq
         self.prompt_buckets = tuple(b for b in prompt_buckets if b < max_seq)
         self.clock = clock
+        # step_cost_fn(kind, tokens, active) -> seconds; with a VirtualClock it
+        # sets the measured duration of each step (kind "prefill" passes total
+        # prompt tokens admitted, "decode" passes tokens emitted this step).
+        self.step_cost_fn = step_cost_fn
         self.variant_name = "bf16"
+        self.swap_count = 0
 
         cache_spec = self.model.cache_spec(rcfg, max_batch, max_seq)
         self.cache = init_params(cache_spec, jax.random.PRNGKey(0))
@@ -69,8 +104,11 @@ class ServingEngine:
         self.pending: List[Request] = []
         self.key = jax.random.PRNGKey(42)
 
-        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
-        self._prefill = jax.jit(self._prefill_impl)
+        # per-variant executable caches: a hot swap flips the param tree
+        # structure (bf16 arrays vs QTensor nodes), so each variant gets its
+        # own jitted decode/prefill and swapping back reuses the compilation
+        self._decode_fns: Dict[str, Any] = {}
+        self._prefill_fns: Dict[str, Any] = {}
         # telemetry
         self.tokens_emitted = 0
         self.step_log: List[Dict] = []
@@ -83,9 +121,24 @@ class ServingEngine:
         return logits, cache
 
     def _prefill_impl(self, params, batch):
-        cache_spec = self.model.cache_spec(self.rcfg, 1, self.max_seq)
+        B = batch["tokens"].shape[0]
+        cache_spec = self.model.cache_spec(self.rcfg, B, self.max_seq)
         cache = init_params(cache_spec, jax.random.PRNGKey(0))
         return self.model.prefill(params, cache, batch, self.rcfg)
+
+    def _decode_fn(self):
+        fn = self._decode_fns.get(self.variant_name)
+        if fn is None:
+            fn = jax.jit(self._decode_impl, donate_argnums=(1,))
+            self._decode_fns[self.variant_name] = fn
+        return fn
+
+    def _prefill_fn(self):
+        fn = self._prefill_fns.get(self.variant_name)
+        if fn is None:
+            fn = jax.jit(self._prefill_impl)
+            self._prefill_fns[self.variant_name] = fn
+        return fn
 
     # -- public API ---------------------------------------------------------
 
@@ -93,6 +146,7 @@ class ServingEngine:
         """Hot-swap the weight tree (CarbonCall Q8<->Q4 switch)."""
         self.params = params
         self.variant_name = variant_name
+        self.swap_count += 1
 
     def submit(self, req: Request):
         req.submit_time = self.clock()
@@ -106,28 +160,41 @@ class ServingEngine:
         return self.active > 0 or bool(self.pending)
 
     def step(self) -> List[Request]:
-        """Admit one pending request (prefill) or run one batched decode step.
-        Returns requests completed during this step."""
+        """Admit pending requests into all free slots (one batched prefill) or
+        run one batched decode step. Returns requests completed this step."""
         t0 = self.clock()
         completed: List[Request] = []
         free = [i for i, s in enumerate(self.slots) if s is None]
+        prompt_tokens = 0
         if self.pending and free:
-            req = self.pending.pop(0)
-            slot = free[0]
-            self._admit(req, slot)
-            tokens_this_step = 1
+            admitted = self._admit_batch(free)
+            tokens_this_step = len(admitted)     # one sampled token each
+            # cost basis is the *requested* prompt size: the context window is
+            # bounded by the bucket, but virtual time must charge the full
+            # prompt or oversized prompts (e.g. all-tools baselines) would get
+            # a free truncation discount relative to the analytic backend
+            prompt_tokens = sum(len(r.prompt) for r in admitted)
+            occupancy = self.active              # includes the new slots
             kind = "prefill"
         elif self.active:
+            occupancy = self.active              # before completions free slots
             tokens_this_step = self._decode_active(completed)
             kind = "decode"
         else:
             return completed
+        if self.step_cost_fn is not None and hasattr(self.clock, "advance"):
+            cost_tokens = prompt_tokens if kind == "prefill" else tokens_this_step
+            cost = float(self.step_cost_fn(kind, cost_tokens, occupancy))
+            if cost > 0.0:
+                self.clock.advance(cost)
+        for req in completed:                # completion is at end of step
+            req.done_time = self.clock()
         dt = max(self.clock() - t0, 1e-9)
         self.tokens_emitted += tokens_this_step
         self.step_log.append({
             "kind": kind, "tokens": tokens_this_step, "dt": dt,
             "tps": tokens_this_step / dt, "variant": self.variant_name,
-            "active": self.active,
+            "active": occupancy, "prompt_tokens": prompt_tokens,
         })
         return completed
 
@@ -141,20 +208,30 @@ class ServingEngine:
 
     # -- internals ----------------------------------------------------------
 
-    def _admit(self, req: Request, slot: int):
-        b = _bucket(len(req.prompt), self.prompt_buckets)
-        toks = req.prompt[-b:] if len(req.prompt) > b else \
-            [0] * (b - len(req.prompt)) + list(req.prompt)
-        batch = self._prefill_batch(np.array([toks], np.int32))
-        logits, cache1, lengths1 = self._prefill(self.params, batch)
-        # insert single-row cache into the batch cache at `slot`
-        self.cache = jax.tree.map(
-            lambda c, p: c.at[:, slot].set(p[:, 0].astype(c.dtype))
-            if c.ndim >= 2 else c, self.cache, cache1)
-        self.lengths = self.lengths.at[slot].set(int(lengths1[0]))
-        self.slots[slot] = req
-        tok = self._sample(logits, req)
-        self._emit(req, slot, int(tok[0]))
+    def _admit_batch(self, free: List[int]) -> List[Request]:
+        """Batched admission: fill every free slot this step. The prefill
+        batch is always padded to `max_batch` rows so jit specializes on the
+        prompt bucket only; pad rows are dummies whose cache is discarded."""
+        n = min(len(free), len(self.pending))
+        reqs = [self.pending.pop(0) for _ in range(n)]
+        b = _bucket(max(len(r.prompt) for r in reqs), self.prompt_buckets)
+        toks = np.zeros((self.max_batch, b), np.int32)
+        for i, r in enumerate(reqs):
+            p = r.prompt[-b:] if len(r.prompt) > b else \
+                [0] * (b - len(r.prompt)) + list(r.prompt)
+            toks[i] = p
+        batch = self._prefill_batch(toks)
+        logits, cache_n, lengths_n = self._prefill_fn()(self.params, batch)
+        lengths_n = np.asarray(lengths_n)
+        for i, (req, slot) in enumerate(zip(reqs, free)):
+            self.cache = jax.tree.map(
+                lambda c, p: c.at[:, slot].set(p[:, i].astype(c.dtype))
+                if c.ndim >= 2 else c, self.cache, cache_n)
+            self.lengths = self.lengths.at[slot].set(int(lengths_n[i]))
+            self.slots[slot] = req
+            tok = self._sample(logits[i:i + 1], req)
+            self._emit(req, slot, int(tok[0]))
+        return reqs
 
     def _prefill_batch(self, tokens):
         batch = {"tokens": jnp.asarray(tokens)}
@@ -174,8 +251,8 @@ class ServingEngine:
             if req is not None:
                 last[i, 0] = req.output[-1] if req.output else (
                     req.prompt[-1] if req.prompt else 0)
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(last), self.lengths)
+        logits, self.cache = self._decode_fn()(self.params, self.cache,
+                                               jnp.asarray(last), self.lengths)
         self.lengths = jnp.where(
             jnp.asarray([s is not None for s in self.slots]),
             jnp.minimum(self.lengths + 1, self.max_seq - 1), self.lengths)
@@ -190,8 +267,7 @@ class ServingEngine:
             self._emit(req, i, tok)
             emitted += 1
             if tok == req.eos_id or len(req.output) >= req.max_new_tokens:
-                req.done_time = self.clock()
-                completed.append(req)
+                completed.append(req)        # done_time stamped at end of step
                 self.slots[i] = None
                 self.lengths = self.lengths.at[i].set(0)
         return emitted

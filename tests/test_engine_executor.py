@@ -1,0 +1,117 @@
+"""EngineExecutor: the real ServingEngine behind the CarbonCall runtime.
+
+Parity is directional, not numeric: sim and engine share the roofline power
+model but the engine measures prompt/decode work it actually performs, so
+both backends must agree on orderings (more tools -> costlier; Q4 decode
+faster than Q8; degraded mode -> lower TPS), and a short engine-backed week
+must drive at least one live param swap from the switcher.
+"""
+import numpy as np
+import pytest
+
+from repro.common.hardware import ORIN_AGX
+from repro.core import (CarbonCallRuntime, EngineExecutor, ORIN_MODES,
+                        PAPER_MODELS, POLICIES, SimExecutor, ToolSelector,
+                        make_executor, run_week)
+from repro.data.workload import build_catalog, FunctionCallWorkload
+
+PROF = PAPER_MODELS["qwen2-7b"]
+
+
+@pytest.fixture(scope="module")
+def engine_ex():
+    return EngineExecutor(PROF, ORIN_AGX, seed=0)
+
+
+def _run(ex, **kw):
+    base = dict(n_tools_in_prompt=2, n_calls=1, selection_correct=True,
+                variant="q8", mode=ORIN_MODES[0])
+    base.update(kw)
+    return ex.run_query(**base)
+
+
+def test_make_executor_backends(engine_ex):
+    assert isinstance(make_executor("sim", PROF, ORIN_AGX), SimExecutor)
+    assert isinstance(engine_ex, EngineExecutor)
+    with pytest.raises(ValueError):
+        make_executor("nope", PROF, ORIN_AGX)
+
+
+def test_more_tools_costlier_on_both_backends(engine_ex):
+    for ex in (SimExecutor(PROF, ORIN_AGX, seed=0), engine_ex):
+        few = _run(ex, n_tools_in_prompt=1)
+        many = _run(ex, n_tools_in_prompt=3)
+        assert many.latency_s > few.latency_s
+        assert many.energy_j > few.energy_j
+
+
+def test_q4_decode_at_least_q8_tps_on_both_backends(engine_ex):
+    for ex in (SimExecutor(PROF, ORIN_AGX, seed=0), engine_ex):
+        q8 = _run(ex, variant="q8")
+        q4 = _run(ex, variant="q4")
+        dec_tps = lambda r: r.decode_tokens / r.decode_time_s
+        assert dec_tps(q4) >= dec_tps(q8)
+
+
+def test_degraded_mode_lowers_engine_tps(engine_ex):
+    fast = _run(engine_ex, mode=ORIN_MODES[0])
+    slow = _run(engine_ex, mode=ORIN_MODES[4])
+    assert slow.tps < fast.tps
+    assert slow.latency_s > fast.latency_s
+
+
+def test_run_query_emits_real_tokens(engine_ex):
+    before = engine_ex.engine.tokens_emitted
+    qe = _run(engine_ex, n_calls=2)
+    emitted = engine_ex.engine.tokens_emitted - before
+    assert qe.decode_tokens == 2 * (engine_ex.tokens_per_call
+                                    + engine_ex.eval_tokens)
+    assert emitted >= qe.decode_tokens
+    assert qe.tps > 0 and qe.energy_j > 0
+
+
+def test_live_swap_follows_requested_variant(engine_ex):
+    start = engine_ex.swap_count
+    _run(engine_ex, variant="q8")
+    _run(engine_ex, variant="q4")
+    assert engine_ex.engine.variant_name == "q4"
+    _run(engine_ex, variant="q8")
+    assert engine_ex.engine.variant_name == "q8"
+    assert engine_ex.swap_count >= start + 2
+
+
+def test_engine_week_smoke():
+    """1-day run_week(backend="engine"): non-empty WeekResult with real
+    engine-measured TPS, and the switcher performs >= 1 live swap_params."""
+    catalog = build_catalog(48, seed=0)
+    ex = EngineExecutor(PROF, ORIN_AGX, seed=0)
+    rt = CarbonCallRuntime(selector=ToolSelector(catalog), executor=ex,
+                           policy=POLICIES["carboncall"], modes=ORIN_MODES,
+                           catalog_size=len(catalog.tools), seed=0)
+    # CI ramp: clean morning, carbon-heavy rest of day -> governor is forced
+    # into the low-power modes where Q8 TPS drops below the 80% floor
+    ci = np.concatenate([np.full(36, 100.0), np.full(108, 900.0)])
+    res = run_week(rt, FunctionCallWorkload(catalog, seed=3), ci,
+                   queries_per_hour=10.0, backend="engine")
+    assert res.records
+    assert all(r.tps > 0 for r in res.records)
+    assert ex.engine.tokens_emitted > 0
+    assert ex.swap_count >= 1                        # live engine hot-swap
+    assert any(r.variant == "q4" for r in res.records)
+    # both quantized decode paths were compiled and reused, not retraced
+    assert set(ex.engine._decode_fns) == {"q8", "q4"}
+
+
+def test_use_backend_roundtrip():
+    catalog = build_catalog(32, seed=0)
+    rt = CarbonCallRuntime(selector=ToolSelector(catalog),
+                           executor=SimExecutor(PROF, ORIN_AGX, seed=0),
+                           policy=POLICIES["carboncall"], modes=ORIN_MODES,
+                           catalog_size=len(catalog.tools), seed=0)
+    ref_sim = rt.switcher.ref_tps
+    rt.use_backend("engine")
+    assert isinstance(rt.executor, EngineExecutor)
+    assert rt.switcher.ref_tps != ref_sim      # recalibrated for the backend
+    rt.use_backend("sim")
+    assert isinstance(rt.executor, SimExecutor)
+    assert rt.switcher.ref_tps == pytest.approx(ref_sim)

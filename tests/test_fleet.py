@@ -74,3 +74,52 @@ def test_router_survives_all_unhealthy(setup):
         p.healthy = False
     router = FleetRouter(pods)
     assert router.route(0) in pods          # degraded but routable
+
+
+# ---------------------------------------------------------------------------
+# router edge cases
+# ---------------------------------------------------------------------------
+
+
+def _flat_ci_pods(selector, catalog, ci_values):
+    """Pods over constant CI traces: identical mode/queue state, so the router
+    score reduces to the pod's carbon rate."""
+    pods = _pods(len(ci_values), selector, catalog,
+                 ["week1"] * len(ci_values))
+    for p, ci in zip(pods, ci_values):
+        p.ci_trace = np.full(288, float(ci))
+        p.gov_state = p.runtime.governor.init(p.ci_trace[:144])
+    return pods
+
+
+def test_router_picks_lowest_carbon_rate_pod(setup):
+    catalog, selector = setup
+    pods = _flat_ci_pods(selector, catalog, [400.0, 90.0, 700.0])
+    router = FleetRouter(pods)
+    assert router.route(0).pod_id == 1
+    # backlog on the green pod tips the score to the next-greenest
+    pods[1].queue_s = 1e6
+    assert router.route(0).pod_id == 0
+
+
+def test_router_skips_unhealthy_even_if_greenest(setup):
+    catalog, selector = setup
+    pods = _flat_ci_pods(selector, catalog, [90.0, 400.0])
+    pods[0].healthy = False
+    router = FleetRouter(pods)
+    assert router.route(0).pod_id == 1
+
+
+def test_queue_backlog_drains_over_steps(setup):
+    catalog, selector = setup
+    pods = _pods(2, selector, catalog, ["week1", "week2"])
+    pods[0].queue_s = 1500.0
+    pods[1].queue_s = 100.0
+    # no arrivals: each 10-min step retires 600s of backlog per pod
+    run_fleet(pods, FunctionCallWorkload(catalog, seed=5), n_steps=2,
+              queries_per_hour=0.0)
+    assert pods[0].queue_s == pytest.approx(300.0)
+    assert pods[1].queue_s == 0.0
+    run_fleet(pods, FunctionCallWorkload(catalog, seed=5), n_steps=1,
+              queries_per_hour=0.0)
+    assert pods[0].queue_s == 0.0

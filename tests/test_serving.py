@@ -8,7 +8,7 @@ import pytest
 from repro.config import ModelConfig, RuntimeConfig
 from repro.models import get_model
 from repro.quant import quantize_tree, dequantize, QTensor
-from repro.serving import ServingEngine, Request
+from repro.serving import ServingEngine, Request, VirtualClock
 from repro.sharding.param import init_params
 
 CFG = ModelConfig(name="tiny", family="transformer", num_layers=2, d_model=64,
@@ -92,3 +92,98 @@ def test_tps_telemetry(params):
     eng.run_until_drained()
     assert eng.tokens_emitted >= 6
     assert eng.recent_tps() > 0
+
+
+# ---------------------------------------------------------------------------
+# engine invariants (slot lifecycle, batched admission, swap, telemetry)
+# ---------------------------------------------------------------------------
+
+
+def test_slot_freed_and_lengths_zeroed_on_completion(params):
+    eng = ServingEngine(CFG, params, RCFG, max_batch=2, max_seq=64)
+    eng.submit(Request(rid=0, prompt=[4, 5, 6], max_new_tokens=3, eos_id=-1))
+    done = eng.run_until_drained()
+    assert len(done) == 1
+    assert eng.slots == [None, None]
+    assert np.asarray(eng.lengths).tolist() == [0, 0]
+    assert not eng.has_work()
+
+
+def test_batched_admission_fills_all_free_slots(params):
+    eng = ServingEngine(CFG, params, RCFG, max_batch=3, max_seq=64)
+    for r in range(5):
+        eng.submit(Request(rid=r, prompt=[2 + r, 3, 4], max_new_tokens=4,
+                           eos_id=-1))
+    eng.step()
+    # one step admitted all three free slots via a single batched prefill
+    assert eng.active == 3
+    assert len(eng.pending) == 2
+    assert eng.step_log[-1]["kind"] == "prefill"
+    assert eng.step_log[-1]["tokens"] == 3
+    assert all(len(eng.slots[i].output) == 1 for i in range(3))
+
+
+def test_batched_admission_matches_single_admission(params):
+    """Admitting two prompts in one batched prefill yields the same greedy
+    outputs as admitting them alone (padding rows don't leak)."""
+    outs = {}
+    for mb, label in [(1, "single"), (2, "batched")]:
+        eng = ServingEngine(CFG, params, RCFG, max_batch=mb, max_seq=64)
+        eng.submit(Request(rid=0, prompt=[7, 8, 9], max_new_tokens=4, eos_id=-1))
+        eng.submit(Request(rid=1, prompt=[11, 12, 13], max_new_tokens=4,
+                           eos_id=-1))
+        done = sorted(eng.run_until_drained(), key=lambda r: r.rid)
+        outs[label] = [d.output for d in done]
+    assert outs["single"] == outs["batched"]
+
+
+def test_swap_mid_stream_keeps_inflight_output_intact(params):
+    model = get_model(CFG)
+    q4 = quantize_tree(params, model.param_spec(), "q4")
+    eng = ServingEngine(CFG, params, RCFG, max_batch=2, max_seq=128)
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=8, eos_id=-1))
+    for _ in range(4):
+        eng.step()
+    req = eng.slots[0]
+    prefix = list(req.output)
+    assert len(prefix) == 4
+    eng.swap_params(q4, "q4")
+    assert eng.variant_name == "q4"
+    assert eng.swap_count == 1
+    done = eng.run_until_drained()
+    # tokens emitted before the swap are untouched; decode continued after
+    assert done[0].output[:4] == prefix
+    assert len(done[0].output) == 8
+
+
+def test_recent_tps_windowing(params):
+    eng = ServingEngine(CFG, params, RCFG, max_batch=2, max_seq=64)
+    # synthetic telemetry: old fast steps, recent slow steps, prefill ignored
+    eng.step_log = (
+        [{"kind": "decode", "tokens": 10, "dt": 0.1}] * 10      # 100 tps, old
+        + [{"kind": "prefill", "tokens": 99, "dt": 1e-6}] * 3   # never counted
+        + [{"kind": "decode", "tokens": 1, "dt": 0.1}] * 10)    # 10 tps, recent
+    assert eng.recent_tps(window=10) == pytest.approx(10.0)
+    assert eng.recent_tps(window=13) == pytest.approx(10.0)     # prefill skipped
+    full = eng.recent_tps(window=len(eng.step_log))
+    assert 10.0 < full < 100.0
+    eng.step_log = [{"kind": "prefill", "tokens": 5, "dt": 0.1}]
+    assert eng.recent_tps() == 0.0
+
+
+def test_virtual_clock_step_costs(params):
+    """With an injected VirtualClock + cost fn, step durations are exactly the
+    model-derived costs, independent of wall time."""
+    clock = VirtualClock()
+    costs = {"prefill": 0.5, "decode": 0.25}
+    eng = ServingEngine(CFG, params, RCFG, max_batch=2, max_seq=64,
+                        clock=clock,
+                        step_cost_fn=lambda kind, tok, act: costs[kind])
+    eng.submit(Request(rid=0, prompt=[3, 4, 5], max_new_tokens=4, eos_id=-1))
+    done = eng.run_until_drained()
+    # 1 prefill + 3 decode steps -> 0.5 + 3 * 0.25 of virtual time
+    assert clock() == pytest.approx(1.25)
+    assert [s["dt"] for s in eng.step_log] == pytest.approx([0.5, .25, .25, .25])
+    assert done[0].first_token_time == pytest.approx(0.0)   # stamped pre-cost
+    assert done[0].done_time == pytest.approx(1.25)
+    assert eng.recent_tps() == pytest.approx(1.0 / 0.25)
