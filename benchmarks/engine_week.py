@@ -10,10 +10,12 @@ Part 2 — a compressed engine-backed day through the full CarbonCall runtime
 (`run_week(backend="engine")`): governor -> mode, switcher -> live
 `swap_params`, selector -> real prompt lengths, real batched decode.
 
-    PYTHONPATH=src python benchmarks/engine_week.py
+    PYTHONPATH=src python benchmarks/engine_week.py [--json out.json]
 """
 from __future__ import annotations
 
+import argparse
+import json
 from collections import Counter
 
 from benchmarks.common import emit
@@ -73,5 +75,27 @@ def run(quiet: bool = False):
     return {"decode_tps": tps, "day": res, "executor": ex}
 
 
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="write results JSON (CI perf-trajectory artifact)")
+    args = ap.parse_args()
+    out = run()
+    if args.json:
+        res, ex = out["day"], out["executor"]
+        summary = {
+            "decode_tps": {str(k): v for k, v in out["decode_tps"].items()},
+            "day": {"avg_tps": res.avg_tps, "avg_latency_s": res.avg_latency,
+                    "avg_power_w": res.avg_power,
+                    "avg_carbon_g": res.avg_carbon,
+                    "queries": len(res.records),
+                    "swaps": ex.swap_count,
+                    "tokens_emitted": ex.engine.tokens_emitted},
+            "prefix_cache": ex.engine.prefix_cache_stats(),
+        }
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=2, sort_keys=True)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -4,6 +4,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
   week_eval            — Figs 2–5 (normalized T/P/TPS/CF, 5 methods x 4 weeks)
   engine_week          — engine backend: batched-decode TPS scaling + a
                          compressed day through run_week(backend="engine")
+  paged_engine         — paged KV + tool-prefix caching: prefill tokens
+                         saved vs dense, decode TPS parity per occupancy
   variant_utilization  — Fig 6 (Q8 share per weekday, weeks 3/4)
   operating_modes      — Table I + §III-C TPS/power ladder
   tool_selection       — §III-B selection quality/latency
@@ -19,7 +21,7 @@ def main() -> None:
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     from benchmarks import (engine_week, kernels_bench, operating_modes,
-                            roofline_table, tool_selection,
+                            paged_engine, roofline_table, tool_selection,
                             variant_utilization, week_eval)
     suites = {
         "operating_modes": operating_modes.run,
@@ -28,6 +30,7 @@ def main() -> None:
         "variant_utilization": variant_utilization.run,
         "week_eval": week_eval.run,
         "engine_week": engine_week.run,
+        "paged_engine": paged_engine.run,
         "roofline": roofline_table.run,
     }
     for name, fn in suites.items():

@@ -47,7 +47,8 @@ class EngineExecutor:
     def __init__(self, profile: ModelProfile, hw: HardwareSpec, *,
                  arch: str = "carboncall-qwen2-7b", seed: int = 0,
                  max_batch: int = 2, max_seq: int = 256,
-                 tokens_per_call: int = 8, eval_tokens: int = 4):
+                 tokens_per_call: int = 8, eval_tokens: int = 4,
+                 kv_layout: str = "auto"):
         self.profile = profile
         self.power_model = PowerModel(hw)
         self.seed = seed
@@ -66,7 +67,7 @@ class EngineExecutor:
         self._mode: OperatingMode = modes_for(hw)[0]
         self.engine = ServingEngine(self.cfg, self.variants["q8"], rcfg,
                                     max_batch=max_batch, max_seq=max_seq,
-                                    clock=self.clock,
+                                    kv_layout=kv_layout, clock=self.clock,
                                     step_cost_fn=self._step_cost)
         self.engine.variant_name = "q8"
         self._rid = 0
@@ -86,7 +87,9 @@ class EngineExecutor:
         batched TPS scale with occupancy under the virtual clock)."""
         pm, prof, mode = self.power_model, self.profile, self._mode
         if kind == "prefill":
-            return pm.prefill_time(max(tokens, 1), prof.n_active * 2, mode)
+            if tokens <= 0:
+                return 0.0       # full prefix-cache hit: prefill was skipped
+            return pm.prefill_time(tokens, prof.n_active * 2, mode)
         return pm.decode_time_per_token(
             prof.active_bytes(self.engine.variant_name),
             prof.kv_bytes_per_token * max(active, 1), mode)
@@ -115,10 +118,9 @@ class EngineExecutor:
             # live hot-swap: the switcher's decision lands on the engine
             self.engine.swap_params(self.variants[variant], variant)
 
-        prompt_len = QUERY_TOKENS + n_tools_in_prompt * TOKENS_PER_TOOL
         return attempt_loop(
             self.rng, success_probability(selection_correct, variant), n_calls,
-            lambda calls: self._one_attempt(prompt_len, calls, mode))
+            lambda calls: self._one_attempt(n_tools_in_prompt, calls, mode))
 
     def variant_switch_cost(self, variant: str, mode: OperatingMode):
         """(latency, energy) to load the `variant` weights; the engine is
@@ -130,7 +132,7 @@ class EngineExecutor:
 
     # -- internals -----------------------------------------------------------
 
-    def _one_attempt(self, prompt_len: int, calls: int, mode: OperatingMode):
+    def _one_attempt(self, n_tools: int, calls: int, mode: OperatingMode):
         pm = self.power_model
         eng = self.engine
         lat = SELECT_S
@@ -138,7 +140,7 @@ class EngineExecutor:
         # one engine request per attempt: prompt sized by the tool selection,
         # decode budget covering every structured call + its evaluation pass
         new_toks = calls * (self.tokens_per_call + self.eval_tokens)
-        req = Request(rid=self._rid, prompt=self._prompt_tokens(prompt_len),
+        req = Request(rid=self._rid, prompt=self._prompt_tokens(n_tools),
                       max_new_tokens=new_toks, eos_id=-1)
         self._rid += 1
         log_start = len(eng.step_log)
@@ -161,9 +163,17 @@ class EngineExecutor:
         en += pe * pm.power(mode, util=0.95)
         return lat, en, dec_tok, dec_t, wait
 
-    def _prompt_tokens(self, n: int):
-        ids = 2 + self.rng.integers(0, self.cfg.vocab_size - 2, size=max(n, 1))
-        return [int(i) for i in ids]
+    def _prompt_tokens(self, n_tools: int):
+        """Tool-description prefix + fresh query suffix. The prefix tokens are
+        a pure function of the tool count (deterministic per-toolset rng), so
+        repeated queries over the same tools re-send the same prompt prefix —
+        the redundancy the engine's prefix cache exists to absorb. The query
+        tail stays random per call, like real user queries."""
+        V = self.cfg.vocab_size - 2
+        prefix_rng = np.random.default_rng(10_000 + n_tools)
+        prefix = 2 + prefix_rng.integers(0, V, size=n_tools * TOKENS_PER_TOOL)
+        query = 2 + self.rng.integers(0, V, size=QUERY_TOKENS)
+        return [int(i) for i in prefix] + [int(i) for i in query]
 
 
 def make_executor(backend: str, profile: ModelProfile, hw: HardwareSpec, *,

@@ -1,0 +1,41 @@
+"""Model-layout wrapper + dispatch for paged decode attention.
+
+`paged_decode_attention` takes q in model layout (B, 1, N, H), reshapes to the
+kernel's (B, K, G, H) GQA form, and dispatches: Pallas kernel for bf16 pools
+when `use_pallas` is requested, otherwise the gather fallback (always for int8
+pools — the kernel is bf16-only; the fallback dequantizes after the gather).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_attention.paged_attention import paged_attention_bkgh
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "window", "interpret"))
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                           cap=0.0, window=0, interpret=True):
+    """q: (B, 1, N, H); pools: (num_blocks, bs, K, H) -> (B, 1, N, H)."""
+    B, _, N, H = q.shape
+    K = k_pool.shape[2]
+    qk = q.reshape(B, K, N // K, H)
+    out = paged_attention_bkgh(qk, k_pool, v_pool, block_tables, lengths,
+                               cap=cap, window=window, interpret=interpret)
+    return out.reshape(B, 1, N, H)
+
+
+def dispatch_paged_attention(q, pool_i, block_tables, lengths, rcfg, *,
+                             cap=0.0, window=0):
+    """Layer-level entry used by the model decode path. `pool_i` is the
+    per-layer pool dict {k, v[, k_scale, v_scale]}."""
+    if rcfg is not None and rcfg.use_pallas and "k_scale" not in pool_i:
+        return paged_decode_attention(
+            q, pool_i["k"], pool_i["v"], block_tables, lengths,
+            cap=float(cap), window=int(window), interpret=rcfg.interpret)
+    return paged_attention_ref(
+        q, pool_i["k"], pool_i["v"], block_tables, lengths,
+        cap=cap, window=window,
+        k_scale=pool_i.get("k_scale"), v_scale=pool_i.get("v_scale"))

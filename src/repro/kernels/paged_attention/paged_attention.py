@@ -1,0 +1,117 @@
+"""Paged-attention decode kernel (Pallas, TPU target).
+
+One query token per sequence attends over a KV cache scattered across a block
+pool: `block_tables` maps (sequence, logical block) -> physical block id, and
+the kernel walks a sequence's chain without ever materializing the gathered
+(B, S, K, H) view the XLA fallback builds.
+
+Grid: (batch, kv_head, max_blocks) — the block dimension is innermost and
+sequential, carrying online-softmax state (m, l, acc) in VMEM scratch exactly
+like the flash-attention kernel. The block table and per-row lengths ride in
+as scalar-prefetch operands (`pltpu.PrefetchScalarGridSpec`), so the KV index
+maps can resolve `bt[b, j]` before the DMA for step j issues — the physical
+block fetch is data-dependent but still pipelined.
+
+GQA stays no-copy: q arrives as (B, K, G, H) and each kv head's program reads
+only its own (bs, H) stripes from the pool. Blocks past a row's length are
+skipped with `pl.when` (their DMA still targets a valid pool slot — dead rows
+point at the reserved scratch block 0), so a mostly-empty cache costs only its
+occupied blocks.
+
+VMEM per step (bs=16..128, H<=256): q G x H bf16 + k/v bs x H bf16 + acc
+G x H f32 + m/l 2 x G x 128 f32 — well under the budget for any real G.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, bs: int, nb: int, scale: float, cap: float,
+            window: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    start = j * bs
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, H)
+        k = k_ref[0, :, 0].astype(jnp.float32)               # (bs, H)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, bs)
+        if cap > 0.0:
+            s = jnp.tanh(s / cap) * cap
+        G = s.shape[0]
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, (G, bs), 1)
+        ok = pos < length
+        if window > 0:
+            ok &= pos > length - 1 - window
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[:, :1]                                # (G, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[:, :1] = l_ref[:, :1] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[:, :1] = m_new
+
+    pl.when(start < length)(_compute)
+
+    @pl.when(j == nb - 1)
+    def _done():
+        l = jnp.maximum(l_ref[:, :1], 1e-37)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention_bkgh(q, k_pool, v_pool, block_tables, lengths, *,
+                         cap=0.0, window=0, interpret=True):
+    """q: (B, K, G, H); pools: (num_blocks, bs, K, H);
+    block_tables: (B, nb) int32; lengths: (B,) int32 -> (B, K, G, H)."""
+    B, K, G, H = q.shape
+    bs = k_pool.shape[1]
+    nb = block_tables.shape[1]
+    scale = 1.0 / (H ** 0.5)
+    kernel = functools.partial(_kernel, bs=bs, nb=nb, scale=scale,
+                               cap=float(cap), window=int(window))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                   # block_tables, lengths
+        grid=(B, K, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, H), lambda b, h, j, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, H),
+                         lambda b, h, j, bt, ln: (bt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, H),
+                         lambda b, h, j, bt, ln: (bt[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, H),
+                               lambda b, h, j, bt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, H), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pool, v_pool)

@@ -1,0 +1,29 @@
+"""Oracle / CPU-CI fallback: gather the block chain into a dense view and run
+the stock decode attention. Materializes (B, nb*bs, K, H) — fine for tests and
+the reduced-config engine, exactly what the Pallas kernel avoids on TPU."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_pool(pool_leaf, block_tables):
+    """(num_blocks, bs, ...) gathered via (B, nb) tables -> (B, nb*bs, ...)."""
+    g = pool_leaf[block_tables]                     # (B, nb, bs, ...)
+    B, nb, bs = g.shape[:3]
+    return g.reshape(B, nb * bs, *g.shape[3:])
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
+                        cap=0.0, window=0, k_scale=None, v_scale=None):
+    """q: (B, 1, N, H) model layout; pools: (num_blocks, bs, K, H) with
+    optional int8 + (num_blocks, bs, K) scales -> (B, 1, N, H)."""
+    from repro.models.layers import decode_attention
+    k = gather_pool(k_pool, block_tables)
+    v = gather_pool(v_pool, block_tables)
+    if k_scale is not None:
+        k = (k.astype(jnp.float32)
+             * gather_pool(k_scale, block_tables)[..., None])
+        v = (v.astype(jnp.float32)
+             * gather_pool(v_scale, block_tables)[..., None])
+        k, v = k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+    return decode_attention(q, k, v, lengths, window=window, cap=cap)

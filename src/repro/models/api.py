@@ -54,6 +54,32 @@ class Model:
         """-> (last-position logits (B,V), filled cache, lengths (B,))."""
         return self.mod.prefill(params, cache, batch, self.cfg, rcfg)
 
+    # -- paged KV contract (transformer-family only; see supports_paged) ----
+
+    def supports_paged(self) -> bool:
+        """Whether this family implements the paged cache/decode contract."""
+        return (self.cfg.family in ("transformer", "moe")
+                and (self.cfg.local_global_pattern or 1) == 1
+                and not self.cfg.use_mrope)
+
+    def paged_cache_spec(self, rcfg: RuntimeConfig, num_blocks: int,
+                         block_size: int):
+        return self.mod.paged_cache_spec(self.cfg, rcfg, num_blocks,
+                                         block_size)
+
+    def prefill_paged(self, params, batch, prefix_k, prefix_v, prefix_lens,
+                      rcfg: RuntimeConfig):
+        """-> (last-position logits (B,V), suffix (k,v) (L,B,S_suf,K,H))."""
+        return self.mod.prefill_paged(params, batch, prefix_k, prefix_v,
+                                      prefix_lens, self.cfg, rcfg)
+
+    def decode_step_paged(self, params, pool, tokens, lengths, block_tables,
+                          rcfg: RuntimeConfig, *, seq_cap: int):
+        """-> (logits (B,V), pool')."""
+        return self.mod.decode_step_paged(params, pool, tokens, lengths,
+                                          block_tables, self.cfg, rcfg,
+                                          seq_cap=seq_cap)
+
     def decode_step(self, params, cache, tokens, lengths, rcfg: RuntimeConfig,
                     positions=None):
         """-> (logits (B,V), cache')."""

@@ -167,10 +167,47 @@ def attn_decode_apply(p, x, cfg: ModelConfig, rcfg, *, cos, sin,
         new_cache["k"] = _blend_row(cache_i["k"], k1, lengths)
         new_cache["v"] = _blend_row(cache_i["v"], v1, lengths)
         k_read, v_read = new_cache["k"], new_cache["v"]
-    o = L.decode_attention(q, k_read, v_read, lengths + 1, window=window,
+    # cap at the cache width: a saturated row (lengths == Smax, new KV write
+    # dropped) anchors masks at the last *stored* key, matching the paged
+    # path's seq_cap clamp — a no-op whenever the cache still has headroom
+    Smax = cache_i["k"].shape[1]
+    o = L.decode_attention(q, k_read, v_read,
+                           jnp.minimum(lengths + 1, Smax), window=window,
                            cap=cfg.attn_logit_softcap)
     o = o.reshape(B, 1, -1)
     return dense(o, p["wo"], rcfg), new_cache
+
+
+def attn_decode_paged_apply(p, x, cfg: ModelConfig, rcfg, *, cos, sin,
+                            pool_i, lengths, block_tables, seq_cap: int,
+                            window=0):
+    """One-token decode against a per-layer paged pool dict {k, v[, k_scale,
+    v_scale]} of shape (num_blocks, bs, K, H). The new token's KV is scattered
+    into the physical block holding position `lengths[b]` (resolved through
+    `block_tables`); rows at or past `seq_cap` — and dead rows, whose tables
+    point at the reserved scratch block 0 — drop their write there, matching
+    the dense path's out-of-range no-op. Reads go through the paged-attention
+    dispatch (Pallas kernel on TPU, gather fallback on CPU / int8 pools)."""
+    B = x.shape[0]
+    q, k, v = qkv_proj(p, x, cfg, rcfg, cos, sin)
+    k1, v1 = k[:, 0], v[:, 0]                                # (B, K, H)
+    bs = pool_i["k"].shape[1]
+    nb = block_tables.shape[1]
+    writable = lengths < seq_cap
+    blk_idx = jnp.clip(lengths // bs, 0, nb - 1)
+    bid = jnp.take_along_axis(block_tables, blk_idx[:, None], axis=1)[:, 0]
+    bid = jnp.where(writable, bid, 0)                        # scratch block
+    off = jnp.where(writable, lengths % bs, 0)
+    from repro.models.transformer import quantize_kv_for_cache
+    entry = quantize_kv_for_cache("k_scale" in pool_i, k1, v1)
+    new_pool = {key: pool_i[key].at[bid, off].set(
+        val.astype(pool_i[key].dtype)) for key, val in entry.items()}
+    from repro.kernels.paged_attention.ops import dispatch_paged_attention
+    read_len = jnp.minimum(lengths + 1, seq_cap)
+    o = dispatch_paged_attention(q, new_pool, block_tables, read_len, rcfg,
+                                 cap=cfg.attn_logit_softcap, window=window)
+    o = o.reshape(B, 1, -1)
+    return dense(o, p["wo"], rcfg), new_pool
 
 
 def block_norms_spec(cfg: ModelConfig, lead=(), lead_log=()):

@@ -195,6 +195,53 @@ def attention(q, k, v, rcfg, **kw):
     return chunked_attention(q, k, v, chunk=chunk, **kw)
 
 
+def prefix_attention(q, k_pre, v_pre, k_suf, v_suf, prefix_lens, q_positions,
+                     *, window=0, cap=0.0):
+    """Suffix attention over a cached prefix + freshly-projected suffix KV.
+
+    Used by the paged engine's prefix-cache-hit prefill: the prompt's first
+    `prefix_lens[b]` positions were already prefilled (their KV is gathered
+    from the block pool into `k_pre`/`v_pre`), so only the suffix runs through
+    the model and attends over [prefix, suffix] jointly.
+
+      q, k_suf, v_suf: (B, S, N|K, H) at absolute positions `q_positions` (S,)
+      k_pre, v_pre:    (B, P, K, H) at absolute positions 0..P-1, valid where
+                       the position is < prefix_lens[b]
+      prefix_lens:     (B,) cached tokens per row (0 = no cached prefix)
+
+    Rows are left-padded: suffix slots whose absolute position falls inside
+    the row's cached prefix are pad — they are masked out as *keys* (the
+    prefix blocks already cover those positions) and their query outputs are
+    garbage the caller discards. Math mirrors `naive_attention` (f32 einsum,
+    softcap, additive NEG_INF bias) so a cache-hit prefill stays token-exact
+    with the dense full-row prefill under greedy decoding.
+    """
+    B, S, N, H = q.shape
+    P = k_pre.shape[1]
+    k = jnp.concatenate([repeat_kv(k_pre, N), repeat_kv(k_suf, N)], axis=1)
+    v = jnp.concatenate([repeat_kv(v_pre, N), repeat_kv(v_suf, N)], axis=1)
+    qf = q.astype(jnp.float32)
+    logits = jnp.einsum("bqnh,bsnh->bnqs", qf, k.astype(jnp.float32)) \
+        / jnp.sqrt(H).astype(jnp.float32)
+    logits = softcap(logits, cap)
+    q_pos = q_positions                                       # (S,)
+    k_pos = jnp.concatenate([jnp.arange(P), q_positions])     # (P+S,)
+    d = q_pos[:, None] - k_pos[None, :]                       # (S, P+S)
+    ok = d >= 0                                               # causal
+    if window > 0:
+        ok &= d < window
+    ok = jnp.broadcast_to(ok[None], (B, S, P + S))
+    in_prefix = (k_pos[None, None, :] < prefix_lens[:, None, None])
+    is_pre = jnp.concatenate([jnp.ones((P,), bool), jnp.zeros((S,), bool)])
+    # prefix keys count only below the row's cached length; suffix keys only
+    # at or above it (their positions overlap the prefix region in pad slots)
+    ok &= jnp.where(is_pre[None, None, :], in_prefix, ~in_prefix)
+    logits += jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)[:, None]
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bnqs,bsnh->bqnh", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Attention (decode: one query position against a cache)
 # ---------------------------------------------------------------------------

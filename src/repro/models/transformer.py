@@ -159,6 +159,34 @@ def cache_spec(cfg: ModelConfig, rcfg: RuntimeConfig, batch: int, max_seq: int):
     }
 
 
+def paged_cache_spec(cfg: ModelConfig, rcfg: RuntimeConfig, num_blocks: int,
+                     block_size: int):
+    """Paged pool layout: (layers, num_blocks, block_size, K, H) per leaf.
+    Blocks are position-agnostic (any block can hold any 16-token stripe of
+    any sequence), so only the head dim carries a sharding axis — the block
+    dim is the unit of allocation and must stay whole per shard."""
+    Lc, K, H = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    log = ("layers", None, None, "cache_heads", None)
+    slog = ("layers", None, None, "cache_heads")
+    if rcfg.kv_cache_dtype == "int8":
+        return {
+            "k": ParamDef((Lc, num_blocks, block_size, K, H), log,
+                          init="zeros", dtype="int8"),
+            "v": ParamDef((Lc, num_blocks, block_size, K, H), log,
+                          init="zeros", dtype="int8"),
+            "k_scale": ParamDef((Lc, num_blocks, block_size, K), slog,
+                                init="zeros", dtype="fp32"),
+            "v_scale": ParamDef((Lc, num_blocks, block_size, K), slog,
+                                init="zeros", dtype="fp32"),
+        }
+    return {
+        "k": ParamDef((Lc, num_blocks, block_size, K, H), log,
+                      init="zeros", dtype="bf16"),
+        "v": ParamDef((Lc, num_blocks, block_size, K, H), log,
+                      init="zeros", dtype="bf16"),
+    }
+
+
 def dequant_cache(cache_i):
     """Per-layer cache dict -> (k, v) bf16 views (XLA fuses the dequant into
     the attention matmuls; HBM traffic stays int8)."""
@@ -289,6 +317,97 @@ def prefill(params, cache, batch, cfg: ModelConfig, rcfg: RuntimeConfig):
     logits = unembed(params, h[:, -1:, :], cfg, rcfg)[:, 0]
     lengths = jnp.full((k.shape[1],), S, jnp.int32)
     return logits, new_cache, lengths
+
+
+def prefill_paged(params, batch, prefix_k, prefix_v, prefix_lens,
+                  cfg: ModelConfig, rcfg: RuntimeConfig):
+    """Suffix prefill over a cached prompt prefix (paged prefix-cache hit).
+
+    batch["tokens"]: (B, S_suf) left-padded suffix rows — row b's real tokens
+    sit in the last (total - prefix_lens[b]) slots of the bucket-wide suffix.
+    batch["positions"]: (S_suf,) absolute positions, uniform across rows
+    (every row in an admission batch is padded to the same total length).
+    prefix_k/v: (L, B, P, K, H) prefix KV gathered (and dequantized) from the
+    block pool, valid where the absolute position is < prefix_lens[b].
+
+    Returns (last-position logits (B, V), suffix (k, v) stacks each
+    (L, B, S_suf, K, H) for the engine to scatter into the pool). Restricted
+    to pattern-1, non-M-RoPE families — the engine falls back to the dense
+    layout otherwise.
+    """
+    assert _pattern(cfg) == 1, "paged prefill: local/global patterns unsupported"
+    assert not cfg.use_mrope, "paged prefill: M-RoPE unsupported"
+    x = embed_tokens(params, batch, cfg)
+    Bb, S, _ = x.shape
+    q_pos = batch["positions"]
+    cos, sin = rope_for(cfg, q_pos[None, :], Bb, S)
+
+    def body(x, xs):
+        p_i, k_pre, v_pre = xs
+        x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+        n = p_i["norms"]
+        h = L.rms_norm(x, n["pre_attn"], cfg.norm_eps)
+        q, k, v = B_.qkv_proj(p_i["attn"], h, cfg, rcfg, cos, sin)
+        o = L.prefix_attention(q, k_pre, v_pre, k, v, prefix_lens, q_pos,
+                               window=window_for(cfg, 0),
+                               cap=cfg.attn_logit_softcap)
+        a = dense(o.reshape(Bb, S, -1), p_i["attn"]["wo"], rcfg)
+        if "post_attn" in n:
+            a = L.rms_norm(a, n["post_attn"], cfg.norm_eps)
+        x = x + a
+        h = L.rms_norm(x, n["pre_mlp"], cfg.norm_eps)
+        if cfg.family == "moe":
+            m, _ = moe_apply(p_i["moe"], h, cfg, rcfg)
+        else:
+            m = B_.mlp_apply(p_i["mlp"], h, cfg, rcfg)
+        if "post_mlp" in n:
+            m = L.rms_norm(m, n["post_mlp"], cfg.norm_eps)
+        x = x + m
+        return x, (k, v)
+
+    x, (k_suf, v_suf) = jax.lax.scan(body, x,
+                                     (params["layers"], prefix_k, prefix_v))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, x[:, -1:, :], cfg, rcfg)[:, 0]
+    return logits, (k_suf, v_suf)
+
+
+def decode_step_paged(params, pool, tokens, lengths, block_tables,
+                      cfg: ModelConfig, rcfg: RuntimeConfig, *, seq_cap: int):
+    """One token per row against the paged block pool. tokens: (B,1);
+    lengths: (B,) logical fill counts; block_tables: (B, nb) physical block
+    ids per logical block (0 = reserved scratch). `seq_cap` is the engine's
+    max_seq — writes at or past it are dropped, matching the dense path."""
+    assert _pattern(cfg) == 1 and not cfg.use_mrope
+    x = embed_tokens(params, {"tokens": tokens}, cfg)
+    Bb = x.shape[0]
+    cos, sin = rope_for(cfg, lengths[:, None], Bb, 1)
+
+    def body(x, xs):
+        p_i, c_i = xs
+        n = p_i["norms"]
+        h = L.rms_norm(x, n["pre_attn"], cfg.norm_eps)
+        a, c_i2 = B_.attn_decode_paged_apply(
+            p_i["attn"], h, cfg, rcfg, cos=cos, sin=sin, pool_i=c_i,
+            lengths=lengths, block_tables=block_tables, seq_cap=seq_cap,
+            window=window_for(cfg, 0))
+        if "post_attn" in n:
+            a = L.rms_norm(a, n["post_attn"], cfg.norm_eps)
+        x = x + a
+        h = L.rms_norm(x, n["pre_mlp"], cfg.norm_eps)
+        if cfg.family == "moe":
+            m, _ = moe_apply(p_i["moe"], h, cfg, rcfg)
+        else:
+            m = B_.mlp_apply(p_i["mlp"], h, cfg, rcfg)
+        if "post_mlp" in n:
+            m = L.rms_norm(m, n["post_mlp"], cfg.norm_eps)
+        x = x + m
+        return x, c_i2
+
+    x, new_pool = jax.lax.scan(body, x, (params["layers"], pool))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, x, cfg, rcfg)[:, 0]
+    return logits, new_pool
 
 
 def decode_step(params, cache, tokens, lengths, cfg: ModelConfig,

@@ -1,4 +1,6 @@
+from repro.serving.block_pool import BlockPool, PrefixCache, PrefixEntry
 from repro.serving.engine import ServingEngine, Request, VirtualClock
 from repro.serving.sampler import sample_tokens
 
-__all__ = ["ServingEngine", "Request", "VirtualClock", "sample_tokens"]
+__all__ = ["BlockPool", "PrefixCache", "PrefixEntry", "ServingEngine",
+           "Request", "VirtualClock", "sample_tokens"]

@@ -1,21 +1,40 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engine with a paged KV cache + prefix caching.
 
-Fixed-size slot model (vLLM-style at the granularity this framework needs):
-`max_batch` decode slots share one batched cache; new requests prefill into
-free slots (prompts padded to a bucket so jit reuse is bounded); every step()
-decodes all active slots in one batched call. Completed rows free their slot
-immediately — no head-of-line blocking on long generations.
+Slot model (vLLM-style at the granularity this framework needs): `max_batch`
+decode slots; new requests prefill into free slots (prompts padded to a bucket
+so jit reuse is bounded); every step() decodes all active slots in one batched
+call. Completed rows free their slot immediately — no head-of-line blocking.
+
+KV layouts:
+  * "paged" (default for transformer-family models): KV lives in a block pool
+    of `block_size`-token blocks; each slot maps logical positions to physical
+    blocks through a block table. Blocks are refcounted (`BlockPool`) and the
+    tool-description prompt prefixes that dominate CarbonCall's function-call
+    workload are cached (`PrefixCache`): admission hashes the padded prompt at
+    every block boundary, reuses already-prefilled blocks copy-on-write, and
+    runs the model only over the non-cached suffix. Cache hits therefore skip
+    real prefill compute AND are charged to `step_cost_fn` only for the
+    suffix, so repeated tool prefixes show up as energy/carbon savings in the
+    engine-backed week simulation. Decode reads go through the paged-attention
+    kernel (Pallas on TPU, gather fallback on CPU / int8 pools).
+  * "dense": the original fixed (max_batch, max_seq) stripe — kept for
+    non-transformer families and as the parity oracle for the paged path.
 
 Admission is batched: one step admits up to *all* free slots through a single
-padded prefill call (admission batch always padded to `max_batch` rows, so the
-jit cache holds one prefill executable per prompt bucket, not per admission
-count). Decode/prefill executables are kept in per-variant caches so Q8<->Q4
-hot swaps reuse their compilations instead of retracing.
+padded prefill call (always padded to `max_batch` rows, so the jit cache holds
+one executable per prompt/suffix bucket, not per admission count).
+Decode/prefill executables are kept in per-variant caches so Q8<->Q4 hot
+swaps reuse their compilations instead of retracing.
 
 The engine is deliberately params-agnostic: `swap_params()` installs a new
 weight tree (e.g. the Q4 variant) between steps, which is exactly the hot-swap
 CarbonCall's TPS governor performs. Caches are untouched by a swap — both
-variants share the same cache layout (weight-only quantization).
+variants share the same (paged or dense) cache layout (weight-only
+quantization), so Q8 and Q4 serve from one block pool across hot swaps.
+Prefix-cache *entries* are salted by variant, though: each variant's KV
+projections differ, so a post-swap admission recomputes (and re-caches) its
+prefix under the live weights instead of serving stale-variant KV/logits —
+and swapping back re-hits the previous variant's still-resident entries.
 
 Timebase: `clock` defaults to wall time, but tests and the engine-backed
 carbon simulation inject a `VirtualClock` plus a `step_cost_fn`; each step
@@ -34,6 +53,7 @@ import numpy as np
 
 from repro.config import ModelConfig, RuntimeConfig
 from repro.models import get_model
+from repro.serving.block_pool import BlockPool, PrefixCache
 from repro.serving.sampler import sample_tokens
 from repro.sharding.param import init_params
 
@@ -76,10 +96,22 @@ def _bucket(n: int, buckets) -> int:
     return buckets[-1]
 
 
+def _pow2(n: int, cap: int) -> int:
+    """Round up to a power of two, capped — bounds jit executable counts for
+    shapes derived from near-continuous quantities (suffix widths, prefix
+    block counts, scatter index lengths)."""
+    p = 1
+    while p < n:
+        p <<= 1
+    return min(p, cap)
+
+
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, rcfg: RuntimeConfig, *,
                  max_batch: int = 4, max_seq: int = 256,
                  prompt_buckets=(32, 64, 128),
+                 kv_layout: str = "auto", block_size: int = 16,
+                 num_blocks: Optional[int] = None,
                  clock: Callable[[], float] = time.monotonic,
                  step_cost_fn: Optional[Callable[[str, int, int], float]] = None):
         self.cfg = cfg
@@ -88,18 +120,55 @@ class ServingEngine:
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
-        self.prompt_buckets = tuple(b for b in prompt_buckets if b < max_seq)
+        # always include a terminal bucket of max_seq: max_seq <= the smallest
+        # configured bucket used to leave an empty tuple (IndexError at
+        # admission), and prompts longer than the largest bucket were silently
+        # over-truncated to it instead of to the full context window
+        self.prompt_buckets = tuple(sorted(
+            {b for b in prompt_buckets if b < max_seq} | {max_seq}))
         self.clock = clock
         # step_cost_fn(kind, tokens, active) -> seconds; with a VirtualClock it
-        # sets the measured duration of each step (kind "prefill" passes total
-        # prompt tokens admitted, "decode" passes tokens emitted this step).
+        # sets the measured duration of each step (kind "prefill" passes the
+        # prompt tokens actually computed this step — prefix-cache hits are
+        # excluded, so cached tool prefixes cost ~0 virtual time/energy —
+        # "decode" passes tokens emitted this step).
         self.step_cost_fn = step_cost_fn
         self.variant_name = "bf16"
         self.swap_count = 0
 
-        cache_spec = self.model.cache_spec(rcfg, max_batch, max_seq)
-        self.cache = init_params(cache_spec, jax.random.PRNGKey(0))
-        self.lengths = jnp.zeros((max_batch,), jnp.int32)
+        if kv_layout not in ("auto", "paged", "dense"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}; expected "
+                             "'auto', 'paged' or 'dense'")
+        if kv_layout == "auto":
+            kv_layout = "paged" if self.model.supports_paged() else "dense"
+        if kv_layout == "paged" and not self.model.supports_paged():
+            raise ValueError(f"{cfg.name}: family {cfg.family!r} does not "
+                             "implement the paged KV contract")
+        self.kv_layout = kv_layout
+        if kv_layout == "paged":
+            self.block_size = block_size
+            self.blocks_per_slot = -(-max_seq // block_size)
+            if num_blocks is None:
+                # all slots full + one transient CoW block per slot + one
+                # slot's worth of slack for cached prefixes + scratch block 0
+                num_blocks = ((max_batch + 1) * self.blocks_per_slot
+                              + max_batch + 2)
+            pool_spec = self.model.paged_cache_spec(rcfg, num_blocks,
+                                                    block_size)
+            self.pool = init_params(pool_spec, jax.random.PRNGKey(0))
+            self.block_pool = BlockPool(num_blocks, block_size)
+            self.prefix_cache = PrefixCache(self.block_pool)
+            self.block_tables = np.zeros((max_batch, self.blocks_per_slot),
+                                         np.int32)
+            self.slot_blocks: List[List[int]] = [[] for _ in range(max_batch)]
+            self.slot_end = [0] * max_batch   # worst-case final fill per slot
+            self.lengths = np.zeros((max_batch,), np.int32)
+            self.cache = None
+            self.cow_count = 0
+        else:
+            cache_spec = self.model.cache_spec(rcfg, max_batch, max_seq)
+            self.cache = init_params(cache_spec, jax.random.PRNGKey(0))
+            self.lengths = jnp.zeros((max_batch,), jnp.int32)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.pending: List[Request] = []
         self.key = jax.random.PRNGKey(42)
@@ -109,8 +178,17 @@ class ServingEngine:
         # own jitted decode/prefill and swapping back reuses the compilation
         self._decode_fns: Dict[str, Any] = {}
         self._prefill_fns: Dict[str, Any] = {}
+        self._prefill_prefix_fns: Dict[str, Any] = {}
+        self._scatter_cache_fn = jax.jit(self._scatter_impl,
+                                         donate_argnums=(0,))
+        self._scatter_kv_fn = jax.jit(self._scatter_kv_impl,
+                                      donate_argnums=(0,))
+        self._copy_block_fn = jax.jit(self._copy_block_impl,
+                                      donate_argnums=(0,))
         # telemetry
         self.tokens_emitted = 0
+        self.prefill_tokens_total = 0
+        self.prefill_tokens_saved = 0
         self.step_log: List[Dict] = []
 
     # -- jitted bodies ------------------------------------------------------
@@ -120,16 +198,63 @@ class ServingEngine:
                                                self.rcfg)
         return logits, cache
 
+    def _decode_paged_impl(self, params, pool, tokens, lengths, block_tables):
+        return self.model.decode_step_paged(params, pool, tokens, lengths,
+                                            block_tables, self.rcfg,
+                                            seq_cap=self.max_seq)
+
     def _prefill_impl(self, params, batch):
         B = batch["tokens"].shape[0]
         cache_spec = self.model.cache_spec(self.rcfg, B, self.max_seq)
         cache = init_params(cache_spec, jax.random.PRNGKey(0))
         return self.model.prefill(params, cache, batch, self.rcfg)
 
+    def _prefill_prefix_impl(self, params, pool, batch, prefix_bids,
+                             prefix_lens):
+        """Gather the cached prefix blocks into a dense per-row view and run
+        the suffix-only prefill against it."""
+        nbp = prefix_bids.shape[1]
+
+        def view(key):
+            g = pool[key][:, prefix_bids]        # (L, B, nbp, bs, ...)
+            return g.reshape(g.shape[0], g.shape[1], nbp * self.block_size,
+                             *g.shape[4:])
+
+        k_pre, v_pre = view("k"), view("v")
+        if "k_scale" in pool:
+            k_pre = (k_pre.astype(jnp.float32)
+                     * view("k_scale")[..., None]).astype(jnp.bfloat16)
+            v_pre = (v_pre.astype(jnp.float32)
+                     * view("v_scale")[..., None]).astype(jnp.bfloat16)
+        return self.model.prefill_paged(params, batch, k_pre, v_pre,
+                                        prefix_lens, self.rcfg)
+
+    def _scatter_impl(self, pool, entry, dst, src_b, src_s):
+        """Write entry[key][:, src_b[i], src_s[i]] into flat pool position
+        dst[i] (= block_id * block_size + offset) for every i, per leaf."""
+        out = {}
+        for key, leaf in pool.items():
+            nb, bs = leaf.shape[1], leaf.shape[2]
+            flat = leaf.reshape(leaf.shape[0], nb * bs, *leaf.shape[3:])
+            vals = entry[key][:, src_b, src_s].astype(leaf.dtype)
+            out[key] = flat.at[:, dst].set(vals).reshape(leaf.shape)
+        return out
+
+    def _scatter_kv_impl(self, pool, k, v, dst, src_b, src_s):
+        from repro.models.transformer import quantize_kv_for_cache
+        entry = quantize_kv_for_cache("k_scale" in pool, k, v)
+        return self._scatter_impl(pool, entry, dst, src_b, src_s)
+
+    def _copy_block_impl(self, pool, dst, src):
+        return {key: leaf.at[:, dst].set(leaf[:, src])
+                for key, leaf in pool.items()}
+
     def _decode_fn(self):
         fn = self._decode_fns.get(self.variant_name)
         if fn is None:
-            fn = jax.jit(self._decode_impl, donate_argnums=(1,))
+            impl = (self._decode_paged_impl if self.kv_layout == "paged"
+                    else self._decode_impl)
+            fn = jax.jit(impl, donate_argnums=(1,))
             self._decode_fns[self.variant_name] = fn
         return fn
 
@@ -138,6 +263,13 @@ class ServingEngine:
         if fn is None:
             fn = jax.jit(self._prefill_impl)
             self._prefill_fns[self.variant_name] = fn
+        return fn
+
+    def _prefill_prefix_fn(self):
+        fn = self._prefill_prefix_fns.get(self.variant_name)
+        if fn is None:
+            fn = jax.jit(self._prefill_prefix_impl)
+            self._prefill_prefix_fns[self.variant_name] = fn
         return fn
 
     # -- public API ---------------------------------------------------------
@@ -159,21 +291,29 @@ class ServingEngine:
     def has_work(self) -> bool:
         return self.active > 0 or bool(self.pending)
 
+    def prefix_cache_stats(self) -> Dict[str, int]:
+        if self.kv_layout != "paged":
+            return {}
+        return {"hits": self.prefix_cache.hits,
+                "misses": self.prefix_cache.misses,
+                "entries": len(self.prefix_cache.entries),
+                "cow": self.cow_count,
+                "free_blocks": self.block_pool.num_free,
+                "prefill_tokens_total": self.prefill_tokens_total,
+                "prefill_tokens_saved": self.prefill_tokens_saved}
+
     def step(self) -> List[Request]:
         """Admit pending requests into all free slots (one batched prefill) or
         run one batched decode step. Returns requests completed this step."""
         t0 = self.clock()
         completed: List[Request] = []
         free = [i for i, s in enumerate(self.slots) if s is None]
-        prompt_tokens = 0
+        admitted: List[Request] = []
+        charged = cached = 0
         if self.pending and free:
-            admitted = self._admit_batch(free)
+            admitted, charged, cached = self._admit_batch(free)
+        if admitted:
             tokens_this_step = len(admitted)     # one sampled token each
-            # cost basis is the *requested* prompt size: the context window is
-            # bounded by the bucket, but virtual time must charge the full
-            # prompt or oversized prompts (e.g. all-tools baselines) would get
-            # a free truncation discount relative to the analytic backend
-            prompt_tokens = sum(len(r.prompt) for r in admitted)
             occupancy = self.active              # includes the new slots
             kind = "prefill"
         elif self.active:
@@ -181,9 +321,16 @@ class ServingEngine:
             tokens_this_step = self._decode_active(completed)
             kind = "decode"
         else:
+            if self.pending:
+                raise RuntimeError(
+                    "paged KV pool exhausted: cannot admit any pending "
+                    "request with an idle engine — raise num_blocks")
             return completed
         if self.step_cost_fn is not None and hasattr(self.clock, "advance"):
-            cost_tokens = prompt_tokens if kind == "prefill" else tokens_this_step
+            # cost basis is the *computed* prompt work: the full requested
+            # prompt size (no free truncation discount vs the analytic
+            # backend) minus tokens served from the prefix cache
+            cost_tokens = charged if kind == "prefill" else tokens_this_step
             cost = float(self.step_cost_fn(kind, cost_tokens, occupancy))
             if cost > 0.0:
                 self.clock.advance(cost)
@@ -194,7 +341,8 @@ class ServingEngine:
         self.step_log.append({
             "kind": kind, "tokens": tokens_this_step, "dt": dt,
             "tps": tokens_this_step / dt, "variant": self.variant_name,
-            "active": occupancy, "prompt_tokens": prompt_tokens,
+            "active": occupancy, "prompt_tokens": charged,
+            "cached_tokens": cached,
         })
         return completed
 
@@ -206,20 +354,19 @@ class ServingEngine:
             done.extend(self.step())
         return done
 
-    # -- internals ----------------------------------------------------------
+    # -- admission ----------------------------------------------------------
 
-    def _admit_batch(self, free: List[int]) -> List[Request]:
-        """Batched admission: fill every free slot this step. The prefill
-        batch is always padded to `max_batch` rows so jit specializes on the
-        prompt bucket only; pad rows are dummies whose cache is discarded."""
+    def _admit_batch(self, free: List[int]):
+        """Batched admission: fill free slots this step. Returns
+        (admitted requests, prompt tokens charged, prompt tokens cached)."""
+        if self.kv_layout == "paged":
+            return self._admit_batch_paged(free)
         n = min(len(free), len(self.pending))
         reqs = [self.pending.pop(0) for _ in range(n)]
         b = _bucket(max(len(r.prompt) for r in reqs), self.prompt_buckets)
         toks = np.zeros((self.max_batch, b), np.int32)
         for i, r in enumerate(reqs):
-            p = r.prompt[-b:] if len(r.prompt) > b else \
-                [0] * (b - len(r.prompt)) + list(r.prompt)
-            toks[i] = p
+            toks[i] = self._padded_row(r.prompt, b)
         batch = self._prefill_batch(toks)
         logits, cache_n, lengths_n = self._prefill_fn()(self.params, batch)
         lengths_n = np.asarray(lengths_n)
@@ -231,7 +378,193 @@ class ServingEngine:
             self.slots[slot] = req
             tok = self._sample(logits[i:i + 1], req)
             self._emit(req, slot, int(tok[0]))
-        return reqs
+        return reqs, sum(len(r.prompt) for r in reqs), 0
+
+    def _admit_batch_paged(self, free: List[int]):
+        """Paged admission: look up each prompt's longest cached prefix chain,
+        share those blocks (copy-on-write protected), allocate fresh blocks
+        for the rest, and prefill only the non-cached suffixes. Requests that
+        cannot get blocks even after cache eviction stay queued (FIFO)."""
+        bs = self.block_size
+        b = _bucket(max(len(r.prompt)
+                        for r in self.pending[:len(free)]),
+                    self.prompt_buckets)
+        nb_prompt = -(-b // bs)
+        # decode-growth debt of the slots already active: blocks their
+        # generations may still claim (plus one CoW allowance each) — new
+        # admissions must never eat into it, or decode deadlocks mid-stream
+        outstanding = sum(
+            max(0, -(-self.slot_end[s] // bs) - len(self.slot_blocks[s])) + 1
+            for s, r_ in enumerate(self.slots) if r_ is not None)
+        rows = []          # admission records
+        while self.pending and len(rows) < len(free):
+            req = self.pending[0]
+            row = self._padded_row(req.prompt, b)
+            hit = self.prefix_cache.lookup(row, salt=self.variant_name)
+            cached_len = hit.cached_len if hit else 0
+            cached_blocks = list(hit.blocks) if hit else []
+            if hit and cached_len == b and hit.last_logits is None:
+                # whole-row match against an interior boundary of a longer
+                # cached row: no last-position logits stored, so keep the
+                # final stripe out of the chain and recompute it (which also
+                # upgrades the entry with logits for future full hits)
+                cached_len -= bs if b % bs == 0 else b % bs
+                cached_blocks = cached_blocks[:-1]
+            # hold refs on the cached chain BEFORE allocating: eviction under
+            # pressure must not free blocks this admission is about to share
+            for bid in cached_blocks:
+                self.block_pool.incref(bid)
+            end = min(b + req.max_new_tokens, self.max_seq)
+            growth = max(0, -(-end // bs) - nb_prompt) + 1
+            fresh = self._alloc_blocks(nb_prompt - len(cached_blocks))
+            if fresh is not None:
+                # this request's full decode-growth debt must fit alongside
+                # everything already promised, or it is deferred — admission
+                # over-commitment is the only way decode can deadlock
+                reserve = outstanding + growth
+                while (self.block_pool.num_free < reserve
+                       and self.prefix_cache.evict_lru()):
+                    pass
+                if self.block_pool.num_free < reserve:
+                    for bid in fresh:
+                        self.block_pool.decref(bid)
+                    fresh = None
+            if fresh is None:
+                for bid in cached_blocks:
+                    self.block_pool.decref(bid)
+                break
+            self.pending.pop(0)
+            outstanding += growth
+            rows.append({"req": req, "row": row, "hit": hit, "end": end,
+                         "cached_len": cached_len,
+                         "blocks": cached_blocks + fresh})
+            # hit/miss accounting only for *completed* admissions — a
+            # deferred request retries its lookup on every later step
+            if cached_len > 0:
+                self.prefix_cache.hits += 1
+            else:
+                self.prefix_cache.misses += 1
+        if not rows:
+            return [], 0, 0
+
+        full = [r for r in rows if r["cached_len"] == b]
+        compute = [r for r in rows if r["cached_len"] < b]
+        if compute:
+            if all(r["cached_len"] == 0 for r in compute):
+                logits_c = self._prefill_cold(compute, b)
+            else:
+                logits_c = self._prefill_suffix(compute, b)
+            for i, r in enumerate(compute):
+                r["logits"] = np.asarray(logits_c[i])
+                self.prefix_cache.insert(r["row"], r["blocks"],
+                                         last_logits=r["logits"],
+                                         salt=self.variant_name)
+        for r in full:
+            r["logits"] = r["hit"].last_logits
+
+        charged = cached = 0
+        for r, slot in zip(rows, free):
+            req = r["req"]
+            pad = b - min(len(req.prompt), b)
+            cached_real = max(0, r["cached_len"] - pad)
+            charged += max(0, len(req.prompt) - cached_real)
+            cached += cached_real
+            self.slot_blocks[slot] = list(r["blocks"])
+            self.slot_end[slot] = r["end"]
+            self.block_tables[slot] = 0
+            self.block_tables[slot, :len(r["blocks"])] = r["blocks"]
+            self.lengths[slot] = b
+            self.slots[slot] = req
+            tok = self._sample(r["logits"][None, :], req)
+            self._emit(req, slot, int(tok[0]))
+        self.prefill_tokens_total += charged + cached
+        self.prefill_tokens_saved += cached
+        return [r["req"] for r in rows], charged, cached
+
+    def _prefill_cold(self, compute, b: int):
+        """No cached prefix anywhere in the batch: run the stock full-row
+        prefill and scatter every position into the rows' blocks."""
+        toks = np.zeros((self.max_batch, b), np.int32)
+        for i, r in enumerate(compute):
+            toks[i] = r["row"]
+        logits, cache_n, _ = self._prefill_fn()(self.params,
+                                                self._prefill_batch(toks))
+        dst, src_b, src_s = [], [], []
+        for i, r in enumerate(compute):
+            for p in range(b):
+                dst.append(r["blocks"][p // self.block_size]
+                           * self.block_size + p % self.block_size)
+                src_b.append(i)
+                src_s.append(p)
+        self.pool = self._scatter_cache_fn(
+            self.pool, cache_n, *self._scatter_idx(dst, src_b, src_s))
+        return logits
+
+    def _prefill_suffix(self, compute, b: int):
+        """At least one row has a cached prefix: gather the prefix KV views
+        and run the model over the suffixes only. The suffix width and the
+        prefix-view block count are rounded up to powers of two (capped at
+        the bucket / slot capacity) so the executable cache stays
+        O(log^2 max_seq) per variant instead of one entry per cached-length
+        combination — the extra columns are fully masked, so rounding is
+        numerically free."""
+        bs = self.block_size
+        s_suf = _pow2(b - min(r["cached_len"] for r in compute), b)
+        p_len = max(r["cached_len"] for r in compute)
+        nbp = _pow2(-(-p_len // bs), self.blocks_per_slot)
+        toks = np.zeros((self.max_batch, s_suf), np.int32)
+        bids = np.zeros((self.max_batch, nbp), np.int32)
+        plens = np.zeros((self.max_batch,), np.int32)
+        for i, r in enumerate(compute):
+            cl = r["cached_len"]
+            suf = r["row"][cl:]
+            toks[i, s_suf - len(suf):] = suf
+            bids[i, :cl // bs] = r["blocks"][:cl // bs]
+            plens[i] = cl
+        batch = self._prefill_batch(toks)
+        batch["positions"] = jnp.arange(b - s_suf, b, dtype=jnp.int32)
+        logits, (k_suf, v_suf) = self._prefill_prefix_fn()(
+            self.params, self.pool, batch, jnp.asarray(bids),
+            jnp.asarray(plens))
+        dst, src_b, src_s = [], [], []
+        for i, r in enumerate(compute):
+            for p in range(r["cached_len"], b):
+                dst.append(r["blocks"][p // bs] * bs + p % bs)
+                src_b.append(i)
+                src_s.append(p - (b - s_suf))
+        self.pool = self._scatter_kv_fn(
+            self.pool, k_suf, v_suf, *self._scatter_idx(dst, src_b, src_s))
+        return logits
+
+    @staticmethod
+    def _scatter_idx(dst, src_b, src_s):
+        """Pad scatter index vectors to a power-of-two length so the jitted
+        scatter executables stay O(log) in count rather than one per
+        cached-length combination; pad entries write row 0 position 0 into
+        flat slot 0 — inside the reserved scratch block, never read back."""
+        pad = _pow2(max(len(dst), 1), 1 << 62) - len(dst)
+        return (jnp.asarray(dst + [0] * pad, jnp.int32),
+                jnp.asarray(src_b + [0] * pad, jnp.int32),
+                jnp.asarray(src_s + [0] * pad, jnp.int32))
+
+    def _padded_row(self, prompt: List[int], b: int) -> np.ndarray:
+        p = prompt[-b:] if len(prompt) > b else \
+            [0] * (b - len(prompt)) + list(prompt)
+        return np.asarray(p, np.int32)
+
+    def _alloc_blocks(self, n: int) -> Optional[List[int]]:
+        """Allocate n blocks, evicting LRU prefix-cache entries under
+        pressure; None (nothing held) if the pool is truly exhausted."""
+        got: List[int] = []
+        while len(got) < n:
+            bid = self.block_pool.alloc()
+            if bid is not None:
+                got.append(bid)
+            elif not self.prefix_cache.evict_lru():
+                for g in got:
+                    self.block_pool.decref(g)
+                return None
+        return got
 
     def _prefill_batch(self, tokens):
         batch = {"tokens": jnp.asarray(tokens)}
@@ -245,17 +578,32 @@ class ServingEngine:
                 jnp.arange(S, dtype=jnp.int32)[None, None, :], (3, B, S))
         return batch
 
+    # -- decode -------------------------------------------------------------
+
     def _decode_active(self, completed: List[Request]) -> int:
         last = np.zeros((self.max_batch, 1), np.int32)
         for i, req in enumerate(self.slots):
             if req is not None:
                 last[i, 0] = req.output[-1] if req.output else (
                     req.prompt[-1] if req.prompt else 0)
-        logits, self.cache = self._decode_fn()(self.params, self.cache,
-                                               jnp.asarray(last), self.lengths)
-        self.lengths = jnp.where(
-            jnp.asarray([s is not None for s in self.slots]),
-            jnp.minimum(self.lengths + 1, self.max_seq - 1), self.lengths)
+        if self.kv_layout == "paged":
+            self._prepare_decode_blocks()
+            logits, self.pool = self._decode_fn()(
+                self.params, self.pool, jnp.asarray(last),
+                jnp.asarray(self.lengths), jnp.asarray(self.block_tables))
+            # saturate at max_seq: a full context drops further KV writes
+            # cleanly (decode keeps attending the intact prompt) instead of
+            # stepping back and overwriting the last real position
+            for i, req in enumerate(self.slots):
+                if req is not None:
+                    self.lengths[i] = min(self.lengths[i] + 1, self.max_seq)
+        else:
+            logits, self.cache = self._decode_fn()(self.params, self.cache,
+                                                   jnp.asarray(last),
+                                                   self.lengths)
+            self.lengths = jnp.where(
+                jnp.asarray([s is not None for s in self.slots]),
+                jnp.minimum(self.lengths + 1, self.max_seq), self.lengths)
         emitted = 0
         toks = None
         for i, req in enumerate(self.slots):
@@ -268,13 +616,57 @@ class ServingEngine:
             emitted += 1
             if tok == req.eos_id or len(req.output) >= req.max_new_tokens:
                 completed.append(req)        # done_time stamped at end of step
-                self.slots[i] = None
-                self.lengths = self.lengths.at[i].set(0)
+                self._free_slot(i)
         return emitted
+
+    def _prepare_decode_blocks(self):
+        """Host-side block management before a paged decode step: extend a
+        slot's chain when its write position crosses a block boundary, and
+        copy-on-write when it is about to write into a shared block (a cached
+        prefix whose last block is partially filled — divergence point)."""
+        bs = self.block_size
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            pos = int(self.lengths[i])
+            if pos >= self.max_seq:
+                continue                     # write is dropped by the model
+            blk = pos // bs
+            bid = int(self.block_tables[i, blk])
+            if bid == 0:
+                new = self._alloc_blocks(1)
+                if new is None:
+                    raise RuntimeError("paged KV pool exhausted mid-decode — "
+                                       "raise num_blocks")
+                self.block_tables[i, blk] = new[0]
+                self.slot_blocks[i].append(new[0])
+            elif self.block_pool.is_shared(bid):
+                new = self._alloc_blocks(1)
+                if new is None:
+                    raise RuntimeError("paged KV pool exhausted at "
+                                       "copy-on-write — raise num_blocks")
+                self.pool = self._copy_block_fn(self.pool, new[0], bid)
+                self.block_pool.decref(bid)
+                self.block_tables[i, blk] = new[0]
+                self.slot_blocks[i][blk] = new[0]
+                self.cow_count += 1
+
+    def _free_slot(self, i: int):
+        self.slots[i] = None
+        if self.kv_layout == "paged":
+            for bid in self.slot_blocks[i]:
+                self.block_pool.decref(bid)
+            self.slot_blocks[i] = []
+            self.slot_end[i] = 0
+            self.block_tables[i] = 0
+            self.lengths[i] = 0
+        else:
+            self.lengths = self.lengths.at[i].set(0)
 
     def _sample(self, logits, req: Request):
         self.key, sub = jax.random.split(self.key)
-        return sample_tokens(logits, sub, temperature=req.temperature)
+        return sample_tokens(jnp.asarray(logits), sub,
+                             temperature=req.temperature)
 
     def _emit(self, req: Request, slot: int, tok: int):
         if req.first_token_time is None:

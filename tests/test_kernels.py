@@ -7,6 +7,7 @@ import pytest
 from repro.quant import quantize
 from repro.kernels.quant_matmul import ops as qm_ops, ref as qm_ref
 from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.paged_attention import ops as pa_ops, ref as pa_ref
 from repro.kernels.ssd import ops as ssd_ops, ref as ssd_ref
 from repro.kernels.topk_sim import ops as tk_ops, ref as tk_ref
 
@@ -75,6 +76,39 @@ def test_ssd(B, S, H, P, G, N, Q):
     y2, f2 = ssd_ref.ssd_ref(x, dt, A, Bm, Cm, chunk=Q)
     assert float(jnp.max(jnp.abs(y1 - y2))) < 0.05
     assert float(jnp.max(jnp.abs(f1 - f2))) < 0.05
+
+
+@pytest.mark.parametrize(
+    "B,N,K,H,bs,nb,cap,window",
+    [
+        (2, 4, 2, 64, 16, 4, 0.0, 0),
+        (3, 8, 8, 32, 32, 3, 0.0, 0),      # MHA (K == N)
+        (1, 4, 1, 128, 16, 8, 50.0, 0),    # softcap, deep chain
+        (2, 4, 2, 64, 16, 4, 0.0, 24),     # sliding window
+    ])
+def test_paged_attention(B, N, K, H, bs, nb, cap, window):
+    """Block-table walk vs gather-then-dense-decode oracle: dead table slots
+    point at the scratch block 0 and rows vary in fill level."""
+    num_blocks = nb * B + 2
+    ks = jax.random.split(jax.random.fold_in(KEY, B * H + bs), 4)
+    q = jax.random.normal(ks[0], (B, 1, N, H), jnp.float32)
+    kp = jax.random.normal(ks[1], (num_blocks, bs, K, H), jnp.float32)
+    vp = jax.random.normal(ks[2], (num_blocks, bs, K, H), jnp.float32)
+    bt = np.zeros((B, nb), np.int32)
+    lengths = np.zeros((B,), np.int32)
+    rng = np.random.default_rng(B * 31 + H)
+    perm = rng.permutation(np.arange(1, num_blocks))
+    for b in range(B):
+        lengths[b] = int(rng.integers(1, nb * bs))
+        used = -(-int(lengths[b]) // bs)
+        bt[b, :used] = perm[b * nb:b * nb + used]
+    got = pa_ops.paged_decode_attention(
+        q, kp, vp, jnp.asarray(bt), jnp.asarray(lengths),
+        cap=cap, window=window, interpret=True)
+    want = pa_ref.paged_attention_ref(
+        q, kp, vp, jnp.asarray(bt), jnp.asarray(lengths),
+        cap=cap, window=window)
+    assert float(jnp.max(jnp.abs(got - want))) < 2e-5
 
 
 @pytest.mark.parametrize("n_tools,d,m,k", [(2048, 64, 3, 5), (512, 128, 1, 8),

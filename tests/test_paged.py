@@ -1,0 +1,369 @@
+"""Paged KV cache + tool-prefix caching: block allocator invariants, prefix
+cache sharing/copy-on-write, and temperature-0 token parity with the dense
+engine (the paged layout must be a pure memory/compute optimization)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig, RuntimeConfig
+from repro.models import get_model
+from repro.serving import (BlockPool, PrefixCache, Request, ServingEngine,
+                           VirtualClock)
+from repro.sharding.param import init_params
+
+CFG = ModelConfig(name="tiny", family="transformer", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256)
+RCFG = RuntimeConfig()
+
+RNG = np.random.default_rng(7)
+TOOL_PREFIX = [int(t) for t in 2 + RNG.integers(0, 250, size=60)]
+
+
+def _query(n=10):
+    return [int(t) for t in 2 + RNG.integers(0, 250, size=n)]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(get_model(CFG).param_spec(), jax.random.PRNGKey(0))
+
+
+def _engine(params, layout, rcfg=RCFG, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_seq", 128)
+    return ServingEngine(CFG, params, rcfg, kv_layout=layout, **kw)
+
+
+def _drain_each(eng, prompts, max_new=5):
+    outs = []
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=max_new, eos_id=-1))
+        done = sorted(eng.run_until_drained(), key=lambda r: r.rid)
+        outs += [d.output for d in done]
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# block allocator
+# ---------------------------------------------------------------------------
+
+
+def test_block_pool_no_double_allocation():
+    pool = BlockPool(6, 16)
+    got = [pool.alloc() for _ in range(5)]
+    assert None not in got
+    assert len(set(got)) == 5          # every block handed out exactly once
+    assert 0 not in got                # scratch block never allocated
+    assert pool.alloc() is None        # exhausted, not recycled
+    pool.decref(got[2])
+    assert pool.alloc() == got[2]      # free-list reuse
+
+
+def test_block_pool_refcount_free_timing():
+    pool = BlockPool(4, 16)
+    bid = pool.alloc()
+    pool.incref(bid)
+    pool.incref(bid)                   # three holders
+    assert not pool.decref(bid)
+    assert not pool.decref(bid)
+    assert pool.num_free == 2          # still held by the last sharer
+    assert pool.decref(bid)            # freed exactly at the last release
+    assert pool.num_free == 3
+
+
+def test_prefix_cache_chunking_lookup_evict():
+    pool = BlockPool(10, 4)
+    cache = PrefixCache(pool)
+    assert cache.chunk_lens(10, 4) == [4, 8, 10]     # full blocks + tail
+    assert cache.chunk_lens(8, 4) == [4, 8]
+    row = [1, 2, 3, 4, 5, 6, 7, 8]
+    blocks = [pool.alloc(), pool.alloc()]
+    cache.insert(row, blocks)
+    # chain entries hold one ref per block they list: [1,2,3,4] + [row]
+    assert pool.refcount[blocks[0]] == 3 and pool.refcount[blocks[1]] == 2
+    hit = cache.lookup(row[:4] + [9, 9, 9, 9])       # diverges after block 0
+    assert hit is not None and hit.cached_len == 4
+    assert hit.blocks == blocks[:1]
+    assert cache.lookup([9] * 8) is None
+    cache.clear()
+    for bid in blocks:
+        assert pool.refcount[bid] == 1               # only the caller's ref
+        pool.decref(bid)
+    assert pool.num_free == pool.num_blocks - 1
+
+
+def test_evict_lru_skips_entries_that_free_nothing():
+    """Eviction under pressure must not wipe entries whose blocks are all
+    shared (it would free nothing and only cost future hits); once the
+    sharers release, nested chains cascade out deepest-first."""
+    pool = BlockPool(8, 4)
+    cache = PrefixCache(pool)
+    blocks = [pool.alloc(), pool.alloc()]    # caller's refs = an active slot
+    cache.insert(list(range(8)), blocks)     # entries at chunk lens 4 and 8
+    assert not cache.evict_lru()             # every block still slot-shared
+    assert len(cache.entries) == 2
+    for bid in blocks:
+        pool.decref(bid)                     # slot completes
+    assert cache.evict_lru() and cache.evict_lru()
+    assert not cache.entries
+    assert pool.num_free == pool.num_blocks - 1
+
+
+# ---------------------------------------------------------------------------
+# engine: parity + prefix sharing
+# ---------------------------------------------------------------------------
+
+
+def test_paged_matches_dense_greedy(params):
+    """Temperature-0 outputs are token-identical to the dense engine across
+    continuous batching with shared tool prefixes (cold, warm and full-row
+    cache hits all on the execution path)."""
+    prompts = ([TOOL_PREFIX + _query() for _ in range(3)]
+               + [[9, 9, 9], [9, 9, 9]])
+    outs = {}
+    for layout in ("dense", "paged"):
+        eng = _engine(params, layout)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=6, eos_id=-1))
+        done = sorted(eng.run_until_drained(), key=lambda r: r.rid)
+        outs[layout] = [d.output for d in done]
+    assert outs["paged"] == outs["dense"]
+
+
+def test_prefix_hit_skips_prefill_tokens(params):
+    """Warm admissions are charged only for the non-cached suffix, and >= 50%
+    of a repeated-tool-prefix workload's prompt tokens come from cache."""
+    clock = VirtualClock()
+    eng = _engine(params, "paged", clock=clock,
+                  step_cost_fn=lambda kind, tok, act: float(tok))
+    prompts = [TOOL_PREFIX + _query() for _ in range(4)]
+    _drain_each(eng, prompts)
+    pre = [s for s in eng.step_log if s["kind"] == "prefill"]
+    assert pre[0]["cached_tokens"] == 0                 # cold miss
+    assert all(s["cached_tokens"] > 0 for s in pre[1:])  # warm hits
+    for s in pre[1:]:
+        assert s["prompt_tokens"] < len(prompts[0])
+        # virtual time charged the suffix only
+        assert s["dt"] == pytest.approx(s["prompt_tokens"])
+    total = eng.prefill_tokens_total
+    assert eng.prefill_tokens_saved / total >= 0.5
+    assert eng.prefix_cache_stats()["hits"] == 3
+
+
+def test_full_row_hit_charges_zero_and_matches(params):
+    """An identical prompt re-admitted later skips prefill entirely (cached
+    last-position logits) and reproduces the original greedy output."""
+    eng = _engine(params, "paged", max_batch=1)
+    first, second = _drain_each(eng, [[9, 9, 9], [9, 9, 9]])
+    assert first == second
+    pre = [s for s in eng.step_log if s["kind"] == "prefill"]
+    assert pre[1]["prompt_tokens"] == 0
+    assert pre[1]["cached_tokens"] == 3
+
+
+def test_copy_on_write_on_divergence(params):
+    """A non-block-aligned bucket leaves the cached chain's last block
+    partially filled; a full-row cache hit shares it, and the first decode
+    write into that block must CoW it so the cached prefix stays intact —
+    all while staying token-exact with the dense engine."""
+    prompt = TOOL_PREFIX[:20]         # bucket 24: shared tail block half-full
+    outs = {}
+    for layout in ("dense", "paged"):
+        eng = _engine(params, layout, max_batch=1, max_seq=64,
+                      prompt_buckets=(24,))
+        outs[layout] = _drain_each(eng, [prompt, prompt, prompt])
+        if layout == "paged":
+            assert eng.cow_count >= 1
+            # the shared chain survived all three requests (entries intact)
+            assert eng.prefix_cache_stats()["hits"] == 2
+    assert outs["paged"] == outs["dense"]
+    assert outs["paged"][0] == outs["paged"][1] == outs["paged"][2]
+
+
+def test_interior_boundary_full_row_hit_recomputes_logits(params):
+    """A short prompt whose padded row equals an *interior* block boundary of
+    a longer cached row matches a chain entry without stored logits: the last
+    stripe must be recomputed (not sampled from None), staying dense-exact."""
+    long_p, short_p = [2] * 40, [2] * 8   # rows: 24 zeros + prompt, share 32
+    outs = {}
+    for layout in ("dense", "paged"):
+        eng = _engine(params, layout, max_batch=1)
+        outs[layout] = _drain_each(eng, [long_p, short_p, short_p])
+    assert outs["paged"] == outs["dense"]
+    # the recompute upgraded the entry: third admission is a true full hit
+    # (the second could not be — no cached last-position logits yet)
+
+
+def test_block_aligned_full_chain_sharing(params):
+    """A block-aligned bucket whose whole row is cache-hit shares every chain
+    block including the (full) last one: decode's first write must open a NEW
+    block past the chain — never touch the shared one — and mixed-bucket
+    reuse of the same chain stays dense-exact. (The CoW guard is deliberately
+    `is_shared` alone: a write position inside a shared block is unreachable
+    for aligned chains, and the guard must not rely on that arithmetic.)"""
+    prompt = TOOL_PREFIX[:16]         # bucket 16 == exactly one block
+    outs = {}
+    for layout in ("dense", "paged"):
+        eng = _engine(params, layout, max_batch=1, max_seq=64,
+                      prompt_buckets=(16, 24))
+        # rows: [prompt] (cold), [prompt] (full 16-token hit -> decode pos 16
+        # opens a new block), [prompt + 4 more] (bucket 24: hits the 16-token
+        # chain, suffix prefilled, decode pos 24 % 16 == 8 in own block)
+        outs[layout] = _drain_each(
+            eng, [prompt, prompt, prompt + TOOL_PREFIX[16:20]], max_new=4)
+    assert outs["paged"] == outs["dense"]
+    assert outs["paged"][0] == outs["paged"][1]
+
+
+def test_terminal_bucket_at_capacity_preserves_prompt_kv(params):
+    """A prompt filling the terminal max_seq bucket leaves zero KV headroom:
+    decode must saturate (drop new-token KV writes) instead of stepping
+    lengths back and overwriting the last real prompt position."""
+    outs = {}
+    for layout in ("dense", "paged"):
+        eng = _engine(params, layout, max_batch=1, max_seq=32)
+        eng.submit(Request(rid=0, prompt=[5] * 32, max_new_tokens=4,
+                           eos_id=-1))
+        eng.step()                                     # prefill, lengths = 32
+        store = eng.cache if layout == "dense" else eng.pool
+        snap = np.asarray(store["k"])
+        eng.step()
+        eng.step()                                     # two decode steps
+        assert int(np.asarray(eng.lengths)[0]) == 32   # saturated, not 31
+        store = eng.cache if layout == "dense" else eng.pool
+        # prompt KV untouched (paged: ignore the scratch block 0 dead writes)
+        after = np.asarray(store["k"])
+        if layout == "paged":
+            snap, after = snap[:, 1:], after[:, 1:]
+        assert np.array_equal(snap, after)
+        outs[layout] = eng.run_until_drained()[0].output
+    assert outs["paged"] == outs["dense"]
+
+
+def test_refcounts_zero_when_last_sharer_completes(params):
+    eng = _engine(params, "paged")
+    _drain_each(eng, [TOOL_PREFIX + _query()], max_new=4)
+    eng.submit(Request(rid=1, prompt=TOOL_PREFIX + _query(),
+                       max_new_tokens=8, eos_id=-1))
+    eng.step()                                    # admission: prefix hit
+    assert eng.prefix_cache_stats()["hits"] == 1
+    shared = [b for e in eng.prefix_cache.entries.values() for b in e.blocks
+              if eng.block_pool.refcount[b] >= 2]
+    assert shared                                 # slot + cache share a chain
+    while eng.active:
+        eng.step()
+    # slots drained: only the prefix cache still holds references
+    held = {i for i in range(1, eng.block_pool.num_blocks)
+            if eng.block_pool.refcount[i] > 0}
+    cache_held = {b for e in eng.prefix_cache.entries.values()
+                  for b in e.blocks}
+    assert held == cache_held
+    eng.prefix_cache.clear()
+    assert all(eng.block_pool.refcount[i] == 0
+               for i in range(eng.block_pool.num_blocks))
+    assert eng.block_pool.num_free == eng.block_pool.num_blocks - 1
+
+
+def test_int8_paged_matches_int8_dense(params):
+    rc8 = RuntimeConfig(kv_cache_dtype="int8")
+    prompts = [TOOL_PREFIX + _query() for _ in range(2)]
+    outs = {}
+    for layout in ("dense", "paged"):
+        outs[layout] = _drain_each(_engine(params, layout, rcfg=rc8), prompts)
+    assert outs["paged"] == outs["dense"]
+
+
+@pytest.mark.parametrize("max_new", [4, 40])
+def test_pool_pressure_defers_admission_fifo(params, max_new):
+    """Too few blocks for two concurrent slots: the second request waits
+    (FIFO) instead of crashing, and both eventually complete. max_new=40
+    makes each generation cross several block boundaries — admission must
+    reserve the full decode-growth debt, not one block per slot."""
+    eng = _engine(params, "paged", max_batch=2, max_seq=64, num_blocks=6)
+    eng.submit(Request(rid=0, prompt=[3, 4, 5], max_new_tokens=max_new,
+                       eos_id=-1))
+    eng.submit(Request(rid=1, prompt=[6, 7, 8], max_new_tokens=max_new,
+                       eos_id=-1))
+    done = sorted(eng.run_until_drained(), key=lambda r: r.rid)
+    assert [d.rid for d in done] == [0, 1]
+    assert all(len(d.output) == max_new for d in done)
+
+
+def test_small_max_seq_terminal_bucket(params):
+    """max_seq <= smallest bucket used to IndexError at admission; now a
+    terminal bucket of max_seq always exists and long prompts truncate to the
+    full context window, not to the largest configured bucket."""
+    for layout in ("dense", "paged"):
+        eng = _engine(params, layout, max_batch=1, max_seq=32)
+        assert eng.prompt_buckets == (32,)
+        done = _drain_each(eng, [[5] * 8, [7] * 40], max_new=4)
+        assert [len(o) for o in done] == [4, 4]
+    big = _engine(params, "dense", max_seq=256)
+    assert big.prompt_buckets == (32, 64, 128, 256)
+    big.submit(Request(rid=0, prompt=[3] * 200, max_new_tokens=1, eos_id=-1))
+    big.step()
+    # a 200-token prompt lands in the terminal 256 bucket (not truncated to
+    # the old 128 cap) and virtual accounting still charges all 200 tokens
+    assert int(np.asarray(big.lengths)[0]) == 256
+    assert big.step_log[-1]["prompt_tokens"] == 200
+
+
+def test_sliding_window_parity_at_saturation():
+    """Sliding-window decode at a saturated context (terminal bucket ==
+    max_seq, new-token KV writes dropped): both layouts must anchor the
+    window at the last *stored* key, not diverge by one position."""
+    cfg = ModelConfig(name="tiny-swa", family="transformer", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=256, sliding_window=8)
+    p = init_params(get_model(cfg).param_spec(), jax.random.PRNGKey(1))
+    outs = {}
+    for layout in ("dense", "paged"):
+        eng = ServingEngine(cfg, p, RCFG, kv_layout=layout, max_batch=1,
+                            max_seq=32)
+        eng.submit(Request(rid=0, prompt=[5] * 32, max_new_tokens=6,
+                           eos_id=-1))
+        outs[layout] = eng.run_until_drained()[0].output
+    assert outs["paged"] == outs["dense"]
+
+
+def test_paged_rejected_for_unsupported_family():
+    from repro.common.registry import get_arch
+    from repro.configs.reduced import reduce_config
+    cfg = reduce_config(get_arch("mamba2-370m"))
+    with pytest.raises(ValueError):                  # no paged contract
+        ServingEngine(cfg, None, RuntimeConfig(), kv_layout="paged")
+    with pytest.raises(ValueError):                  # unknown layout
+        ServingEngine(CFG, None, RuntimeConfig(), kv_layout="nope")
+
+
+def test_swap_variants_share_one_paged_pool(params):
+    """Q8<->Q4 hot swaps keep serving from one block pool, but prefix-cache
+    entries are variant-scoped: a post-swap admission must recompute its
+    prefix under the live weights (never reuse the other variant's KV or
+    cached logits), and swapping back re-hits the original entries."""
+    from repro.quant import quantize_tree
+    spec = get_model(CFG).param_spec()
+    q8 = quantize_tree(params, spec, "q8")
+    q4 = quantize_tree(params, spec, "q4")
+    eng = ServingEngine(CFG, q8, RCFG, kv_layout="paged", max_batch=2,
+                        max_seq=128)
+    eng.variant_name = "q8"
+
+    def admit_one(rid):
+        eng.submit(Request(rid=rid, prompt=TOOL_PREFIX + _query(),
+                           max_new_tokens=4, eos_id=-1))
+        eng.step()
+        cached = eng.step_log[-1]["cached_tokens"]
+        while eng.active:
+            eng.step()
+        return cached
+
+    admit_one(0)                          # q8 cold
+    assert admit_one(1) > 0               # q8 warm
+    eng.swap_params(q4, "q4")
+    assert admit_one(2) == 0              # q4 must not reuse q8 KV
+    assert admit_one(3) > 0               # q4's own entries hit
+    eng.swap_params(q8, "q8")
+    assert admit_one(4) > 0               # q8 entries survived the swaps
+    assert eng.swap_count == 2
+    assert set(eng._decode_fns) <= {"q8", "q4"}
