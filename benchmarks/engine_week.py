@@ -92,6 +92,9 @@ def main():
                     "swaps": ex.swap_count,
                     "tokens_emitted": ex.engine.tokens_emitted},
             "prefix_cache": ex.engine.prefix_cache_stats(),
+            # nightly trajectory of the preemptive scheduler: preemptions,
+            # requeues, queue-wait time and the slot-occupancy high-water mark
+            "scheduler": ex.engine.scheduler_stats(),
         }
         with open(args.json, "w") as f:
             json.dump(summary, f, indent=2, sort_keys=True)

@@ -1,0 +1,118 @@
+"""Concurrent-occupancy benchmark for the shared-engine fleet path.
+
+Part 1 — occupancy sweep: N overlapping query sessions settled together on
+one engine (the async `begin_query`/`settle` API). Batched decode streams the
+profile-scale weights once per step regardless of occupancy, so aggregate
+decode TPS should rise with N while energy — and therefore carbon — *per
+query* falls: the cluster-level effect of sharing one engine per pod.
+
+Part 2 — a small engine-backed fleet through `run_fleet(backend="engine")`:
+two pods, each a shared engine behind an `EngineClient` on ONE fleet-wide
+virtual clock; reports per-pod slot-occupancy high-water marks and the
+scheduler counters (preemptions / requeues / queue wait).
+
+    PYTHONPATH=src:. python benchmarks/fleet_engine.py [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.common import emit
+from repro.common.hardware import ORIN_AGX
+from repro.core import (CarbonCallRuntime, EngineExecutor, ORIN_MODES,
+                        PAPER_MODELS, POLICIES, SimExecutor, ToolSelector,
+                        carbon_footprint, ci_trace)
+from repro.core.fleet import PodState, run_fleet
+from repro.data.workload import build_catalog, FunctionCallWorkload
+
+CI_G_PER_KWH = 400.0          # fixed CI so carbon/query tracks energy/query
+
+
+def occupancy_sweep(sessions=(1, 2, 4), quiet: bool = False):
+    """Decode TPS and carbon per query vs concurrent session count."""
+    out = {}
+    for n in sessions:
+        ex = EngineExecutor(PAPER_MODELS["qwen2-7b"], ORIN_AGX, seed=0,
+                            max_batch=max(sessions))
+        kw = dict(n_tools_in_prompt=3, n_calls=1, selection_correct=True,
+                  variant="q8", mode=ORIN_MODES[0])
+        opened = [ex.begin_query(**kw) for _ in range(n)]
+        ex.settle(opened)
+        eng = ex.engine
+        tps = eng.recent_tps(window=len(eng.step_log))
+        cf_q = sum(carbon_footprint(s.execution.energy_j, CI_G_PER_KWH)
+                   for s in opened) / n
+        out[n] = {"decode_tps": tps, "carbon_g_per_query": cf_q,
+                  "peak_active": eng.peak_active}
+        if not quiet:
+            emit(f"fleet_engine/occupancy/{n}", tps,
+                 f"CF/query={cf_q * 1000:.2f}mg peak={eng.peak_active}")
+    return out
+
+
+def fleet_smoke(n_pods: int = 2, n_steps: int = 2,
+                queries_per_hour: float = 36.0, quiet: bool = False):
+    """Engine-backed fleet: per-pod shared engines + scheduler telemetry."""
+    catalog = build_catalog(32, seed=0)
+    selector = ToolSelector(catalog)
+    weeks = ["week1", "week2", "week3", "week4"]
+    pods = []
+    for i in range(n_pods):
+        ex = SimExecutor(PAPER_MODELS["qwen2-7b"], ORIN_AGX, seed=i)
+        rt = CarbonCallRuntime(selector=selector, executor=ex,
+                               policy=POLICIES["carboncall"],
+                               modes=ORIN_MODES,
+                               catalog_size=len(catalog.tools), seed=i)
+        ci = ci_trace(weeks[i % len(weeks)], seed=100 + i)
+        pods.append(PodState(pod_id=i, runtime=rt, ci_trace=ci,
+                             gov_state=rt.governor.init(ci[:144])))
+    recs = run_fleet(pods, FunctionCallWorkload(catalog, seed=5),
+                     n_steps=n_steps, queries_per_hour=queries_per_hour,
+                     seed=1, backend="engine")
+    n = sum(len(rs) for rs in recs.values())
+    cf = sum(r.carbon_g for rs in recs.values() for r in rs)
+    pod_stats = {}
+    for p in pods:
+        eng = p.client.engine
+        pod_stats[p.pod_id] = {"served": p.served,
+                               "scheduler": eng.scheduler_stats(),
+                               "prefix_cache": eng.prefix_cache_stats()}
+        if not quiet:
+            s = eng.scheduler_stats()
+            emit(f"fleet_engine/pod{p.pod_id}", eng.recent_tps(
+                window=len(eng.step_log)),
+                f"served={p.served} peak={s['peak_active']} "
+                f"preempt={s['preemptions']} wait={s['queue_wait_s']:.2f}s")
+    if not quiet:
+        emit("fleet_engine/total", float(n),
+             f"CF/query={cf / max(n, 1) * 1000:.2f}mg")
+    return {"queries": n, "carbon_g_per_query": cf / max(n, 1),
+            "pods": pod_stats}
+
+
+def run(quiet: bool = False):
+    return {"occupancy": occupancy_sweep(quiet=quiet),
+            "fleet": fleet_smoke(quiet=quiet)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="write results JSON (CI perf-trajectory artifact)")
+    args = ap.parse_args()
+    out = run()
+    if args.json:
+        summary = {
+            "occupancy": {str(k): v for k, v in out["occupancy"].items()},
+            "fleet": {"queries": out["fleet"]["queries"],
+                      "carbon_g_per_query": out["fleet"]["carbon_g_per_query"],
+                      "pods": {str(k): v
+                               for k, v in out["fleet"]["pods"].items()}},
+        }
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=2, sort_keys=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
                          compressed day through run_week(backend="engine")
   paged_engine         — paged KV + tool-prefix caching: prefill tokens
                          saved vs dense, decode TPS parity per occupancy
+  fleet_engine         — shared-engine fleet: decode TPS + carbon/query vs
+                         concurrent sessions, per-pod scheduler counters
   variant_utilization  — Fig 6 (Q8 share per weekday, weeks 3/4)
   operating_modes      — Table I + §III-C TPS/power ladder
   tool_selection       — §III-B selection quality/latency
@@ -20,9 +22,9 @@ import sys
 def main() -> None:
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
-    from benchmarks import (engine_week, kernels_bench, operating_modes,
-                            paged_engine, roofline_table, tool_selection,
-                            variant_utilization, week_eval)
+    from benchmarks import (engine_week, fleet_engine, kernels_bench,
+                            operating_modes, paged_engine, roofline_table,
+                            tool_selection, variant_utilization, week_eval)
     suites = {
         "operating_modes": operating_modes.run,
         "tool_selection": tool_selection.run,
@@ -31,6 +33,7 @@ def main() -> None:
         "week_eval": week_eval.run,
         "engine_week": engine_week.run,
         "paged_engine": paged_engine.run,
+        "fleet_engine": fleet_engine.run,
         "roofline": roofline_table.run,
     }
     for name, fn in suites.items():

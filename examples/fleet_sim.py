@@ -1,12 +1,17 @@
 """Fleet-scale CarbonCall (beyond the paper): carbon-aware routing across
 pods in different grid regions, each with its own governor + variant switcher.
-Compares the carbon-aware router against round-robin.
+
+`--backend sim` (default) compares the carbon-aware router against
+round-robin over the analytic executor. `--backend engine` runs one shared
+continuous-batching ServingEngine per pod (an `EngineClient` each, all pods
+on one fleet-wide virtual clock) so concurrently-routed queries occupy decode
+slots together — keep --days/--qph small, every token is really decoded.
 
     PYTHONPATH=src python examples/fleet_sim.py --pods 4 --days 2
+    PYTHONPATH=src python examples/fleet_sim.py --backend engine \
+        --pods 2 --steps 3 --qph 30
 """
 import argparse
-
-import numpy as np
 
 from repro.common.hardware import TPU_V5E
 from repro.core import (POLICIES, SimExecutor, TPU_MODES, ToolSelector,
@@ -33,27 +38,41 @@ def build_pods(n_pods: int, selector, catalog, weeks):
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=["sim", "engine"], default="sim")
     ap.add_argument("--pods", type=int, default=4)
     ap.add_argument("--days", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=None,
+                    help="override step count (10-min steps; default days*144)")
     ap.add_argument("--qph", type=float, default=40.0)
     args = ap.parse_args()
 
     catalog = build_catalog(64, seed=0)
     selector = ToolSelector(catalog)
     weeks = ["week1", "week2", "week3", "week4"]
-    n_steps = args.days * 144
+    n_steps = args.steps if args.steps is not None else args.days * 144
 
     # carbon-aware routing
     pods = build_pods(args.pods, selector, catalog, weeks)
     wl = FunctionCallWorkload(catalog, seed=5)
-    recs = run_fleet(pods, wl, n_steps=n_steps, queries_per_hour=args.qph)
+    recs = run_fleet(pods, wl, n_steps=n_steps, queries_per_hour=args.qph,
+                     backend=args.backend)
     cf_aware = sum(r.carbon_g for rs in recs.values() for r in rs)
     n_aware = sum(len(rs) for rs in recs.values())
-    print("carbon-aware routing:")
+    print(f"carbon-aware routing [{args.backend}]:")
     for p in pods:
-        print(f"  pod {p.pod_id} ({weeks[p.pod_id % 4]}): served {p.served}")
+        line = f"  pod {p.pod_id} ({weeks[p.pod_id % 4]}): served {p.served}"
+        if p.client is not None:
+            s = p.client.engine.scheduler_stats()
+            line += (f"  peak_occupancy={s['peak_active']}"
+                     f" preemptions={s['preemptions']}"
+                     f" queue_wait={s['queue_wait_s']:.1f}s")
+        print(line)
     print(f"  total: {n_aware} queries, {cf_aware:.2f} gCO2 "
           f"({cf_aware/max(n_aware,1)*1000:.1f} mg/query)")
+    if args.backend == "engine":
+        shared = max(p.client.engine.peak_active for p in pods)
+        print(f"  max concurrent sessions in one pod engine: {shared}")
+        return
 
     # round-robin baseline: force equal scores
     pods_rr = build_pods(args.pods, selector, catalog, weeks)

@@ -56,6 +56,10 @@ def main():
         print(f"  engine: {eng.tokens_emitted} real tokens decoded, "
               f"{runtime.executor.swap_count} live param swaps, "
               f"recent TPS {eng.recent_tps():.1f} (virtual clock)")
+        s = eng.scheduler_stats()
+        print(f"  sessions: peak occupancy {s['peak_active']}, "
+              f"{s['admitted']} admitted, {s['preemptions']} preemptions, "
+              f"queue wait {s['queue_wait_s']:.1f}s")
 
 
 if __name__ == "__main__":

@@ -19,9 +19,11 @@ from repro.core.power import (
 from repro.core.governor import CarbonGovernor, GovernorState
 from repro.core.switching import VariantSwitcher, SwitchDecision
 from repro.core.tool_select import ToolSelector, SelectionResult
-from repro.core.runtime import CarbonCallRuntime, Policy, run_week, WeekResult
+from repro.core.runtime import (
+    CarbonCallRuntime, PendingQuery, Policy, run_week, WeekResult)
 from repro.core.baselines import POLICIES
-from repro.core.executor import SimExecutor, PAPER_MODELS, ModelProfile
+from repro.core.executor import (
+    Executor, QuerySession, SimExecutor, PAPER_MODELS, ModelProfile)
 from repro.core.engine_executor import EngineExecutor, make_executor
 
 __all__ = [
@@ -29,7 +31,7 @@ __all__ = [
     "CarbonAccountant", "OperatingMode", "ORIN_MODES", "TPU_MODES",
     "PowerModel", "modes_for", "CarbonGovernor", "GovernorState",
     "VariantSwitcher", "SwitchDecision", "ToolSelector", "SelectionResult",
-    "CarbonCallRuntime", "Policy", "run_week", "WeekResult", "POLICIES",
-    "SimExecutor", "EngineExecutor", "make_executor", "PAPER_MODELS",
-    "ModelProfile",
+    "CarbonCallRuntime", "PendingQuery", "Policy", "run_week", "WeekResult",
+    "POLICIES", "Executor", "QuerySession", "SimExecutor", "EngineExecutor",
+    "make_executor", "PAPER_MODELS", "ModelProfile",
 ]

@@ -1,11 +1,22 @@
 """Engine-backed query execution: the CarbonCall control loop driving the
-real continuous-batching ServingEngine.
+real continuous-batching ServingEngine through the async session API.
 
 `SimExecutor` (core/executor.py) is purely analytic; this module closes the
 loop the paper actually runs: the governor's mode and the switcher's variant
 decisions land on a live engine — tool prompts become token prompts sized by
 `n_tools_in_prompt`, decode runs through the batched slot loop, and Q8<->Q4
 switches call `engine.swap_params` with pre-built quantized param trees.
+
+Sessions, not blocking calls: `begin_query` submits nothing — it records the
+query and draws its attempt outcome lazily; `settle(sessions)` submits every
+open attempt through one shared `EngineClient` and steps the engine until
+they finish, so queries from many users occupy decode slots *together*
+(retries are submitted in follow-up rounds). Per-session accounting reads the
+engine step log: a step's virtual duration is charged in full to each
+resident session's latency clock (they all waited through it) while its
+energy is split evenly among the sessions resident that step — concurrent
+occupancy therefore shows up directly as energy/carbon-per-query savings,
+the cluster-level effect arXiv:2512.04088 argues for.
 
 Timing/energy: the container has no power rails and the reduced model is not
 the paper's 7B, so the engine runs on a `VirtualClock` whose per-step
@@ -16,13 +27,14 @@ The external tool wait and the evaluation-pass re-prefill are charged
 analytically (the engine folds the evaluation decode into the request's token
 budget — one engine request per attempt keeps the slot loop hot).
 
-`EngineExecutor` satisfies the exact interface `CarbonCallRuntime.handle_query`
-consumes: `run_query`, `variant_switch_cost`, `reference_tps`, `power_model`,
-`profile`.
+The clock is injectable so a fleet can put every pod's engine on ONE shared
+timeline (`run_fleet(backend="engine")` does exactly that for cross-pod
+carbon accounting).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+import dataclasses
+from typing import Dict, List, Optional
 
 import jax
 import numpy as np
@@ -32,13 +44,33 @@ from repro.common.registry import get_arch
 from repro.config import RuntimeConfig
 from repro.configs.reduced import reduce_config
 from repro.core.executor import (
-    EVAL_PROMPT, QUERY_TOKENS, QueryExecution, SELECT_S, TOKENS_PER_TOOL,
-    TOOL_EXEC_S, ModelProfile, attempt_loop, success_probability)
+    EVAL_PROMPT, QUERY_TOKENS, QueryExecution, QuerySession, SELECT_S,
+    TOKENS_PER_TOOL, TOOL_EXEC_S, ModelProfile, success_probability)
 from repro.core.power import OperatingMode, PowerModel, modes_for
 from repro.models import get_model
 from repro.quant import quantize_tree
-from repro.serving import Request, ServingEngine, VirtualClock
+from repro.serving import (RequestHandle, ServingEngine, SessionRequest,
+                           VirtualClock)
 from repro.sharding.param import init_params
+
+
+@dataclasses.dataclass
+class EngineSession(QuerySession):
+    """Per-query attempt state on the live engine."""
+    handle: Optional[RequestHandle] = None
+    attempt_no: int = 0
+    attempt_ok: bool = False
+    attempt_calls: int = 0
+    submit_t: float = 0.0
+    energy_j: float = 0.0          # attributed share of engine-step energy
+    decode_t: float = 0.0          # engine decode time spent on this query
+    # totals across attempts
+    tot_lat: float = 0.0
+    tot_en: float = 0.0
+    tot_tok: int = 0
+    tot_dec_t: float = 0.0
+    tot_wait: float = 0.0
+    failed: int = 0
 
 
 class EngineExecutor:
@@ -48,7 +80,8 @@ class EngineExecutor:
                  arch: str = "carboncall-qwen2-7b", seed: int = 0,
                  max_batch: int = 2, max_seq: int = 256,
                  tokens_per_call: int = 8, eval_tokens: int = 4,
-                 kv_layout: str = "auto"):
+                 kv_layout: str = "auto",
+                 clock: Optional[VirtualClock] = None):
         self.profile = profile
         self.power_model = PowerModel(hw)
         self.seed = seed
@@ -63,20 +96,26 @@ class EngineExecutor:
         params = init_params(spec, jax.random.PRNGKey(seed))
         self.variants = {"q8": quantize_tree(params, spec, "q8"),
                          "q4": quantize_tree(params, spec, "q4")}
-        self.clock = VirtualClock()
+        self.clock = clock if clock is not None else VirtualClock()
         self._mode: OperatingMode = modes_for(hw)[0]
         self.engine = ServingEngine(self.cfg, self.variants["q8"], rcfg,
                                     max_batch=max_batch, max_seq=max_seq,
                                     kv_layout=kv_layout, clock=self.clock,
                                     step_cost_fn=self._step_cost)
         self.engine.variant_name = "q8"
-        self._rid = 0
+        self.client = self.engine.client()
+        self._log_pos = 0              # step_log watermark for attribution
+        self._rid_sessions: Dict[int, EngineSession] = {}
 
     @property
     def swap_count(self) -> int:
         """Live engine.swap_params performed (the engine is the only counter;
-        run_query swaps exclusively through it)."""
+        queries swap exclusively through it)."""
         return self.engine.swap_count
+
+    @property
+    def max_concurrency(self) -> int:
+        return self.engine.max_batch
 
     # -- virtual-clock step costs -------------------------------------------
 
@@ -98,7 +137,7 @@ class EngineExecutor:
 
     def reference_tps(self, mode: OperatingMode) -> float:
         """Deployment-time calibration: TPS of a nominal single-call (3-tool)
-        query at Q8 in `mode` — mirrors what run_query measures so the 80%
+        query at Q8 in `mode` — mirrors what a solo query measures so the 80%
         switching threshold is meaningful against engine telemetry."""
         pm, prof = self.power_model, self.profile
         tok = self.tokens_per_call + self.eval_tokens
@@ -110,17 +149,50 @@ class EngineExecutor:
                  prof.active_bytes("q8"), prof.kv_bytes_per_token, mode))
         return tok / t
 
-    def run_query(self, *, n_tools_in_prompt: int, n_calls: int,
-                  selection_correct: bool, variant: str,
-                  mode: OperatingMode) -> QueryExecution:
+    def begin_query(self, *, n_tools_in_prompt: int, n_calls: int,
+                    selection_correct: bool, variant: str,
+                    mode: OperatingMode, priority: int = 0,
+                    deadline_s: Optional[float] = None) -> EngineSession:
+        """Open a session. The engine's weights follow the *latest* begin:
+        queries batched into one settle share the switcher's variant (the
+        switcher only flips between batches), so a batch is single-variant
+        by construction."""
         self._mode = mode
         if variant != self.engine.variant_name:
             # live hot-swap: the switcher's decision lands on the engine
             self.engine.swap_params(self.variants[variant], variant)
+        return EngineSession(
+            n_tools=n_tools_in_prompt, n_calls=n_calls,
+            p_success=success_probability(selection_correct, variant),
+            variant=variant, mode=mode, priority=priority,
+            deadline_s=deadline_s)
 
-        return attempt_loop(
-            self.rng, success_probability(selection_correct, variant), n_calls,
-            lambda calls: self._one_attempt(n_tools_in_prompt, calls, mode))
+    def settle(self, sessions: List[QuerySession]) -> None:
+        """Run every open session to completion on the shared engine.
+        Attempt 1 of all sessions is submitted together (overlapping
+        prefill/decode); failed attempts re-submit in follow-up rounds."""
+        open_s = [s for s in sessions if s.execution is None]
+        if not open_s:
+            return
+        self._mode = open_s[-1].mode
+        while open_s:
+            for s in open_s:
+                if s.handle is None:
+                    self._start_attempt(s)
+            self.client.settle([s.handle for s in open_s])
+            self._attribute_steps()
+            open_s = [s for s in open_s if not self._finish_attempt(s)]
+
+    def run_query(self, *, n_tools_in_prompt: int, n_calls: int,
+                  selection_correct: bool, variant: str,
+                  mode: OperatingMode) -> QueryExecution:
+        """Blocking shim over the session API (begin + settle of one)."""
+        s = self.begin_query(n_tools_in_prompt=n_tools_in_prompt,
+                             n_calls=n_calls,
+                             selection_correct=selection_correct,
+                             variant=variant, mode=mode)
+        self.settle([s])
+        return s.execution
 
     def variant_switch_cost(self, variant: str, mode: OperatingMode):
         """(latency, energy) to load the `variant` weights; the engine is
@@ -132,36 +204,89 @@ class EngineExecutor:
 
     # -- internals -----------------------------------------------------------
 
-    def _one_attempt(self, n_tools: int, calls: int, mode: OperatingMode):
+    def _start_attempt(self, s: EngineSession):
+        """Draw the attempt outcome and submit one engine request covering
+        every structured call plus its evaluation pass."""
+        s.attempt_no += 1
+        s.attempt_ok = self.rng.random() < s.p_success
+        s.attempt_calls = (s.n_calls if s.attempt_ok
+                           else max(1, s.n_calls // 2))
+        new_toks = s.attempt_calls * (self.tokens_per_call + self.eval_tokens)
+        s.handle = self.client.submit(SessionRequest(
+            prompt=self._prompt_tokens(s.n_tools), max_new_tokens=new_toks,
+            eos_id=-1, priority=s.priority, deadline_s=s.deadline_s))
+        s.submit_t = self.clock()
+        s.energy_j = 0.0
+        s.decode_t = 0.0
+        self._rid_sessions[s.handle.rid] = s
+
+    def _attribute_steps(self):
+        """Split each new engine step across the sessions resident in it:
+        full duration onto every resident session's decode clock, energy
+        divided evenly (a shared step is one power draw serving N users)."""
         pm = self.power_model
-        eng = self.engine
+        for entry in self.engine.step_log[self._log_pos:]:
+            rids = entry.get("rids") or []
+            owners = [self._rid_sessions[r] for r in rids
+                      if r in self._rid_sessions]
+            if not owners:
+                continue
+            util = 0.95 if entry["kind"] == "prefill" else 0.70
+            e_share = entry["dt"] * pm.power(self._mode, util=util) / len(owners)
+            for s in owners:
+                s.energy_j += e_share
+                if entry["kind"] == "decode":
+                    s.decode_t += entry["dt"]
+        self._log_pos = len(self.engine.step_log)
+
+    def _finish_attempt(self, s: EngineSession) -> bool:
+        """Fold the finished attempt into the session totals; returns True
+        when the session is fully resolved (execution set)."""
+        pm = self.power_model
+        req = s.handle.request
+        self._rid_sessions.pop(s.handle.rid, None)
+        s.handle = None
         lat = SELECT_S
-        en = SELECT_S * pm.power(mode, util=0.3)
-        # one engine request per attempt: prompt sized by the tool selection,
-        # decode budget covering every structured call + its evaluation pass
-        new_toks = calls * (self.tokens_per_call + self.eval_tokens)
-        req = Request(rid=self._rid, prompt=self._prompt_tokens(n_tools),
-                      max_new_tokens=new_toks, eos_id=-1)
-        self._rid += 1
-        log_start = len(eng.step_log)
-        eng.submit(req)
-        eng.run_until_drained()
-        dec_tok = len(req.output)
-        dec_t = 0.0
-        for s in eng.step_log[log_start:]:
-            util = 0.95 if s["kind"] == "prefill" else 0.70
-            lat += s["dt"]
-            en += s["dt"] * pm.power(mode, util=util)
-            if s["kind"] == "decode":
-                dec_t += s["dt"]
-        # per call: external tool wait (near-idle) + evaluation re-prefill
-        wait = calls * TOOL_EXEC_S
-        lat += wait
-        en += wait * pm.power(mode, util=0.25)
-        pe = calls * pm.prefill_time(EVAL_PROMPT, self.profile.n_active * 2, mode)
-        lat += pe
-        en += pe * pm.power(mode, util=0.95)
-        return lat, en, dec_tok, dec_t, wait
+        en = SELECT_S * pm.power(s.mode, util=0.3)
+        expired = req.status != "done"
+        if expired:
+            # the query sat in the waiting queue until its deadline lapsed
+            # (never admitted — admission clears the deadline); keep any
+            # energy the attribution pass may still have assigned
+            if s.deadline_s is not None:
+                lat += s.deadline_s
+            en += s.energy_j
+        else:
+            done_t = req.done_time if req.done_time is not None else \
+                self.clock()
+            lat += max(0.0, done_t - req.submit_time)
+            en += s.energy_j
+            s.tot_tok += len(req.output)
+            s.tot_dec_t += s.decode_t
+            # per call: external tool wait (near-idle) + evaluation re-prefill
+            wait = s.attempt_calls * TOOL_EXEC_S
+            lat += wait
+            en += wait * pm.power(s.mode, util=0.25)
+            pe = s.attempt_calls * pm.prefill_time(
+                EVAL_PROMPT, self.profile.n_active * 2, s.mode)
+            lat += pe
+            en += pe * pm.power(s.mode, util=0.95)
+            s.tot_wait += wait
+        s.tot_lat += lat
+        s.tot_en += en
+        ok = s.attempt_ok and not expired
+        if not ok:
+            s.failed += 1
+        if ok or s.attempt_no >= 2 or expired:
+            # expired attempts fail cleanly and are not retried — the
+            # deadline already passed on the engine clock
+            s.execution = QueryExecution(
+                latency_s=s.tot_lat, energy_j=s.tot_en,
+                decode_tokens=s.tot_tok, decode_time_s=s.tot_dec_t,
+                exec_time_s=s.tot_lat - s.tot_wait,
+                failed_attempts=s.failed, succeeded=ok)
+            return True
+        return False
 
     def _prompt_tokens(self, n_tools: int):
         """Tool-description prefix + fresh query suffix. The prefix tokens are

@@ -14,12 +14,22 @@ outcome plus a variant-dependent degradation (quantized models fail more,
 The engine-backed counterpart (EngineExecutor, core/engine_executor.py) runs
 the same query pipeline on a real serving.ServingEngine; both share the
 per-query retry scaffold defined here (`attempt_loop`).
+
+Execution contract (`Executor` protocol): the runtime talks to backends
+through an *async session* API — `begin_query(...) -> QuerySession` then
+`settle(sessions)` — so a backend that can overlap queries (the engine, whose
+decode slots batch across users) receives a whole arrival batch before any
+result is demanded. `run_query` remains as the blocking shim
+(begin + settle of a single session); `SimExecutor` resolves sessions eagerly
+at `begin_query`, which keeps its random-stream consumption — and therefore
+every `run_week(backend="sim")` result — bit-identical to the old blocking
+contract.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import List, Optional, Protocol, runtime_checkable
 
 import numpy as np
 
@@ -52,6 +62,52 @@ class QueryExecution:
         """Paper's TPS: generated tokens over on-device execution time
         (prefill + decode; the external API wait is not the LLM's throughput)."""
         return self.decode_tokens / max(self.exec_time_s, 1e-9)
+
+
+@dataclasses.dataclass
+class QuerySession:
+    """One in-flight query on an execution backend.
+
+    Created by `Executor.begin_query`; `execution` is populated no later than
+    the `Executor.settle` call that includes it (eagerly at begin for the
+    analytic backend). Backends subclass this to carry attempt state."""
+    n_tools: int
+    n_calls: int
+    p_success: float
+    variant: str
+    mode: OperatingMode
+    priority: int = 0
+    deadline_s: Optional[float] = None
+    execution: Optional[QueryExecution] = None
+
+
+@runtime_checkable
+class Executor(Protocol):
+    """What `CarbonCallRuntime` requires of an execution backend."""
+
+    profile: "ModelProfile"
+    power_model: PowerModel
+    seed: int
+
+    @property
+    def max_concurrency(self) -> int:
+        """How many sessions may usefully overlap (1 = blocking backend)."""
+        ...
+
+    def reference_tps(self, mode: OperatingMode) -> float: ...
+
+    def begin_query(self, *, n_tools_in_prompt: int, n_calls: int,
+                    selection_correct: bool, variant: str,
+                    mode: OperatingMode, priority: int = 0,
+                    deadline_s: Optional[float] = None) -> QuerySession: ...
+
+    def settle(self, sessions: List[QuerySession]) -> None: ...
+
+    def run_query(self, *, n_tools_in_prompt: int, n_calls: int,
+                  selection_correct: bool, variant: str,
+                  mode: OperatingMode) -> QueryExecution: ...
+
+    def variant_switch_cost(self, variant: str, mode: OperatingMode): ...
 
 
 @dataclasses.dataclass
@@ -124,6 +180,28 @@ class SimExecutor:
         self.power_model = PowerModel(hw)
         self.seed = seed
         self.rng = np.random.default_rng(seed)
+
+    @property
+    def max_concurrency(self) -> int:
+        return 1           # analytic model: queries cannot share any compute
+
+    def begin_query(self, *, priority: int = 0,
+                    deadline_s: Optional[float] = None,
+                    **kw) -> QuerySession:
+        """Sessions resolve eagerly: the analytic model has nothing to
+        overlap, and computing at begin keeps rng consumption (and therefore
+        whole-week results) bit-identical to the old blocking contract."""
+        s = QuerySession(n_tools=kw["n_tools_in_prompt"],
+                         n_calls=kw["n_calls"],
+                         p_success=success_probability(
+                             kw["selection_correct"], kw["variant"]),
+                         variant=kw["variant"], mode=kw["mode"],
+                         priority=priority, deadline_s=deadline_s)
+        s.execution = self.run_query(**kw)
+        return s
+
+    def settle(self, sessions: List[QuerySession]) -> None:
+        pass               # resolved at begin_query
 
     def reference_tps(self, mode: OperatingMode) -> float:
         """Deployment-time calibration: the (mode, Q8) decode TPS the 80%

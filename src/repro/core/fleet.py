@@ -4,9 +4,18 @@ The paper runs one edge board; at 1000+ node scale the same control knobs
 exist per pod (mode governor, variant switcher), plus a knob the edge device
 does not have: WHERE a query runs. Each pod sits in a grid region with its own
 CI trace; the router scores pods by
-    score = ci_pod * marginal_energy(pod) + latency_penalty(queue)
+    score = ci_pod * marginal_energy(pod) + latency_penalty(queue + in-flight)
 and sends the query to the argmin, subject to a TPS SLO (drain pods whose
 10-min average TPS is degraded — straggler mitigation at the fleet level).
+
+With `backend="engine"` every pod runs ONE shared `ServingEngine` behind an
+`EngineClient`: all queries routed to a pod within an arrival step are
+submitted as overlapping sessions and settled together, so concurrent users
+occupy the pod's decode slots at once (the cross-query batching a per-query
+blocking loop never reaches). All pod engines share a single `VirtualClock` —
+one fleet timeline — and each step rebases every pod to the same start time
+before settling (pods run in parallel in reality; the shared clock then
+advances to the slowest pod's finish).
 
 This module is deliberately runnable at "2 pods on CPU" (the dry-run mesh) and
 structurally identical at 1000 pods: state per pod is O(1) and routing is a
@@ -20,12 +29,15 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.carbon import carbon_footprint
-from repro.core.executor import SimExecutor
-from repro.core.governor import CarbonGovernor, GovernorState
-from repro.core.power import OperatingMode
-from repro.core.runtime import CarbonCallRuntime, Policy, QueryRecord
-from repro.core.switching import VariantSwitcher
-from repro.data.workload import FunctionCallWorkload, Query
+from repro.core.governor import GovernorState
+from repro.core.runtime import CarbonCallRuntime, PendingQuery, QueryRecord
+from repro.data.workload import FunctionCallWorkload
+from repro.serving import EngineClient, VirtualClock
+
+# routing proxy for one not-yet-settled query's latency contribution
+# (an in-step submission must repel further arrivals before its real
+# latency exists; the sim path settles immediately, so it never applies)
+INFLIGHT_COST_S = 30.0
 
 
 @dataclasses.dataclass
@@ -37,6 +49,8 @@ class PodState:
     queue_s: float = 0.0              # virtual backlog (seconds of work)
     healthy: bool = True
     served: int = 0
+    inflight: int = 0                 # submitted, not yet settled (this step)
+    client: Optional[EngineClient] = None   # shared-engine facade (engine bk.)
 
     def ci_at(self, i: int) -> float:
         return float(self.ci_trace[i % len(self.ci_trace)])
@@ -57,7 +71,8 @@ class FleetRouter:
         # marginal energy ~ power at current mode (J/s) -> gCO2/s proxy
         carbon_rate = carbon_footprint(pod.runtime.executor.power_model.power(mode),
                                        ci) * 3600.0
-        return carbon_rate + self.queue_weight * pod.queue_s
+        backlog = pod.queue_s + pod.inflight * INFLIGHT_COST_S
+        return carbon_rate + self.queue_weight * backlog
 
     def route(self, i: int) -> PodState:
         healthy = [p for p in self.pods if p.healthy]
@@ -76,12 +91,34 @@ class FleetRouter:
                 p.healthy = True
 
 
+def _to_engine_backend(pods: List[PodState]) -> VirtualClock:
+    """Convert every pod to one shared engine behind an EngineClient, all on
+    a single fleet-wide VirtualClock (cross-pod carbon accounting needs one
+    timeline, not N drifting ones)."""
+    clock = VirtualClock()
+    for p in pods:
+        p.runtime.use_backend("engine", clock=clock)
+        ex = p.runtime.executor
+        if ex.clock is not clock:
+            # the pod was already engine-backed: use_backend kept its
+            # executor (and its private clock) — rewire it onto the fleet
+            # timeline so this run's rebasing governs every pod
+            clock.t = max(clock.t, ex.clock())
+            ex.clock = clock
+            ex.engine.clock = clock
+        p.client = ex.client
+    return clock
+
+
 def run_fleet(pods: List[PodState], workload: FunctionCallWorkload, *,
               n_steps: int, step_minutes: int = 10,
               queries_per_hour: float = 60.0, seed: int = 0,
               backend: Optional[str] = None
               ) -> Dict[int, List[QueryRecord]]:
-    if backend is not None:
+    clock: Optional[VirtualClock] = None
+    if backend == "engine":
+        clock = _to_engine_backend(pods)
+    elif backend is not None:
         for p in pods:
             p.runtime.use_backend(backend)
     rng = np.random.default_rng(seed)
@@ -89,8 +126,18 @@ def run_fleet(pods: List[PodState], workload: FunctionCallWorkload, *,
     steps_per_day = 24 * 60 // step_minutes
     out: Dict[int, List[QueryRecord]] = {p.pod_id: [] for p in pods}
     lam = queries_per_hour * step_minutes / 60.0
+
+    def settle_pod(pod: PodState, batch: List[PendingQuery]):
+        for rec in pod.runtime.settle(batch):
+            pod.queue_s += rec.latency_s
+            pod.served += 1
+            out[pod.pod_id].append(rec)
+        pod.inflight = 0
+
     for i in range(n_steps):
         t = i * step_minutes * 60.0
+        if clock is not None:
+            clock.t = max(clock.t, t)    # anchor engine time to the schedule
         for p in pods:
             ci = p.ci_at(i)
             if i % steps_per_day == 0:
@@ -101,12 +148,30 @@ def run_fleet(pods: List[PodState], workload: FunctionCallWorkload, *,
                 p.gov_state = p.runtime.governor.update(p.gov_state, ci)
             p.queue_s = max(0.0, p.queue_s - step_minutes * 60.0)
         router.mark_health()
+        batches: Dict[int, List[PendingQuery]] = {}
         for q in range(rng.poisson(lam)):
             pod = router.route(i)
             query = workload.sample()
-            rec = pod.runtime.handle_query(t + q, query, pod.ci_at(i),
-                                           pod.gov_state)
-            pod.queue_s += rec.latency_s
-            pod.served += 1
-            out[pod.pod_id].append(rec)
+            pq = pod.runtime.submit_query(t + q, query, pod.ci_at(i),
+                                          pod.gov_state)
+            if getattr(pod.runtime.executor, "max_concurrency", 1) > 1:
+                batches.setdefault(pod.pod_id, []).append(pq)
+                pod.inflight += 1
+            else:
+                settle_pod(pod, [pq])
+        if batches:
+            # pods run in parallel: every pod's settle starts from the same
+            # instant on the shared timeline, which then advances to the
+            # slowest pod's finish
+            by_id = {p.pod_id: p for p in pods}
+            t_base = clock() if clock is not None else 0.0
+            t_end = t_base
+            for pod_id, batch in batches.items():
+                if clock is not None:
+                    clock.t = t_base
+                settle_pod(by_id[pod_id], batch)
+                if clock is not None:
+                    t_end = max(t_end, clock())
+            if clock is not None:
+                clock.t = t_end
     return out

@@ -6,6 +6,16 @@ query arrivals — the experimental design of §IV (five consecutive days per
 model, here a full week to match the CI traces). Method behaviour is injected
 through `Policy`, so the paper's baselines (Default/Gorilla/LiS/LiS*) are the
 same loop with features disabled — see core/baselines.py.
+
+Queries flow through an async two-phase API: `submit_query` opens a session
+on the execution backend (selection, mode and variant are decided at submit),
+`settle` resolves a batch of sessions and applies the TPS-switching decisions
+in arrival order. Backends that can overlap work (`max_concurrency > 1`, i.e.
+the engine) receive a whole arrival step's worth of sessions before settling,
+so concurrent users share decode steps; the analytic backend settles each
+session immediately, which keeps `run_week(backend="sim")` results
+bit-identical to the old blocking `handle_query` contract (itself retained as
+a shim over submit+settle).
 """
 from __future__ import annotations
 
@@ -15,7 +25,7 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from repro.core.carbon import CarbonAccountant, carbon_footprint, forecast_trace
-from repro.core.executor import SimExecutor, QueryExecution
+from repro.core.executor import QueryExecution, QuerySession, SimExecutor
 from repro.core.governor import CarbonGovernor, GovernorState
 from repro.core.power import OperatingMode, modes_for
 from repro.core.switching import VariantSwitcher
@@ -30,6 +40,20 @@ class Policy:
     carbon_modes: bool = True           # governor drives the mode?
     variant_switching: bool = True      # Q8<->Q4 TPS switching?
     fixed_variant: str = "q8"
+
+
+@dataclasses.dataclass
+class PendingQuery:
+    """A submitted-but-unsettled query: everything `settle` needs to turn the
+    backend session's `QueryExecution` into a `QueryRecord`."""
+    t: float
+    ci: float
+    mode_idx: int
+    mode: OperatingMode
+    variant: str
+    n_tools: int
+    extra_inf: float
+    session: QuerySession
 
 
 @dataclasses.dataclass
@@ -103,16 +127,17 @@ class CarbonCallRuntime:
         self.seed = seed
         self.rng = np.random.default_rng(seed)
 
-    def use_backend(self, backend: str):
+    def use_backend(self, backend: str, **engine_kw):
         """Swap the execution backend in place ("sim" | "engine"), rebuilding
-        the switcher's TPS reference against the new backend's timing model."""
+        the switcher's TPS reference against the new backend's timing model.
+        `engine_kw` reaches the EngineExecutor (e.g. a shared fleet clock)."""
         from repro.core.engine_executor import EngineExecutor, make_executor
         current = "engine" if isinstance(self.executor, EngineExecutor) else "sim"
         if backend == current:
             return self
         self.executor = make_executor(backend, self.executor.profile,
                                       self.executor.power_model.hw,
-                                      seed=self.executor.seed)
+                                      seed=self.executor.seed, **engine_kw)
         self.switcher.set_reference(self.executor.reference_tps(self.modes[0]))
         return self
 
@@ -145,8 +170,11 @@ class CarbonCallRuntime:
 
     # -- main entry ------------------------------------------------------------
 
-    def handle_query(self, t: float, query: Query, ci: float,
-                     gov_state: GovernorState) -> QueryRecord:
+    def submit_query(self, t: float, query: Query, ci: float,
+                     gov_state: GovernorState) -> PendingQuery:
+        """Phase 1: decide mode/variant/selection and open a backend session.
+        Nothing is resolved yet — overlapping submissions from many users
+        share the engine's decode slots once `settle` runs."""
         p = self.policy
         mode = self.modes[gov_state.mode_idx] if p.carbon_modes else self.modes[0]
         variant = self.switcher.variant if p.variant_switching else p.fixed_variant
@@ -155,34 +183,58 @@ class CarbonCallRuntime:
         if p.use_selection == "all_tools":
             correct = self._all_tools_success(len(query.true_tools))
 
-        ex = self.executor.run_query(
+        session = self.executor.begin_query(
             n_tools_in_prompt=n_tools, n_calls=len(query.true_tools),
             selection_correct=correct, variant=variant, mode=mode)
-        lat, en = ex.latency_s, ex.energy_j
-        if extra_inf:
-            # LiS recommender pass: ~200-token prompt, 30-token generation
-            pm = self.executor.power_model
-            prof = self.executor.profile
-            tpre = pm.prefill_time(200, prof.n_active * 2, mode)
-            tdec = 30 * pm.decode_time_per_token(
-                prof.active_bytes(variant), prof.kv_bytes_per_token, mode)
-            lat += tpre + tdec
-            en += (tpre + tdec) * pm.power(mode)
+        return PendingQuery(t=t, ci=ci, mode_idx=gov_state.mode_idx, mode=mode,
+                            variant=variant, n_tools=n_tools,
+                            extra_inf=extra_inf, session=session)
 
-        # TPS monitoring + variant switching
-        if p.variant_switching:
-            self.switcher.observe(t, ex.tps)
-            dec = self.switcher.decide(t)
-            if dec.switch_to and dec.switch_to != self.switcher.variant:
-                sl, se = self.executor.variant_switch_cost(dec.switch_to, mode)
-                lat += sl
-                en += se
-                self.switcher.apply(t, dec)
+    def settle(self, pending: List[PendingQuery]) -> List[QueryRecord]:
+        """Phase 2: resolve a batch of sessions on the backend, then apply
+        per-query post-processing (LiS extra inference, TPS observation and
+        variant switching) in arrival order — switch decisions land between
+        batches, never inside one."""
+        self.executor.settle([pq.session for pq in pending])
+        p = self.policy
+        records: List[QueryRecord] = []
+        for pq in pending:
+            ex = pq.session.execution
+            lat, en = ex.latency_s, ex.energy_j
+            if pq.extra_inf:
+                # LiS recommender pass: ~200-token prompt, 30-token generation
+                pm = self.executor.power_model
+                prof = self.executor.profile
+                tpre = pm.prefill_time(200, prof.n_active * 2, pq.mode)
+                tdec = 30 * pm.decode_time_per_token(
+                    prof.active_bytes(pq.variant), prof.kv_bytes_per_token,
+                    pq.mode)
+                lat += tpre + tdec
+                en += (tpre + tdec) * pm.power(pq.mode)
 
-        return QueryRecord(
-            t=t, latency_s=lat, energy_j=en,
-            carbon_g=carbon_footprint(en, ci), tps=ex.tps, variant=variant,
-            mode_idx=gov_state.mode_idx, n_tools=n_tools, succeeded=ex.succeeded)
+            # TPS monitoring + variant switching
+            if p.variant_switching:
+                self.switcher.observe(pq.t, ex.tps)
+                dec = self.switcher.decide(pq.t)
+                if dec.switch_to and dec.switch_to != self.switcher.variant:
+                    sl, se = self.executor.variant_switch_cost(dec.switch_to,
+                                                               pq.mode)
+                    lat += sl
+                    en += se
+                    self.switcher.apply(pq.t, dec)
+
+            records.append(QueryRecord(
+                t=pq.t, latency_s=lat, energy_j=en,
+                carbon_g=carbon_footprint(en, pq.ci), tps=ex.tps,
+                variant=pq.variant, mode_idx=pq.mode_idx, n_tools=pq.n_tools,
+                succeeded=ex.succeeded))
+        return records
+
+    def handle_query(self, t: float, query: Query, ci: float,
+                     gov_state: GovernorState) -> QueryRecord:
+        """Blocking shim: submit + settle of a single query (the pre-session
+        API, kept for callers that don't batch arrivals)."""
+        return self.settle([self.submit_query(t, query, ci, gov_state)])[0]
 
 
 def run_week(runtime: CarbonCallRuntime, workload: FunctionCallWorkload,
@@ -194,6 +246,11 @@ def run_week(runtime: CarbonCallRuntime, workload: FunctionCallWorkload,
     `backend="sim"` (analytic) or `"engine"` (real ServingEngine decode under
     the calibrated virtual clock) selects the execution backend; None keeps
     whatever executor the runtime was built with.
+
+    A concurrency-capable backend gets each step's arrivals submitted as one
+    batch and settled together (overlapping sessions share decode steps); a
+    blocking backend (sim) settles each query as it arrives, preserving the
+    exact pre-session-API result stream.
     """
     if backend is not None:
         runtime.use_backend(backend)
@@ -206,6 +263,7 @@ def run_week(runtime: CarbonCallRuntime, workload: FunctionCallWorkload,
     state = gov.init(forecast[:steps_per_day])
     records: List[QueryRecord] = []
     lam = queries_per_hour * step_minutes / 60.0
+    concurrent = getattr(runtime.executor, "max_concurrency", 1) > 1
     for i in range(len(ci)):
         t = i * step_minutes * 60.0
         if i % steps_per_day == 0:      # midnight: refresh the 24h forecast
@@ -213,8 +271,14 @@ def run_week(runtime: CarbonCallRuntime, workload: FunctionCallWorkload,
             state = gov.update(state, float(ci[i]), forecast_24h=fc)
         else:
             state = gov.update(state, float(ci[i]))
+        batch: List[PendingQuery] = []
         for q in range(rng.poisson(lam)):
             query = workload.sample()
-            rec = runtime.handle_query(t + 30.0 * q, query, float(ci[i]), state)
-            records.append(rec)
+            pq = runtime.submit_query(t + 30.0 * q, query, float(ci[i]), state)
+            if concurrent:
+                batch.append(pq)
+            else:
+                records.extend(runtime.settle([pq]))
+        if batch:
+            records.extend(runtime.settle(batch))
     return WeekResult(name=runtime.policy.name, records=records)

@@ -1,6 +1,12 @@
 from repro.serving.block_pool import BlockPool, PrefixCache, PrefixEntry
-from repro.serving.engine import ServingEngine, Request, VirtualClock
+from repro.serving.engine import (EngineClient, Request, ServingEngine,
+                                  VirtualClock)
 from repro.serving.sampler import sample_tokens
+from repro.serving.scheduler import (DeadlineExpiredError, EngineStallError,
+                                     RequestCancelledError, RequestHandle,
+                                     Scheduler, SessionRequest)
 
 __all__ = ["BlockPool", "PrefixCache", "PrefixEntry", "ServingEngine",
-           "Request", "VirtualClock", "sample_tokens"]
+           "EngineClient", "Request", "RequestHandle", "Scheduler",
+           "SessionRequest", "VirtualClock", "EngineStallError",
+           "DeadlineExpiredError", "RequestCancelledError", "sample_tokens"]

@@ -40,6 +40,18 @@ Timebase: `clock` defaults to wall time, but tests and the engine-backed
 carbon simulation inject a `VirtualClock` plus a `step_cost_fn`; each step
 then advances virtual time by a deterministic, power-model-derived duration
 instead of measuring the (meaningless on CPU) wall clock.
+
+Session API: requests enter through a `Scheduler` (serving/scheduler.py) —
+a priority waiting queue with deadlines — and callers hold `RequestHandle`s
+(`poll()`/`result()`/`cancel()`). `EngineClient` is the facade several users
+(e.g. a fleet pod's routed queries) share over ONE engine, so concurrent
+sessions occupy decode slots together. Under paged block-pool pressure the
+engine preempts the lowest-priority slot instead of reserving every slot's
+worst-case decode growth up front: the victim's blocks are freed, its tokens
+are saved, and it re-enters the queue; on resume the engine re-prefills the
+saved sequence at its exact original positions (right-padded to a power-of-two
+width, so causality makes the padding numerically invisible), which keeps
+temperature-0 token streams identical to an unpreempted run.
 """
 from __future__ import annotations
 
@@ -55,6 +67,9 @@ from repro.config import ModelConfig, RuntimeConfig
 from repro.models import get_model
 from repro.serving.block_pool import BlockPool, PrefixCache
 from repro.serving.sampler import sample_tokens
+from repro.serving.scheduler import (
+    CANCELLED, DONE, EngineStallError, RequestHandle, RUNNING, Scheduler,
+    SessionRequest, TERMINAL, WAITING)
 from repro.sharding.param import init_params
 
 
@@ -65,11 +80,19 @@ class Request:
     max_new_tokens: int = 32
     eos_id: int = 1
     temperature: float = 0.0
+    priority: int = 0                      # larger runs first / preempts lower
+    deadline: Optional[float] = None       # absolute engine-clock queue limit
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
+    status: str = WAITING
     submit_time: float = 0.0
+    enqueue_time: float = 0.0
     first_token_time: Optional[float] = None
     done_time: Optional[float] = None
+    seq: int = -1                          # submission order (scheduler key)
+    admit_seq: int = -1                    # admission order (victim tie-break)
+    # saved token sequence (exact KV positions 0..len-1) while preempted
+    resume_row: Optional[np.ndarray] = None
 
 
 class VirtualClock:
@@ -161,7 +184,6 @@ class ServingEngine:
             self.block_tables = np.zeros((max_batch, self.blocks_per_slot),
                                          np.int32)
             self.slot_blocks: List[List[int]] = [[] for _ in range(max_batch)]
-            self.slot_end = [0] * max_batch   # worst-case final fill per slot
             self.lengths = np.zeros((max_batch,), np.int32)
             self.cache = None
             self.cow_count = 0
@@ -170,7 +192,13 @@ class ServingEngine:
             self.cache = init_params(cache_spec, jax.random.PRNGKey(0))
             self.lengths = jnp.zeros((max_batch,), jnp.int32)
         self.slots: List[Optional[Request]] = [None] * max_batch
-        self.pending: List[Request] = []
+        # the admitted token row + emitted-count baseline per slot: together
+        # they reconstruct the exact KV sequence when a slot is preempted
+        self._slot_row: List[Optional[np.ndarray]] = [None] * max_batch
+        self._slot_emit0 = [0] * max_batch
+        self.scheduler = Scheduler()
+        self._admit_seq = 0
+        self._rid_counter = 0
         self.key = jax.random.PRNGKey(42)
 
         # per-variant executable caches: a hot swap flips the param tree
@@ -189,6 +217,7 @@ class ServingEngine:
         self.tokens_emitted = 0
         self.prefill_tokens_total = 0
         self.prefill_tokens_saved = 0
+        self.peak_active = 0               # max concurrent resident sessions
         self.step_log: List[Dict] = []
 
     # -- jitted bodies ------------------------------------------------------
@@ -280,16 +309,51 @@ class ServingEngine:
         self.variant_name = variant_name
         self.swap_count += 1
 
-    def submit(self, req: Request):
-        req.submit_time = self.clock()
-        self.pending.append(req)
+    def submit(self, req: Request) -> RequestHandle:
+        """Queue a request; returns an async handle (poll/result/cancel)."""
+        self.scheduler.enqueue(req, self.clock())
+        return RequestHandle(self, req)
+
+    def client(self) -> "EngineClient":
+        """A submission facade onto this (possibly shared) engine."""
+        return EngineClient(self)
+
+    def next_rid(self) -> int:
+        self._rid_counter += 1
+        return self._rid_counter - 1
+
+    def cancel(self, req: Request) -> bool:
+        """Cancel a waiting or running request, freeing its slot and blocks.
+        False if it already reached a terminal state."""
+        if req.status in TERMINAL:
+            return False
+        if req.status == WAITING:
+            self.scheduler.remove(req)
+        elif req in self.slots:
+            self._free_slot(self.slots.index(req))
+        req.status = CANCELLED
+        req.resume_row = None
+        self.scheduler.cancelled += 1
+        return True
+
+    @property
+    def pending(self) -> List[Request]:
+        """Waiting requests in admission (priority) order."""
+        return self.scheduler.waiting
 
     @property
     def active(self) -> int:
         return sum(s is not None for s in self.slots)
 
     def has_work(self) -> bool:
-        return self.active > 0 or bool(self.pending)
+        return self.active > 0 or self.scheduler.has_waiting()
+
+    def scheduler_stats(self) -> Dict[str, float]:
+        """Scheduler counters plus the engine's slot-occupancy high-water
+        mark (`peak_active` >= 2 means cross-request batched decode)."""
+        stats = self.scheduler.stats()
+        stats["peak_active"] = self.peak_active
+        return stats
 
     def prefix_cache_stats(self) -> Dict[str, int]:
         if self.kv_layout != "paged":
@@ -303,33 +367,52 @@ class ServingEngine:
                 "prefill_tokens_saved": self.prefill_tokens_saved}
 
     def step(self) -> List[Request]:
-        """Admit pending requests into all free slots (one batched prefill) or
-        run one batched decode step. Returns requests completed this step."""
+        """Admit waiting requests into free slots (one batched prefill, or one
+        preemption-resume re-prefill) or run one batched decode step. Returns
+        requests completed this step."""
         t0 = self.clock()
+        self.scheduler.expire_due(t0)
         completed: List[Request] = []
         free = [i for i, s in enumerate(self.slots) if s is None]
         admitted: List[Request] = []
         charged = cached = 0
-        if self.pending and free:
-            admitted, charged, cached = self._admit_batch(free)
+        resumed = False
+        head = self.scheduler.head()
+        if head is not None and free:
+            if head.resume_row is not None:
+                # strict priority: a blocked resume never lets lower-priority
+                # fresh admissions jump it — decode continues instead
+                got = self._try_resume(head, free[0])
+                if got >= 0:
+                    admitted, charged, resumed = [head], got, True
+            else:
+                admitted, charged, cached = self._admit_batch(free)
+        rids: List[int] = []
         if admitted:
-            tokens_this_step = len(admitted)     # one sampled token each
+            # one sampled token per fresh admission; a resume re-prefills
+            # already-emitted context and samples nothing new
+            tokens_this_step = 0 if resumed else len(admitted)
             occupancy = self.active              # includes the new slots
             kind = "prefill"
+            rids = [r.rid for r in admitted]
         elif self.active:
-            occupancy = self.active              # before completions free slots
-            tokens_this_step = self._decode_active(completed)
+            tokens_this_step, rids = self._decode_active(completed)
+            occupancy = max(len(rids), 1)        # before completions free slots
             kind = "decode"
         else:
-            if self.pending:
+            if self.scheduler.has_waiting():
                 raise RuntimeError(
                     "paged KV pool exhausted: cannot admit any pending "
                     "request with an idle engine — raise num_blocks")
             return completed
+        self.peak_active = max(self.peak_active, self.active, occupancy)
         if self.step_cost_fn is not None and hasattr(self.clock, "advance"):
             # cost basis is the *computed* prompt work: the full requested
             # prompt size (no free truncation discount vs the analytic
-            # backend) minus tokens served from the prefix cache
+            # backend) minus tokens served from the prefix cache; a resume
+            # is charged its full re-prefilled sequence (preemption is not
+            # free, which is exactly why the scheduler only uses it under
+            # real pool pressure)
             cost_tokens = charged if kind == "prefill" else tokens_this_step
             cost = float(self.step_cost_fn(kind, cost_tokens, occupancy))
             if cost > 0.0:
@@ -342,7 +425,7 @@ class ServingEngine:
             "kind": kind, "tokens": tokens_this_step, "dt": dt,
             "tps": tokens_this_step / dt, "variant": self.variant_name,
             "active": occupancy, "prompt_tokens": charged,
-            "cached_tokens": cached,
+            "cached_tokens": cached, "rids": rids,
         })
         return completed
 
@@ -350,8 +433,12 @@ class ServingEngine:
         done = []
         for _ in range(max_steps):
             if not self.has_work():
-                break
+                return done
             done.extend(self.step())
+        if self.has_work():
+            raise EngineStallError(
+                f"engine not drained after {max_steps} steps "
+                f"(active={self.active}, waiting={len(self.pending)})")
         return done
 
     # -- admission ----------------------------------------------------------
@@ -361,8 +448,11 @@ class ServingEngine:
         (admitted requests, prompt tokens charged, prompt tokens cached)."""
         if self.kv_layout == "paged":
             return self._admit_batch_paged(free)
-        n = min(len(free), len(self.pending))
-        reqs = [self.pending.pop(0) for _ in range(n)]
+        waiting = self.scheduler.waiting
+        reqs = waiting[:min(len(free), len(waiting))]
+        now = self.clock()
+        for req in reqs:
+            self.scheduler.note_admitted(req, now)
         b = _bucket(max(len(r.prompt) for r in reqs), self.prompt_buckets)
         toks = np.zeros((self.max_batch, b), np.int32)
         for i, r in enumerate(reqs):
@@ -375,30 +465,46 @@ class ServingEngine:
                 lambda c, p: c.at[:, slot].set(p[:, i].astype(c.dtype))
                 if c.ndim >= 2 else c, self.cache, cache_n)
             self.lengths = self.lengths.at[slot].set(int(lengths_n[i]))
-            self.slots[slot] = req
+            self._place(req, slot, toks[i])
             tok = self._sample(logits[i:i + 1], req)
             self._emit(req, slot, int(tok[0]))
+            self._slot_emit0[slot] = len(req.output)
         return reqs, sum(len(r.prompt) for r in reqs), 0
+
+    def _place(self, req: Request, slot: int, row: np.ndarray):
+        """Common slot bookkeeping at (re)admission."""
+        self.slots[slot] = req
+        self._slot_row[slot] = np.asarray(row, np.int32)
+        req.status = RUNNING
+        req.admit_seq = self._admit_seq
+        self._admit_seq += 1
 
     def _admit_batch_paged(self, free: List[int]):
         """Paged admission: look up each prompt's longest cached prefix chain,
         share those blocks (copy-on-write protected), allocate fresh blocks
-        for the rest, and prefill only the non-cached suffixes. Requests that
-        cannot get blocks even after cache eviction stay queued (FIFO)."""
+        for the rest, and prefill only the non-cached suffixes.
+
+        Block accounting is watermark-based: an admission needs its fresh
+        prompt blocks plus one near-term growth block per resident slot —
+        NOT the old worst-case decode-growth reserve. Over-commitment is
+        resolved later by preemption (see `_decode_alloc`), so slots admit
+        far more eagerly. The queue head may preempt strictly-lower-priority
+        running slots to get in; deeper queue entries only take what is
+        freely available and otherwise stay queued."""
         bs = self.block_size
-        b = _bucket(max(len(r.prompt)
-                        for r in self.pending[:len(free)]),
-                    self.prompt_buckets)
+        cand: List[Request] = []
+        for req in self.scheduler.waiting:
+            if req.resume_row is not None:
+                break               # resumes are re-admitted one per step
+            cand.append(req)
+            if len(cand) == len(free):
+                break
+        if not cand:
+            return [], 0, 0
+        b = _bucket(max(len(r.prompt) for r in cand), self.prompt_buckets)
         nb_prompt = -(-b // bs)
-        # decode-growth debt of the slots already active: blocks their
-        # generations may still claim (plus one CoW allowance each) — new
-        # admissions must never eat into it, or decode deadlocks mid-stream
-        outstanding = sum(
-            max(0, -(-self.slot_end[s] // bs) - len(self.slot_blocks[s])) + 1
-            for s, r_ in enumerate(self.slots) if r_ is not None)
         rows = []          # admission records
-        while self.pending and len(rows) < len(free):
-            req = self.pending[0]
+        for pos, req in enumerate(cand):
             row = self._padded_row(req.prompt, b)
             hit = self.prefix_cache.lookup(row, salt=self.variant_name)
             cached_len = hit.cached_len if hit else 0
@@ -414,28 +520,18 @@ class ServingEngine:
             # pressure must not free blocks this admission is about to share
             for bid in cached_blocks:
                 self.block_pool.incref(bid)
-            end = min(b + req.max_new_tokens, self.max_seq)
-            growth = max(0, -(-end // bs) - nb_prompt) + 1
-            fresh = self._alloc_blocks(nb_prompt - len(cached_blocks))
-            if fresh is not None:
-                # this request's full decode-growth debt must fit alongside
-                # everything already promised, or it is deferred — admission
-                # over-commitment is the only way decode can deadlock
-                reserve = outstanding + growth
-                while (self.block_pool.num_free < reserve
-                       and self.prefix_cache.evict_lru()):
-                    pass
-                if self.block_pool.num_free < reserve:
-                    for bid in fresh:
-                        self.block_pool.decref(bid)
-                    fresh = None
+            n_fresh = nb_prompt - len(cached_blocks)
+            headroom = self.active + len(rows) + 1
+            preempted_before = self.scheduler.preemptions
+            ok = self._reclaim(n_fresh + headroom,
+                               priority=req.priority if pos == 0 else None)
+            fresh = self._alloc_blocks(n_fresh) if ok else None
             if fresh is None:
                 for bid in cached_blocks:
                     self.block_pool.decref(bid)
                 break
-            self.pending.pop(0)
-            outstanding += growth
-            rows.append({"req": req, "row": row, "hit": hit, "end": end,
+            self.scheduler.note_admitted(req, self.clock())
+            rows.append({"req": req, "row": row, "hit": hit,
                          "cached_len": cached_len,
                          "blocks": cached_blocks + fresh})
             # hit/miss accounting only for *completed* admissions — a
@@ -444,6 +540,12 @@ class ServingEngine:
                 self.prefix_cache.hits += 1
             else:
                 self.prefix_cache.misses += 1
+            if self.scheduler.preemptions > preempted_before:
+                # the head preempted a victim to get in: stop the batch here
+                # so the requeued victim (front of its priority class) is
+                # reconsidered before lower-priority fresh candidates grab
+                # its freed blocks — no same-step priority inversion
+                break
         if not rows:
             return [], 0, 0
 
@@ -470,16 +572,108 @@ class ServingEngine:
             charged += max(0, len(req.prompt) - cached_real)
             cached += cached_real
             self.slot_blocks[slot] = list(r["blocks"])
-            self.slot_end[slot] = r["end"]
             self.block_tables[slot] = 0
             self.block_tables[slot, :len(r["blocks"])] = r["blocks"]
             self.lengths[slot] = b
-            self.slots[slot] = req
+            self._place(req, slot, r["row"])
             tok = self._sample(r["logits"][None, :], req)
             self._emit(req, slot, int(tok[0]))
+            self._slot_emit0[slot] = len(req.output)
         self.prefill_tokens_total += charged + cached
         self.prefill_tokens_saved += cached
         return [r["req"] for r in rows], charged, cached
+
+    # -- preemption / resume -------------------------------------------------
+
+    def _reclaim(self, want_free: int, *, priority: Optional[int]) -> bool:
+        """Bring the pool's free count up to `want_free`: first by LRU
+        prefix-cache eviction, then (when `priority` is given) by preempting
+        strictly-lower-priority running slots on the caller's behalf."""
+        while self.block_pool.num_free < want_free:
+            if self.prefix_cache.evict_lru():
+                continue
+            victim = None
+            if priority is not None:
+                victim = Scheduler.pick_victim(
+                    [(s, r) for s, r in enumerate(self.slots)
+                     if r is not None], below=priority)
+            if victim is None:
+                return False
+            self._preempt_slot(victim)
+        return True
+
+    def _preempt_slot(self, i: int):
+        """Evict slot `i`: save the exact token sequence its KV covers
+        (admitted row + tokens emitted since, truncated at the saturation
+        cap), free its blocks, and put it back at the front of its priority
+        class. Temperature-0 streams resume token-identically."""
+        req = self.slots[i]
+        e = self._slot_emit0[i]
+        seq = np.concatenate([
+            self._slot_row[i],
+            np.asarray(req.output[e - 1:len(req.output) - 1], np.int32)])
+        req.resume_row = seq[:int(self.lengths[i])]
+        self._free_slot(i)
+        self.scheduler.preemptions += 1
+        self.scheduler.requeue(req, self.clock())
+
+    def _try_resume(self, req: Request, slot: int) -> int:
+        """Re-admit a preempted request: allocate blocks for its saved
+        sequence and re-prefill it at the exact original positions. The row
+        is right-padded to a power-of-two width — causal attention never sees
+        the padding, so the restored KV is bit-identical to what the slot
+        held at preemption. Returns the recomputed token count (the step's
+        charged prefill work), or -1 if blocks are still unavailable."""
+        bs = self.block_size
+        row = req.resume_row
+        L = len(row)
+        nb = -(-L // bs)
+        if not self._reclaim(nb + self.active + 1, priority=req.priority):
+            return -1
+        blocks = self._alloc_blocks(nb)
+        if blocks is None:                   # unreachable after _reclaim
+            return -1
+        W = _pow2(L, self.max_seq)
+        toks = np.zeros((self.max_batch, W), np.int32)
+        toks[0, :L] = row
+        _, cache_n, _ = self._prefill_fn()(self.params,
+                                           self._prefill_batch(toks))
+        dst = [blocks[p // bs] * bs + p % bs for p in range(L)]
+        self.pool = self._scatter_cache_fn(
+            self.pool, cache_n,
+            *self._scatter_idx(dst, [0] * L, list(range(L))))
+        self.slot_blocks[slot] = list(blocks)
+        self.block_tables[slot] = 0
+        self.block_tables[slot, :nb] = blocks
+        self.lengths[slot] = L
+        self._place(req, slot, row)
+        self._slot_emit0[slot] = len(req.output)
+        req.resume_row = None
+        self.scheduler.note_admitted(req, self.clock())
+        return L
+
+    def _decode_alloc(self, i: int) -> Optional[int]:
+        """Allocate one block for decoding slot `i` under pool pressure:
+        evict cached prefixes, then preempt the lowest-priority slot (most
+        recently admitted on ties). Returns None when slot `i` preempted
+        *itself* (its decode is skipped this step); raises only when a single
+        resident sequence genuinely cannot fit the pool."""
+        while True:
+            bid = self.block_pool.alloc()
+            if bid is not None:
+                return bid
+            if self.prefix_cache.evict_lru():
+                continue
+            active = [(s, r) for s, r in enumerate(self.slots)
+                      if r is not None]
+            if len(active) <= 1:
+                raise RuntimeError(
+                    "paged KV pool exhausted mid-decode with no preemptable "
+                    "slot — raise num_blocks")
+            victim = Scheduler.pick_victim(active)
+            self._preempt_slot(victim)
+            if victim == i:
+                return None
 
     def _prefill_cold(self, compute, b: int):
         """No cached prefix anywhere in the batch: run the stock full-row
@@ -580,7 +774,10 @@ class ServingEngine:
 
     # -- decode -------------------------------------------------------------
 
-    def _decode_active(self, completed: List[Request]) -> int:
+    def _decode_active(self, completed: List[Request]):
+        """One batched decode step over the resident slots. Returns
+        (tokens emitted, rids of the slots that actually decoded — block
+        pressure may preempt slots out of the step)."""
         last = np.zeros((self.max_batch, 1), np.int32)
         for i, req in enumerate(self.slots):
             if req is not None:
@@ -605,6 +802,7 @@ class ServingEngine:
                 jnp.asarray([s is not None for s in self.slots]),
                 jnp.minimum(self.lengths + 1, self.max_seq), self.lengths)
         emitted = 0
+        rids: List[int] = []
         toks = None
         for i, req in enumerate(self.slots):
             if req is None:
@@ -614,50 +812,54 @@ class ServingEngine:
             tok = int(toks[i])
             self._emit(req, i, tok)
             emitted += 1
+            rids.append(req.rid)
             if tok == req.eos_id or len(req.output) >= req.max_new_tokens:
                 completed.append(req)        # done_time stamped at end of step
+                req.status = DONE
                 self._free_slot(i)
-        return emitted
+        return emitted, rids
 
     def _prepare_decode_blocks(self):
         """Host-side block management before a paged decode step: extend a
         slot's chain when its write position crosses a block boundary, and
         copy-on-write when it is about to write into a shared block (a cached
-        prefix whose last block is partially filled — divergence point)."""
+        prefix whose last block is partially filled — divergence point).
+        Allocation failures preempt the lowest-priority slot instead of
+        crashing — the scheduling answer to removing the admission-time
+        decode-growth reserve."""
         bs = self.block_size
         for i, req in enumerate(self.slots):
-            if req is None:
-                continue
+            if req is None or self.slots[i] is None:
+                continue                     # slot preempted earlier this step
             pos = int(self.lengths[i])
             if pos >= self.max_seq:
                 continue                     # write is dropped by the model
             blk = pos // bs
             bid = int(self.block_tables[i, blk])
             if bid == 0:
-                new = self._alloc_blocks(1)
+                new = self._decode_alloc(i)
                 if new is None:
-                    raise RuntimeError("paged KV pool exhausted mid-decode — "
-                                       "raise num_blocks")
-                self.block_tables[i, blk] = new[0]
-                self.slot_blocks[i].append(new[0])
+                    continue                 # slot i preempted itself
+                self.block_tables[i, blk] = new
+                self.slot_blocks[i].append(new)
             elif self.block_pool.is_shared(bid):
-                new = self._alloc_blocks(1)
+                new = self._decode_alloc(i)
                 if new is None:
-                    raise RuntimeError("paged KV pool exhausted at "
-                                       "copy-on-write — raise num_blocks")
-                self.pool = self._copy_block_fn(self.pool, new[0], bid)
+                    continue
+                self.pool = self._copy_block_fn(self.pool, new, bid)
                 self.block_pool.decref(bid)
-                self.block_tables[i, blk] = new[0]
-                self.slot_blocks[i][blk] = new[0]
+                self.block_tables[i, blk] = new
+                self.slot_blocks[i][blk] = new
                 self.cow_count += 1
 
     def _free_slot(self, i: int):
         self.slots[i] = None
+        self._slot_row[i] = None
+        self._slot_emit0[i] = 0
         if self.kv_layout == "paged":
             for bid in self.slot_blocks[i]:
                 self.block_pool.decref(bid)
             self.slot_blocks[i] = []
-            self.slot_end[i] = 0
             self.block_tables[i] = 0
             self.lengths[i] = 0
         else:
@@ -680,3 +882,48 @@ class ServingEngine:
         if not log:
             return 0.0
         return sum(s["tokens"] for s in log) / max(sum(s["dt"] for s in log), 1e-9)
+
+
+class EngineClient:
+    """Submission facade over a shared `ServingEngine`.
+
+    Several producers (a pod's routed queries, an executor's overlapping
+    query sessions) hold clients onto ONE engine, so their requests occupy
+    decode slots together — the cross-user batching a per-query
+    `run_until_drained` loop never achieves. `submit` returns immediately
+    with a `RequestHandle`; `settle` steps the shared engine until a set of
+    handles is terminal (other users' requests make progress on the same
+    steps)."""
+
+    def __init__(self, engine: ServingEngine):
+        self.engine = engine
+
+    def submit(self, sreq: SessionRequest) -> RequestHandle:
+        deadline = (None if sreq.deadline_s is None
+                    else self.engine.clock() + sreq.deadline_s)
+        req = Request(rid=self.engine.next_rid(), prompt=list(sreq.prompt),
+                      max_new_tokens=sreq.max_new_tokens, eos_id=sreq.eos_id,
+                      temperature=sreq.temperature, priority=sreq.priority,
+                      deadline=deadline)
+        return self.engine.submit(req)
+
+    def step(self) -> List[Request]:
+        return self.engine.step()
+
+    def settle(self, handles: List[RequestHandle], *,
+               max_steps: int = 100000) -> List[RequestHandle]:
+        """Run the shared engine until every handle is terminal (done,
+        cancelled or deadline-expired)."""
+        for _ in range(max_steps):
+            if all(h.done() for h in handles):
+                return handles
+            if not self.engine.has_work():
+                break
+            self.engine.step()
+        if not all(h.done() for h in handles):
+            raise EngineStallError(
+                f"{sum(not h.done() for h in handles)} session(s) not "
+                f"terminal after {max_steps} steps "
+                f"(active={self.engine.active}, "
+                f"waiting={len(self.engine.pending)})")
+        return handles

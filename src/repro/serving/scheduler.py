@@ -1,0 +1,228 @@
+"""Preemptive session scheduler for the serving engine.
+
+This module owns the *policy* side of the async session API: a priority
+waiting queue, deadline expiry, and the preemption bookkeeping that replaced
+PR 2's eager decode-growth block reserve. The `ServingEngine` owns slots and
+blocks (the mechanism); it consults the scheduler for WHO runs next and WHO
+gets evicted when the paged block pool is under pressure.
+
+Lifecycle of a request::
+
+    submit -> WAITING -> RUNNING -> DONE
+                 ^          |
+                 |          +--> CANCELLED   (handle.cancel() mid-stream)
+                 +--- preempt (requeued with saved tokens; resumes with an
+                 |    exact-position re-prefill, so temperature-0 streams are
+                 |    identical to an unpreempted run)
+                 +--> EXPIRED   (deadline passed while waiting)
+
+Preemption policy: the victim is the lowest-priority active slot, ties broken
+toward the most recently admitted (LIFO, vLLM-style). Admission only preempts
+*strictly* lower-priority victims on behalf of the queue head — equal-priority
+work never preempts itself, so FIFO workloads behave exactly like a
+non-preemptive queue. Mid-decode pool exhaustion may preempt any slot
+(including the requester, when other slots can still make progress).
+
+`RequestHandle` is the user-facing side: `poll()` (non-blocking status),
+`result()` (step the engine until terminal), `cancel()`. Handles are created
+by `EngineClient.submit` / `ServingEngine.submit`.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard (engine -> scheduler)
+    from repro.serving.engine import Request, ServingEngine
+
+
+# request lifecycle states
+WAITING = "waiting"
+RUNNING = "running"
+DONE = "done"
+CANCELLED = "cancelled"
+EXPIRED = "expired"
+TERMINAL = (DONE, CANCELLED, EXPIRED)
+
+
+class EngineStallError(RuntimeError):
+    """`run_until_drained` exhausted its step budget with work still queued
+    or resident — a silent partial result would masquerade as completion."""
+
+
+class DeadlineExpiredError(RuntimeError):
+    """`result()` called on a request whose deadline passed while waiting."""
+
+
+class RequestCancelledError(RuntimeError):
+    """`result()` called on a cancelled request."""
+
+
+@dataclasses.dataclass
+class SessionRequest:
+    """User-facing request spec for `EngineClient.submit`.
+
+    `priority`: larger runs first (and may preempt strictly smaller).
+    `deadline_s`: max *queue wait* in engine-clock seconds; a request still
+    waiting past its deadline fails cleanly with status EXPIRED.
+    """
+    prompt: List[int]
+    max_new_tokens: int = 32
+    eos_id: int = 1
+    temperature: float = 0.0
+    priority: int = 0
+    deadline_s: Optional[float] = None
+
+
+class RequestHandle:
+    """Async handle onto one engine request: poll / result / cancel."""
+
+    def __init__(self, engine: "ServingEngine", req: "Request"):
+        self.engine = engine
+        self.request = req
+
+    @property
+    def rid(self) -> int:
+        return self.request.rid
+
+    def poll(self) -> str:
+        """Current lifecycle state (non-blocking)."""
+        return self.request.status
+
+    def done(self) -> bool:
+        return self.request.status in TERMINAL
+
+    def result(self, *, max_steps: int = 100_000) -> "Request":
+        """Step the engine until this request is terminal, then return it.
+        Raises DeadlineExpiredError / RequestCancelledError for requests that
+        did not finish, and EngineStallError if the step budget runs out."""
+        req = self.request
+        for _ in range(max_steps):
+            if req.status in TERMINAL:
+                break
+            self.engine.step()
+        if req.status not in TERMINAL:
+            raise EngineStallError(
+                f"request {req.rid} not terminal after {max_steps} steps "
+                f"(active={self.engine.active}, "
+                f"waiting={len(self.engine.pending)})")
+        if req.status == EXPIRED:
+            raise DeadlineExpiredError(
+                f"request {req.rid} expired after waiting past its deadline")
+        if req.status == CANCELLED:
+            raise RequestCancelledError(f"request {req.rid} was cancelled")
+        return req
+
+    def cancel(self) -> bool:
+        """Cancel a waiting or running request; frees its slot and blocks.
+        Returns False if the request already reached a terminal state."""
+        return self.engine.cancel(self.request)
+
+
+class Scheduler:
+    """Priority waiting queue + preemption policy + counters for one engine.
+
+    Queue order is (-priority, submission seq); a preempted request keeps its
+    original seq, so it re-enters at the front of its priority class and
+    resumes before newer same-priority arrivals.
+    """
+
+    def __init__(self):
+        self._order: List[Tuple[int, int]] = []      # sort keys
+        self._queue: List["Request"] = []            # parallel to _order
+        self._seq = 0
+        # counters (surfaced via ServingEngine.scheduler_stats())
+        self.admitted = 0
+        self.preemptions = 0
+        self.requeues = 0
+        self.expired = 0
+        self.cancelled = 0
+        self.queue_wait_s = 0.0
+
+    # -- queue ---------------------------------------------------------------
+
+    @property
+    def waiting(self) -> List["Request"]:
+        return list(self._queue)
+
+    def has_waiting(self) -> bool:
+        return bool(self._queue)
+
+    def _push(self, req: "Request"):
+        key = (-req.priority, req.seq)
+        i = bisect.bisect_right(self._order, key)
+        self._order.insert(i, key)
+        self._queue.insert(i, req)
+
+    def enqueue(self, req: "Request", now: float):
+        """First submission: stamp times/seq and queue by priority."""
+        req.status = WAITING
+        req.submit_time = now
+        req.enqueue_time = now
+        req.seq = self._seq
+        self._seq += 1
+        self._push(req)
+
+    def requeue(self, req: "Request", now: float):
+        """Re-queue a preempted request (keeps its original seq, so it sits
+        at the front of its priority class)."""
+        req.status = WAITING
+        req.enqueue_time = now
+        self.requeues += 1
+        self._push(req)
+
+    def head(self) -> Optional["Request"]:
+        return self._queue[0] if self._queue else None
+
+    def remove(self, req: "Request") -> bool:
+        try:
+            i = self._queue.index(req)
+        except ValueError:
+            return False
+        self._queue.pop(i)
+        self._order.pop(i)
+        return True
+
+    def note_admitted(self, req: "Request", now: float):
+        self.remove(req)
+        req.status = RUNNING
+        # the deadline bounds QUEUE WAIT only: once admitted it is satisfied
+        # for good, so a later preemption can never expire a started stream
+        req.deadline = None
+        self.admitted += 1
+        self.queue_wait_s += max(0.0, now - req.enqueue_time)
+
+    def expire_due(self, now: float) -> List["Request"]:
+        """Fail (cleanly) every waiting request whose deadline has passed."""
+        due = [r for r in self._queue
+               if r.deadline is not None and now > r.deadline]
+        for req in due:
+            self.remove(req)
+            req.status = EXPIRED
+            self.expired += 1
+        return due
+
+    # -- preemption policy ---------------------------------------------------
+
+    @staticmethod
+    def pick_victim(active: Sequence[Tuple[int, "Request"]], *,
+                    below: Optional[int] = None) -> Optional[int]:
+        """Choose the slot to preempt among `(slot, request)` pairs: lowest
+        priority first, most recently admitted on ties. With `below`, only
+        strictly-lower-priority victims qualify (admission preemption must
+        never preempt an equal — that way FIFO traffic is never disturbed)."""
+        pool = [(r.priority, -r.admit_seq, s) for s, r in active
+                if below is None or r.priority < below]
+        if not pool:
+            return None
+        return min(pool)[2]
+
+    def stats(self) -> Dict[str, float]:
+        return {"admitted": self.admitted,
+                "preemptions": self.preemptions,
+                "requeues": self.requeues,
+                "expired": self.expired,
+                "cancelled": self.cancelled,
+                "queue_wait_s": round(self.queue_wait_s, 6),
+                "waiting": len(self._queue)}

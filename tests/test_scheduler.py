@@ -1,0 +1,311 @@
+"""Async session API + preemptive scheduler: priority ordering, preemption
+with exact greedy-stream restoration, cancel/deadline lifecycle, stall
+detection, and engine-backed fleets with real concurrent slot occupancy."""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig, RuntimeConfig
+from repro.models import get_model
+from repro.serving import (DeadlineExpiredError, EngineStallError, Request,
+                           RequestCancelledError, ServingEngine,
+                           SessionRequest, VirtualClock)
+from repro.sharding.param import init_params
+
+CFG = ModelConfig(name="tiny", family="transformer", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256)
+RCFG = RuntimeConfig()
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(get_model(CFG).param_spec(), jax.random.PRNGKey(0))
+
+
+def _engine(params, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_seq", 64)
+    return ServingEngine(CFG, params, RCFG, kv_layout="paged", **kw)
+
+
+# ---------------------------------------------------------------------------
+# handles + priority queue
+# ---------------------------------------------------------------------------
+
+
+def test_client_handle_lifecycle(params):
+    eng = _engine(params)
+    client = eng.client()
+    h = client.submit(SessionRequest(prompt=[3, 4, 5], max_new_tokens=4,
+                                     eos_id=-1))
+    assert h.poll() == "waiting"
+    eng.step()
+    assert h.poll() == "running"
+    req = h.result()
+    assert h.poll() == "done" and h.done()
+    assert len(req.output) == 4
+    # result() on a finished handle is idempotent
+    assert h.result() is req
+
+
+def test_priority_orders_admission(params):
+    """While the single slot is busy, waiters are admitted highest-priority
+    first; submission order breaks ties (FIFO within a class)."""
+    eng = _engine(params, max_batch=1)
+    eng.submit(Request(rid=0, prompt=[2, 2], max_new_tokens=6, eos_id=-1))
+    eng.step()                                    # rid 0 occupies the slot
+    eng.submit(Request(rid=1, prompt=[3, 3], max_new_tokens=2, eos_id=-1))
+    eng.submit(Request(rid=2, prompt=[4, 4], max_new_tokens=2, eos_id=-1,
+                       priority=5))
+    eng.submit(Request(rid=3, prompt=[5, 5], max_new_tokens=2, eos_id=-1,
+                       priority=1))
+    eng.submit(Request(rid=4, prompt=[6, 6], max_new_tokens=2, eos_id=-1,
+                       priority=5))
+    assert [r.rid for r in eng.pending] == [2, 4, 3, 1]
+    done = eng.run_until_drained()
+    assert [r.rid for r in done] == [0, 2, 4, 3, 1]
+
+
+def test_scheduler_counts_queue_wait(params):
+    clock = VirtualClock()
+    eng = _engine(params, max_batch=1, clock=clock,
+                  step_cost_fn=lambda kind, tok, act: 1.0)
+    eng.submit(Request(rid=0, prompt=[2, 2], max_new_tokens=3, eos_id=-1))
+    eng.submit(Request(rid=1, prompt=[3, 3], max_new_tokens=2, eos_id=-1))
+    eng.run_until_drained()
+    stats = eng.scheduler_stats()
+    assert stats["admitted"] == 2
+    # rid 1 waited out rid 0's prefill + 2 decode steps (1s each)
+    assert stats["queue_wait_s"] == pytest.approx(3.0)
+
+
+# ---------------------------------------------------------------------------
+# preemption under pool pressure
+# ---------------------------------------------------------------------------
+
+
+def _preempt_run(params, *, victim_priority=0, preemptor_priority=10):
+    """A low-priority stream is mid-decode when a high-priority admission
+    arrives into a pool too small for both; returns (engine, victim, high)."""
+    eng = _engine(params, num_blocks=6)    # 5 usable blocks, 2 slots
+    victim = Request(rid=0, prompt=[3] * 20, max_new_tokens=20, eos_id=-1,
+                     priority=victim_priority)
+    eng.submit(victim)
+    for _ in range(6):
+        eng.step()                         # prefill + 5 decode steps
+    high = Request(rid=1, prompt=[9] * 20, max_new_tokens=4, eos_id=-1,
+                   priority=preemptor_priority)
+    eng.submit(high)
+    eng.run_until_drained()
+    return eng, victim, high
+
+
+def test_preemption_restores_exact_token_stream(params):
+    """The acceptance bar: a preempted request's final greedy stream is
+    token-identical to an unpreempted run of the same prompt."""
+    solo_eng = _engine(params)             # default pool: no pressure
+    solo = Request(rid=0, prompt=[3] * 20, max_new_tokens=20, eos_id=-1)
+    solo_eng.submit(solo)
+    solo_eng.run_until_drained()
+
+    eng, victim, high = _preempt_run(params)
+    stats = eng.scheduler_stats()
+    assert stats["preemptions"] >= 1
+    assert stats["requeues"] == stats["preemptions"]
+    assert victim.status == "done" and high.status == "done"
+    assert len(high.output) == 4
+    assert victim.output == solo.output    # exact restoration
+    # after the drain only prefix-cache references remain
+    eng.prefix_cache.clear()
+    assert eng.block_pool.num_free == eng.block_pool.num_blocks - 1
+
+
+def test_equal_priority_never_preempts(params):
+    """Admission preemption requires *strictly* higher priority — FIFO
+    traffic at one priority level behaves like a non-preemptive queue."""
+    eng, first, second = _preempt_run(params, victim_priority=0,
+                                      preemptor_priority=0)
+    assert eng.scheduler_stats()["preemptions"] == 0
+    assert first.status == "done" and second.status == "done"
+    assert len(first.output) == 20 and len(second.output) == 4
+
+
+def test_preempted_resume_charges_recompute(params):
+    """The resume re-prefill is charged its full saved sequence — preemption
+    is visible in the virtual-time/energy accounting, not free."""
+    clock = VirtualClock()
+    eng = _engine(params, num_blocks=6, clock=clock,
+                  step_cost_fn=lambda kind, tok, act: float(tok))
+    victim = Request(rid=0, prompt=[3] * 20, max_new_tokens=20, eos_id=-1)
+    eng.submit(victim)
+    for _ in range(6):
+        eng.step()
+    eng.submit(Request(rid=1, prompt=[9] * 20, max_new_tokens=4, eos_id=-1,
+                       priority=10))
+    eng.run_until_drained()
+    assert eng.scheduler_stats()["preemptions"] >= 1
+    resumes = [s for s in eng.step_log
+               if s["kind"] == "prefill" and s["tokens"] == 0]
+    assert len(resumes) == 1
+    # saved sequence: 32-token padded prompt + 6 emitted (1 prefill-sampled
+    # + 5 decode) - the not-yet-written last token
+    assert resumes[0]["prompt_tokens"] == 37
+    assert resumes[0]["dt"] == pytest.approx(37.0)
+
+
+# ---------------------------------------------------------------------------
+# cancel + deadline
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_running_frees_blocks_to_baseline(params):
+    """Cancelling mid-decode returns every slot-held block: free count and
+    per-block refcounts match the state right before the admission."""
+    eng = _engine(params, max_batch=1)
+    eng.submit(Request(rid=0, prompt=[7] * 20, max_new_tokens=4, eos_id=-1))
+    eng.run_until_drained()                     # leaves prefix-cache entries
+    free_before = eng.block_pool.num_free
+    refs_before = eng.block_pool.refcount.copy()
+
+    h = eng.submit(Request(rid=1, prompt=[7] * 20, max_new_tokens=30,
+                           eos_id=-1))
+    for _ in range(5):
+        eng.step()                              # admission + some decode
+    assert h.poll() == "running"
+    assert h.cancel()
+    assert not h.cancel()                       # already terminal
+    assert eng.active == 0 and not eng.has_work()
+    assert eng.block_pool.num_free == free_before
+    assert np.array_equal(eng.block_pool.refcount, refs_before)
+    with pytest.raises(RequestCancelledError):
+        h.result()
+    assert eng.scheduler_stats()["cancelled"] == 1
+
+
+def test_cancel_waiting_leaves_queue(params):
+    eng = _engine(params, max_batch=1)
+    eng.submit(Request(rid=0, prompt=[2, 2], max_new_tokens=6, eos_id=-1))
+    eng.step()
+    h = eng.submit(Request(rid=1, prompt=[3, 3], max_new_tokens=2, eos_id=-1))
+    assert len(eng.pending) == 1
+    assert h.cancel()
+    assert len(eng.pending) == 0
+    done = eng.run_until_drained()
+    assert [r.rid for r in done] == [0]
+
+
+def test_deadline_expired_fails_cleanly(params):
+    """A request still waiting past its deadline is failed (status
+    "expired"), never run, and surfaces as DeadlineExpiredError — while the
+    busy slot's stream finishes untouched."""
+    clock = VirtualClock()
+    eng = _engine(params, max_batch=1, clock=clock,
+                  step_cost_fn=lambda kind, tok, act: 1.0)
+    first = Request(rid=0, prompt=[2, 2], max_new_tokens=10, eos_id=-1,
+                    deadline=1e9)
+    eng.submit(first)
+    client = eng.client()
+    h = client.submit(SessionRequest(prompt=[3, 3], max_new_tokens=2,
+                                     eos_id=-1, deadline_s=3.0))
+    done = eng.run_until_drained()
+    assert [r.rid for r in done] == [0]
+    assert len(done[0].output) == 10
+    # the deadline bounds queue wait only: admission clears it, so a later
+    # preemption could never expire an already-started stream
+    assert first.deadline is None
+    assert h.poll() == "expired"
+    assert h.request.output == []
+    with pytest.raises(DeadlineExpiredError):
+        h.result()
+    assert eng.scheduler_stats()["expired"] == 1
+
+
+def test_run_until_drained_raises_on_stall(params):
+    eng = _engine(params)
+    eng.submit(Request(rid=0, prompt=[4, 4], max_new_tokens=30, eos_id=-1))
+    with pytest.raises(EngineStallError, match="active=1"):
+        eng.run_until_drained(max_steps=3)
+    eng.run_until_drained()                     # finishes once given budget
+
+
+# ---------------------------------------------------------------------------
+# executor sessions + engine-backed fleet occupancy
+# ---------------------------------------------------------------------------
+
+
+def test_engine_executor_overlaps_sessions():
+    """Two begin_query sessions settled together are resident in the engine
+    at once (peak_active == 2) and batching lowers per-query energy vs the
+    same two queries run back-to-back."""
+    from repro.common.hardware import ORIN_AGX
+    from repro.core import EngineExecutor, ORIN_MODES, PAPER_MODELS
+
+    def run(batched: bool):
+        ex = EngineExecutor(PAPER_MODELS["qwen2-7b"], ORIN_AGX, seed=0)
+        kw = dict(n_tools_in_prompt=2, n_calls=1, selection_correct=True,
+                  variant="q8", mode=ORIN_MODES[0])
+        if batched:
+            sessions = [ex.begin_query(**kw) for _ in range(2)]
+            ex.settle(sessions)
+        else:
+            sessions = []
+            for _ in range(2):
+                s = ex.begin_query(**kw)
+                ex.settle([s])
+                sessions.append(s)
+        return ex, [s.execution for s in sessions]
+
+    ex_b, batched = run(batched=True)
+    ex_s, solo = run(batched=False)
+    assert ex_b.engine.peak_active == 2
+    assert ex_s.engine.peak_active == 1
+    assert all(q.decode_tokens == 12 and q.succeeded for q in batched + solo)
+    # shared decode steps split one power draw across both sessions
+    assert sum(q.energy_j for q in batched) < sum(q.energy_j for q in solo)
+
+
+def test_engine_fleet_shares_pod_engines():
+    """Acceptance: an engine-backed fleet run puts >= 2 concurrent sessions
+    into one pod's shared engine, on ONE fleet-wide virtual clock."""
+    from repro.common.hardware import ORIN_AGX
+    from repro.core import (ORIN_MODES, PAPER_MODELS, POLICIES, SimExecutor,
+                            ToolSelector, ci_trace)
+    from repro.core.fleet import PodState, run_fleet
+    from repro.core.runtime import CarbonCallRuntime
+    from repro.data.workload import build_catalog, FunctionCallWorkload
+
+    catalog = build_catalog(32, seed=0)
+    selector = ToolSelector(catalog)
+    pods = []
+    for i in range(2):
+        ex = SimExecutor(PAPER_MODELS["qwen2-7b"], ORIN_AGX, seed=i)
+        rt = CarbonCallRuntime(selector=selector, executor=ex,
+                               policy=POLICIES["carboncall"],
+                               modes=ORIN_MODES,
+                               catalog_size=len(catalog.tools), seed=i)
+        ci = ci_trace(["week1", "week2"][i], seed=100 + i)
+        pods.append(PodState(pod_id=i, runtime=rt, ci_trace=ci,
+                             gov_state=rt.governor.init(ci[:144])))
+    recs = run_fleet(pods, FunctionCallWorkload(catalog, seed=5), n_steps=2,
+                     queries_per_hour=36.0, seed=1, backend="engine")
+    assert sum(len(rs) for rs in recs.values()) >= 4
+    assert all(r.tps > 0 for rs in recs.values() for r in rs)
+    # every pod holds a client onto its own shared engine...
+    clients = [p.client for p in pods]
+    assert all(c is not None for c in clients)
+    assert clients[0].engine is not clients[1].engine
+    # ...all on one fleet timeline
+    clocks = {id(p.runtime.executor.clock) for p in pods}
+    assert len(clocks) == 1
+    # the slot-occupancy counter proves cross-query batching inside a pod
+    assert max(p.client.engine.peak_active for p in pods) >= 2
+    # a second engine-backed run must rewire already-converted pods onto
+    # ITS shared clock (use_backend alone keeps the existing executor)
+    old_clock = pods[0].runtime.executor.clock
+    run_fleet(pods, FunctionCallWorkload(catalog, seed=6), n_steps=1,
+              queries_per_hour=0.0, seed=2, backend="engine")
+    new_clocks = {id(p.runtime.executor.clock) for p in pods}
+    assert len(new_clocks) == 1
+    assert pods[0].runtime.executor.clock is not old_clock
+    assert all(p.runtime.executor.engine.clock
+               is p.runtime.executor.clock for p in pods)
