@@ -1,0 +1,117 @@
+"""Benchmark-regression gate: fail CI when perf falls off a cliff vs main.
+
+    python benchmarks/ci_compare.py PREV_DIR NEW_DIR \
+        [--max-drop 0.2] [--max-rise 0.2] [--summary FILE]
+
+Compares the current bench artifacts against the previous successful main
+run's. A *gated* metric regresses when
+
+  * a throughput-like metric (direction "higher") drops more than
+    ``--max-drop`` (default 20%), or
+  * a cost-like metric (direction "lower", e.g. carbon/query) rises more
+    than ``--max-rise`` (default 20%).
+
+Each regression is emitted as a GitHub error annotation showing old vs new,
+an old-vs-new table is appended to ``--summary``, and the process exits 1.
+With no prior artifact (first run, expired retention) the gate passes
+trivially. Metrics present on only one side are reported, never gated.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+from typing import Dict, List, Tuple
+
+from benchmarks.ci_metrics import HIGHER, INFO, LOWER, Metric, collect
+
+
+@dataclasses.dataclass(frozen=True)
+class Regression:
+    name: str
+    old: float
+    new: float
+    change_frac: float        # signed relative change vs old
+    reason: str
+
+
+def compare(prev: Dict[str, Metric], new: Dict[str, Metric], *,
+            max_drop: float = 0.2, max_rise: float = 0.2
+            ) -> Tuple[List[Regression], List[str]]:
+    """Returns (regressions, human-readable comparison rows) for every
+    metric present in both runs. Gating needs a meaningful old value: an
+    old of exactly 0 cannot express a relative change and is skipped."""
+    regressions: List[Regression] = []
+    rows: List[str] = []
+    for name in sorted(set(prev) & set(new)):
+        old_m, new_m = prev[name], new[name]
+        if old_m.direction == INFO or old_m.value == 0:
+            rows.append(f"{name}: {old_m.value:g} -> {new_m.value:g}")
+            continue
+        change = (new_m.value - old_m.value) / abs(old_m.value)
+        rows.append(f"{name}: {old_m.value:g} -> {new_m.value:g} "
+                    f"({change:+.1%})")
+        if old_m.direction == HIGHER and change < -max_drop:
+            regressions.append(Regression(
+                name, old_m.value, new_m.value, change,
+                f"dropped {-change:.1%} (> {max_drop:.0%} allowed)"))
+        elif old_m.direction == LOWER and change > max_rise:
+            regressions.append(Regression(
+                name, old_m.value, new_m.value, change,
+                f"rose {change:.1%} (> {max_rise:.0%} allowed)"))
+    return regressions, rows
+
+
+def _summary_md(prev, new, regressions) -> str:
+    bad = {r.name for r in regressions}
+    lines = ["## Benchmark regression gate", "",
+             "| metric | previous | current | change | |",
+             "|---|---:|---:|---:|---|"]
+    for name in sorted(set(prev) & set(new)):
+        o, n = prev[name].value, new[name].value
+        change = f"{(n - o) / abs(o):+.1%}" if o else "n/a"
+        flag = "❌" if name in bad else ""
+        lines.append(f"| {name} | {o:g} | {n:g} | {change} | {flag} |")
+    verdict = (f"**{len(regressions)} regression(s)** — failing the gate."
+               if regressions else "No regressions.")
+    return "\n".join(lines + ["", verdict]) + "\n"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("prev_dir")
+    ap.add_argument("new_dir")
+    ap.add_argument("--max-drop", type=float, default=0.2,
+                    help="allowed fractional drop for throughput metrics")
+    ap.add_argument("--max-rise", type=float, default=0.2,
+                    help="allowed fractional rise for cost metrics")
+    ap.add_argument("--summary", default=None,
+                    help="append an old-vs-new markdown table to this file")
+    args = ap.parse_args()
+
+    prev, new = collect(args.prev_dir), collect(args.new_dir)
+    if not prev:
+        print(f"no previous bench artifacts under {args.prev_dir!r}: "
+              "regression gate passes trivially (first run / expired "
+              "retention)")
+        return 0
+    if not new:
+        print(f"::error::no current bench artifacts under {args.new_dir!r} "
+              "— did the benchmark step fail?")
+        return 1
+
+    regressions, rows = compare(prev, new, max_drop=args.max_drop,
+                                max_rise=args.max_rise)
+    for row in rows:
+        print(row)
+    for r in regressions:
+        print(f"::error title=benchmark regression::{r.name} {r.reason}: "
+              f"{r.old:g} -> {r.new:g}")
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(_summary_md(prev, new, regressions))
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

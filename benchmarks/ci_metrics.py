@@ -1,0 +1,115 @@
+"""Shared metric extraction for the CI bench pipeline.
+
+`collect(dir)` flattens the per-suite JSON artifacts written by
+``benchmarks/run.py --json-dir`` into named scalar metrics, each tagged with
+a regression direction:
+
+  * ``higher`` — throughput-like: a drop beyond the tolerance is a regression
+  * ``lower``  — cost-like (carbon/latency): a rise beyond it is a regression
+  * ``info``   — reported in the step summary, never gated
+
+Both the step-summary table (ci_summary.py) and the regression gate
+(ci_compare.py) read this one schema, so a metric added here shows up in
+both automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Callable, Dict, List, Optional, Tuple
+
+HIGHER, LOWER, INFO = "higher", "lower", "info"
+
+
+@dataclasses.dataclass(frozen=True)
+class Metric:
+    value: float
+    direction: str        # HIGHER | LOWER | INFO
+
+
+def _get(data, *path):
+    for key in path:
+        if not isinstance(data, dict) or key not in data:
+            return None
+        data = data[key]
+    return data
+
+
+def _prefix_hit_rate(data) -> Optional[float]:
+    hits = _get(data, "prefix_cache", "hits")
+    misses = _get(data, "prefix_cache", "misses")
+    if hits is None or misses is None or hits + misses == 0:
+        return None
+    return hits / (hits + misses)
+
+
+# suite -> [(metric name, direction, extractor)]
+_SCHEMAS: Dict[str, List[Tuple[str, str, Callable]]] = {
+    "engine_week": [
+        ("decode_tps@4", HIGHER, lambda d: _get(d, "decode_tps", "4")),
+        ("day_avg_tps", HIGHER, lambda d: _get(d, "day", "avg_tps")),
+        ("day_carbon_g_per_query", LOWER,
+         lambda d: _get(d, "day", "avg_carbon_g")),
+        ("prefix_hit_rate", INFO, _prefix_hit_rate),
+        ("sched_admitted", INFO, lambda d: _get(d, "scheduler", "admitted")),
+        ("sched_preemptions", INFO,
+         lambda d: _get(d, "scheduler", "preemptions")),
+        ("sched_expired", INFO, lambda d: _get(d, "scheduler", "expired")),
+    ],
+    "paged_engine": [
+        ("prefix_saved_frac", HIGHER,
+         lambda d: _get(d, "prefix", "saved_frac")),
+        ("decode_tps_paged@4", HIGHER,
+         lambda d: _get(d, "decode_tps", "paged", "4")),
+    ],
+    "fleet_engine": [
+        ("decode_tps@4", HIGHER,
+         lambda d: _get(d, "occupancy", "4", "decode_tps")),
+        ("carbon_g_per_query@4", LOWER,
+         lambda d: _get(d, "occupancy", "4", "carbon_g_per_query")),
+        ("fleet_carbon_g_per_query", LOWER,
+         lambda d: _get(d, "fleet", "carbon_g_per_query")),
+    ],
+    "qos_fleet": [
+        ("decode_tps", HIGHER,
+         lambda d: _get(d, "pressure", "tiered", "decode_tps")),
+        ("interactive_hit_rate", HIGHER,
+         lambda d: _get(d, "pressure", "tiered", "acceptance",
+                        "interactive_hit_rate")),
+        ("interactive_p95_s", LOWER,
+         lambda d: _get(d, "pressure", "tiered", "acceptance",
+                        "interactive_p95_s")),
+        ("carbon_g_per_query", LOWER,
+         lambda d: _get(d, "pressure", "tiered", "carbon_g_per_query")),
+        ("batch_preemptions", INFO,
+         lambda d: _get(d, "pressure", "tiered", "acceptance",
+                        "batch_preemptions")),
+        ("acceptance_pass", INFO,
+         lambda d: _get(d, "pressure", "tiered", "acceptance", "pass")),
+    ],
+}
+
+
+def collect(bench_dir: str) -> Dict[str, Metric]:
+    """Flatten every recognized ``<suite>.json`` under `bench_dir` into
+    ``{"suite/metric": Metric}``; unknown files and missing paths are
+    skipped (forward/backward compatible across schema changes)."""
+    out: Dict[str, Metric] = {}
+    if not os.path.isdir(bench_dir):
+        return out
+    for suite, schema in _SCHEMAS.items():
+        path = os.path.join(bench_dir, f"{suite}.json")
+        if not os.path.exists(path):
+            continue
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            continue
+        for name, direction, fn in schema:
+            val = fn(data)
+            if val is None:
+                continue
+            out[f"{suite}/{name}"] = Metric(float(val), direction)
+    return out

@@ -1,0 +1,61 @@
+"""Render the bench JSON artifacts as a GitHub step-summary table.
+
+    python benchmarks/ci_summary.py --dir bench-out [--out "$GITHUB_STEP_SUMMARY"]
+
+Reads every suite JSON `benchmarks/run.py --json-dir` wrote and appends one
+markdown table (decode TPS, carbon/query, prefix-hit rate, scheduler
+counters, QoS acceptance) to the summary file — the at-a-glance perf view
+for each commit on main.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks.ci_metrics import HIGHER, LOWER, collect
+
+_ARROW = {HIGHER: "↑ good", LOWER: "↓ good", "info": ""}
+
+
+def _fmt(value: float) -> str:
+    if value == int(value) and abs(value) < 1e6:
+        return str(int(value))
+    if 0 < abs(value) < 0.01:
+        return f"{value:.3e}"
+    return f"{value:.4g}"
+
+
+def render(bench_dir: str) -> str:
+    metrics = collect(bench_dir)
+    lines = ["## Engine benchmarks", ""]
+    if not metrics:
+        lines.append(f"_no benchmark JSON found under `{bench_dir}`_")
+        return "\n".join(lines) + "\n"
+    lines += ["| suite | metric | value | direction |",
+              "|---|---|---:|---|"]
+    for name in sorted(metrics):
+        suite, _, metric = name.partition("/")
+        m = metrics[name]
+        lines.append(f"| {suite} | {metric} | {_fmt(m.value)} "
+                     f"| {_ARROW.get(m.direction, '')} |")
+    return "\n".join(lines) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="bench-out",
+                    help="directory of <suite>.json artifacts")
+    ap.add_argument("--out", default=None,
+                    help="file to append the markdown to "
+                         "(e.g. $GITHUB_STEP_SUMMARY); stdout when omitted")
+    args = ap.parse_args()
+    md = render(args.dir)
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(md)
+    else:
+        sys.stdout.write(md)
+
+
+if __name__ == "__main__":
+    main()

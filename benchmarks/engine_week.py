@@ -75,6 +75,26 @@ def run(quiet: bool = False):
     return {"decode_tps": tps, "day": res, "executor": ex}
 
 
+def json_summary(out=None, quiet: bool = True):
+    """JSON-serializable summary (the CI perf-trajectory artifact schema)."""
+    if out is None:
+        out = run(quiet=quiet)
+    res, ex = out["day"], out["executor"]
+    return {
+        "decode_tps": {str(k): v for k, v in out["decode_tps"].items()},
+        "day": {"avg_tps": res.avg_tps, "avg_latency_s": res.avg_latency,
+                "avg_power_w": res.avg_power,
+                "avg_carbon_g": res.avg_carbon,
+                "queries": len(res.records),
+                "swaps": ex.swap_count,
+                "tokens_emitted": ex.engine.tokens_emitted},
+        "prefix_cache": ex.engine.prefix_cache_stats(),
+        # nightly trajectory of the preemptive scheduler: preemptions,
+        # requeues, queue-wait time and the slot-occupancy high-water mark
+        "scheduler": ex.engine.scheduler_stats(),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None,
@@ -82,22 +102,8 @@ def main():
     args = ap.parse_args()
     out = run()
     if args.json:
-        res, ex = out["day"], out["executor"]
-        summary = {
-            "decode_tps": {str(k): v for k, v in out["decode_tps"].items()},
-            "day": {"avg_tps": res.avg_tps, "avg_latency_s": res.avg_latency,
-                    "avg_power_w": res.avg_power,
-                    "avg_carbon_g": res.avg_carbon,
-                    "queries": len(res.records),
-                    "swaps": ex.swap_count,
-                    "tokens_emitted": ex.engine.tokens_emitted},
-            "prefix_cache": ex.engine.prefix_cache_stats(),
-            # nightly trajectory of the preemptive scheduler: preemptions,
-            # requeues, queue-wait time and the slot-occupancy high-water mark
-            "scheduler": ex.engine.scheduler_stats(),
-        }
         with open(args.json, "w") as f:
-            json.dump(summary, f, indent=2, sort_keys=True)
+            json.dump(json_summary(out), f, indent=2, sort_keys=True)
 
 
 if __name__ == "__main__":

@@ -96,6 +96,19 @@ def run(quiet: bool = False):
             "fleet": fleet_smoke(quiet=quiet)}
 
 
+def json_summary(out=None, quiet: bool = True):
+    """JSON-serializable summary (the CI perf-trajectory artifact schema)."""
+    if out is None:
+        out = run(quiet=quiet)
+    return {
+        "occupancy": {str(k): v for k, v in out["occupancy"].items()},
+        "fleet": {"queries": out["fleet"]["queries"],
+                  "carbon_g_per_query": out["fleet"]["carbon_g_per_query"],
+                  "pods": {str(k): v
+                           for k, v in out["fleet"]["pods"].items()}},
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None,
@@ -103,15 +116,8 @@ def main():
     args = ap.parse_args()
     out = run()
     if args.json:
-        summary = {
-            "occupancy": {str(k): v for k, v in out["occupancy"].items()},
-            "fleet": {"queries": out["fleet"]["queries"],
-                      "carbon_g_per_query": out["fleet"]["carbon_g_per_query"],
-                      "pods": {str(k): v
-                               for k, v in out["fleet"]["pods"].items()}},
-        }
         with open(args.json, "w") as f:
-            json.dump(summary, f, indent=2, sort_keys=True)
+            json.dump(json_summary(out), f, indent=2, sort_keys=True)
 
 
 if __name__ == "__main__":

@@ -90,6 +90,11 @@ def run(quiet: bool = False):
             "decode_tps": decode_tps_vs_dense(quiet=quiet)}
 
 
+def json_summary():
+    """JSON-serializable summary (the CI perf-trajectory artifact schema)."""
+    return run(quiet=True)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None,

@@ -1,0 +1,212 @@
+"""QoS-tiered serving under pool pressure + deadline-aware fleet routing.
+
+Part 1 — pressure run: four deadline-free batch jobs soak every decode slot
+of one shared engine whose paged block pool is deliberately small, then a
+wave of interactive/standard arrivals lands. With QoS tiers the scheduler
+admits the wave priority-first (EDF inside each class) and the queue head
+preempts batch slots for their blocks, so the interactive tier's deadline-hit
+rate and p95 latency beat the same traffic run all-priority-0 (the PR 3
+contract), while the batch tier absorbs the preemptions and finishes later.
+Energy attribution is unchanged, so the run also reports fleet carbon/query
+against PR 3's 4-session occupancy figure (2.8 mg at CI 400).
+
+Part 2 — deadline-aware routing: a two-pod engine fleet with a clean-grid
+pod and a dirty-grid pod serving a tiered workload. Batch traffic
+(latency_weight ~ 0) chases the low-carbon pod; interactive traffic pays for
+queue avoidance, keeping its deadline-hit rate high.
+
+    PYTHONPATH=src:. python benchmarks/qos_fleet.py [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import random
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.common.hardware import ORIN_AGX
+from repro.core import (CarbonCallRuntime, EngineExecutor, ORIN_MODES,
+                        PAPER_MODELS, POLICIES, SimExecutor, ToolSelector,
+                        tier_report)
+from repro.core.carbon import carbon_footprint
+from repro.core.fleet import PodState, run_fleet
+from repro.data.workload import (DEFAULT_TIERS, TIERS_BY_NAME, QoSTier,
+                                 build_catalog, FunctionCallWorkload)
+
+CI_G_PER_KWH = 400.0     # fixed CI so carbon/query tracks energy/query
+PR3_4SESSION_CARBON_G = 0.0028   # fleet_engine occupancy=4 figure (PR 3)
+
+# pressure-run shape: 4 slots, a pool of 40 blocks (~2.5 slots' worth of
+# 256-token sequences once the shared tool prefixes are evicted), 4 batch
+# jobs resident before a 20-query interactive/standard wave arrives
+MAX_BATCH = 4
+NUM_BLOCKS = 40
+WAVE1_BATCH = 4
+WAVE2_QUERIES = 20
+WARM_STEPS = 8           # decode steps the batch jobs run before the wave
+
+
+def _begin(ex: EngineExecutor, tier: QoSTier, n_tools: int, n_calls: int,
+           tiered: bool):
+    """Open one session; `tiered=False` is the PR 3 baseline (every query
+    priority 0, no deadline) with the tier kept as a label only."""
+    return tier, ex.begin_query(
+        n_tools_in_prompt=n_tools, n_calls=n_calls, selection_correct=True,
+        variant="q8", mode=ORIN_MODES[0],
+        priority=tier.priority if tiered else 0,
+        deadline_s=tier.deadline_s if tiered else None, tier=tier.name)
+
+
+def _pressure_run(tiered: bool, seed: int = 0):
+    rng = random.Random(seed)
+    ex = EngineExecutor(PAPER_MODELS["qwen2-7b"], ORIN_AGX, seed=0,
+                        max_batch=MAX_BATCH, num_blocks=NUM_BLOCKS)
+    # wave 1: deadline-free batch jobs occupy every slot...
+    wave1 = [_begin(ex, TIERS_BY_NAME["batch"], 3, 2, tiered)
+             for _ in range(WAVE1_BATCH)]
+    for _, s in wave1:
+        ex._start_attempt(s)
+    for _ in range(WARM_STEPS):
+        ex.engine.step()                  # ...and run mid-decode
+    # wave 2: latency-bound arrivals land on the saturated engine
+    wave2 = []
+    for _ in range(WAVE2_QUERIES):
+        name = "interactive" if rng.random() < 0.4 else "standard"
+        wave2.append(_begin(ex, TIERS_BY_NAME[name], rng.randint(2, 3), 1,
+                            tiered))
+    allq = wave1 + wave2
+    ex.settle([s for _, s in allq])
+    return ex, allq
+
+
+def _tier_metrics(allq) -> Dict[str, Dict[str, float]]:
+    """Per-tier p50/p95 latency + deadline-hit rate from settled sessions.
+    A hit = not expired AND total scheduler wait within the tier's budget
+    (deadline-free tiers always hit)."""
+    out: Dict[str, Dict[str, float]] = {}
+    by: Dict[str, List] = {}
+    for t, s in allq:
+        by.setdefault(t.name, []).append(s.execution)
+    for name, exs in by.items():
+        dl = TIERS_BY_NAME[name].deadline_s
+        lats = np.sort([e.latency_s for e in exs])
+        hits = [not e.expired and (dl is None or e.queue_wait_s <= dl)
+                for e in exs]
+        out[name] = {
+            "queries": len(exs),
+            "deadline_hit_rate": float(np.mean(hits)),
+            "p50_latency_s": float(np.percentile(lats, 50)),
+            "p95_latency_s": float(np.percentile(lats, 95)),
+        }
+    return out
+
+
+def pressure(quiet: bool = False) -> Dict:
+    """Tiered vs all-priority-0 baseline on the identical query plan."""
+    runs = {}
+    for label, tiered in (("tiered", True), ("baseline", False)):
+        ex, allq = _pressure_run(tiered)
+        eng = ex.engine
+        cf = sum(carbon_footprint(s.execution.energy_j, CI_G_PER_KWH)
+                 for _, s in allq) / len(allq)
+        runs[label] = {
+            "tiers": _tier_metrics(allq),
+            "scheduler": eng.scheduler_stats(),
+            "carbon_g_per_query": cf,
+            "decode_tps": eng.recent_tps(window=len(eng.step_log)),
+        }
+    t, b = runs["tiered"], runs["baseline"]
+    ti, bi = t["tiers"]["interactive"], b["tiers"]["interactive"]
+    t["acceptance"] = {
+        "interactive_hit_rate": ti["deadline_hit_rate"],
+        "interactive_p95_s": ti["p95_latency_s"],
+        "baseline_interactive_p95_s": bi["p95_latency_s"],
+        "batch_preemptions": t["scheduler"]["tiers"]["batch"]["preempted"],
+        "carbon_g_per_query": t["carbon_g_per_query"],
+        "pr3_4session_carbon_g": PR3_4SESSION_CARBON_G,
+        "pass": bool(ti["deadline_hit_rate"] >= 0.95
+                     and ti["p95_latency_s"] < bi["p95_latency_s"]
+                     and t["scheduler"]["tiers"]["batch"]["preempted"] >= 1
+                     and t["carbon_g_per_query"] <= PR3_4SESSION_CARBON_G),
+    }
+    if not quiet:
+        a = t["acceptance"]
+        emit("qos_fleet/interactive_p95", ti["p95_latency_s"],
+             f"baseline={bi['p95_latency_s']:.2f}s "
+             f"hit={ti['deadline_hit_rate']:.0%}")
+        emit("qos_fleet/batch_preemptions",
+             float(a["batch_preemptions"]),
+             f"CF/query={t['carbon_g_per_query'] * 1000:.2f}mg "
+             f"(PR3 4-session ref {PR3_4SESSION_CARBON_G * 1000:.1f}mg) "
+             f"pass={a['pass']}")
+    return runs
+
+
+def fleet_routing(n_steps: int = 2, queries_per_hour: float = 42.0,
+                  quiet: bool = False) -> Dict:
+    """Two-pod engine fleet, clean vs dirty grid, tiered traffic: batch
+    sheds to the low-carbon pod, interactive keeps its deadline-hit rate."""
+    catalog = build_catalog(32, seed=0)
+    selector = ToolSelector(catalog)
+    pods = []
+    for i, ci_val in enumerate((100.0, 700.0)):
+        ex = SimExecutor(PAPER_MODELS["qwen2-7b"], ORIN_AGX, seed=i)
+        rt = CarbonCallRuntime(selector=selector, executor=ex,
+                               policy=POLICIES["carboncall"],
+                               modes=ORIN_MODES,
+                               catalog_size=len(catalog.tools), seed=i)
+        ci = np.full(288, ci_val)
+        pods.append(PodState(pod_id=i, runtime=rt, ci_trace=ci,
+                             gov_state=rt.governor.init(ci[:144])))
+    wl = FunctionCallWorkload(catalog, seed=5, tiers=DEFAULT_TIERS)
+    recs = run_fleet(pods, wl, n_steps=n_steps,
+                     queries_per_hour=queries_per_hour, seed=1,
+                     backend="engine")
+    flat = [r for rs in recs.values() for r in rs]
+    pod_stats = {}
+    for p in pods:
+        served: Dict[str, int] = {}
+        for r in recs[p.pod_id]:
+            served[r.tier] = served.get(r.tier, 0) + 1
+        pod_stats[p.pod_id] = {
+            "ci_g_per_kwh": float(p.ci_trace[0]),
+            "tier_queries": served,
+            "scheduler": p.client.engine.scheduler_stats(),
+        }
+    out = {"pods": pod_stats, "tiers": tier_report(flat),
+           "carbon_g_per_query":
+               sum(r.carbon_g for r in flat) / max(len(flat), 1)}
+    if not quiet:
+        for pid, st in pod_stats.items():
+            emit(f"qos_fleet/pod{pid}", float(sum(st["tier_queries"].values())),
+                 f"ci={st['ci_g_per_kwh']:.0f} mix={st['tier_queries']}")
+        emit("qos_fleet/fleet_total", float(len(flat)),
+             f"CF/query={out['carbon_g_per_query'] * 1000:.2f}mg")
+    return out
+
+
+def run(quiet: bool = False) -> Dict:
+    return {"pressure": pressure(quiet=quiet),
+            "fleet": fleet_routing(quiet=quiet)}
+
+
+def json_summary() -> Dict:
+    return run(quiet=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="write results JSON (CI perf-trajectory artifact)")
+    args = ap.parse_args()
+    out = run()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+
+
+if __name__ == "__main__":
+    main()

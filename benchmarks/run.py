@@ -8,23 +8,61 @@ Prints ``name,us_per_call,derived`` CSV rows.
                          saved vs dense, decode TPS parity per occupancy
   fleet_engine         — shared-engine fleet: decode TPS + carbon/query vs
                          concurrent sessions, per-pod scheduler counters
+  qos_fleet            — QoS tiers under pool pressure (deadline-hit/p95 vs
+                         the priority-0 baseline) + deadline-aware routing
   variant_utilization  — Fig 6 (Q8 share per weekday, weeks 3/4)
   operating_modes      — Table I + §III-C TPS/power ladder
   tool_selection       — §III-B selection quality/latency
   kernels              — Pallas kernel microbenches + v5e roofline deriveds
   roofline             — dry-run roofline table (from experiments/dryrun)
+
+CI entrypoint: ``--json-dir DIR`` runs every JSON-capable engine suite and
+writes one ``<suite>.json`` artifact each (the per-commit perf trajectory
+the regression gate in benchmarks/ci_compare.py reads).
 """
 from __future__ import annotations
 
-import sys
+import argparse
+import json
+import os
 
 
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
-    print("name,us_per_call,derived")
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("only", nargs="?", default=None,
+                    help="run a single suite by name")
+    ap.add_argument("--json-dir", default=None,
+                    help="write <suite>.json per JSON-capable suite into this "
+                         "directory (CI benchmark-artifact mode)")
+    args = ap.parse_args()
+
     from benchmarks import (engine_week, fleet_engine, kernels_bench,
-                            operating_modes, paged_engine, roofline_table,
-                            tool_selection, variant_utilization, week_eval)
+                            operating_modes, paged_engine, qos_fleet,
+                            roofline_table, tool_selection,
+                            variant_utilization, week_eval)
+
+    if args.json_dir is not None:
+        json_suites = {
+            "engine_week": engine_week.json_summary,
+            "paged_engine": paged_engine.json_summary,
+            "fleet_engine": fleet_engine.json_summary,
+            "qos_fleet": qos_fleet.json_summary,
+        }
+        if args.only and args.only not in json_suites:
+            raise SystemExit(
+                f"--json-dir mode only knows {sorted(json_suites)}; "
+                f"got {args.only!r}")
+        os.makedirs(args.json_dir, exist_ok=True)
+        for name, fn in json_suites.items():
+            if args.only and args.only != name:
+                continue
+            path = os.path.join(args.json_dir, f"{name}.json")
+            print(f"[bench] {name} -> {path}", flush=True)
+            with open(path, "w") as f:
+                json.dump(fn(), f, indent=2, sort_keys=True)
+        return
+
+    print("name,us_per_call,derived")
     suites = {
         "operating_modes": operating_modes.run,
         "tool_selection": tool_selection.run,
@@ -34,10 +72,11 @@ def main() -> None:
         "engine_week": engine_week.run,
         "paged_engine": paged_engine.run,
         "fleet_engine": fleet_engine.run,
+        "qos_fleet": qos_fleet.run,
         "roofline": roofline_table.run,
     }
     for name, fn in suites.items():
-        if only and only != name:
+        if args.only and args.only != name:
             continue
         try:
             fn()

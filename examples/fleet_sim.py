@@ -7,18 +7,24 @@ continuous-batching ServingEngine per pod (an `EngineClient` each, all pods
 on one fleet-wide virtual clock) so concurrently-routed queries occupy decode
 slots together — keep --days/--qph small, every token is really decoded.
 
+`--qos-mix` turns on QoS-tiered traffic (e.g. "interactive:3,standard:5,
+batch:2"): queries carry per-tier priorities and deadline budgets, the
+router places them deadline-aware (batch sheds to low-carbon pods), and the
+report becomes a per-tier deadline-hit/preemption summary.
+
     PYTHONPATH=src python examples/fleet_sim.py --pods 4 --days 2
     PYTHONPATH=src python examples/fleet_sim.py --backend engine \
-        --pods 2 --steps 3 --qph 30
+        --pods 2 --steps 3 --qph 30 --qos-mix interactive:3,standard:5,batch:2
 """
 import argparse
 
 from repro.common.hardware import TPU_V5E
 from repro.core import (POLICIES, SimExecutor, TPU_MODES, ToolSelector,
-                        PAPER_MODELS, ci_trace)
+                        PAPER_MODELS, ci_trace, tier_report)
 from repro.core.fleet import PodState, run_fleet
 from repro.core.runtime import CarbonCallRuntime
-from repro.data.workload import build_catalog, FunctionCallWorkload
+from repro.data.workload import (build_catalog, FunctionCallWorkload,
+                                 parse_qos_mix)
 
 
 def build_pods(n_pods: int, selector, catalog, weeks):
@@ -44,16 +50,20 @@ def main():
     ap.add_argument("--steps", type=int, default=None,
                     help="override step count (10-min steps; default days*144)")
     ap.add_argument("--qph", type=float, default=40.0)
+    ap.add_argument("--qos-mix", default=None, metavar="TIER:W,...",
+                    help="QoS tier mix, e.g. interactive:3,standard:5,batch:2"
+                         " (tiers from repro.data.workload.DEFAULT_TIERS)")
     args = ap.parse_args()
 
     catalog = build_catalog(64, seed=0)
     selector = ToolSelector(catalog)
     weeks = ["week1", "week2", "week3", "week4"]
     n_steps = args.steps if args.steps is not None else args.days * 144
+    tiers = parse_qos_mix(args.qos_mix) if args.qos_mix else None
 
     # carbon-aware routing
     pods = build_pods(args.pods, selector, catalog, weeks)
-    wl = FunctionCallWorkload(catalog, seed=5)
+    wl = FunctionCallWorkload(catalog, seed=5, tiers=tiers)
     recs = run_fleet(pods, wl, n_steps=n_steps, queries_per_hour=args.qph,
                      backend=args.backend)
     cf_aware = sum(r.carbon_g for rs in recs.values() for r in rs)
@@ -69,6 +79,25 @@ def main():
         print(line)
     print(f"  total: {n_aware} queries, {cf_aware:.2f} gCO2 "
           f"({cf_aware/max(n_aware,1)*1000:.1f} mg/query)")
+    if tiers is not None:
+        print("per-tier summary:")
+        flat = [r for rs in recs.values() for r in rs]
+        for name, rep in tier_report(flat).items():
+            # engine backend: a deadline expiry is a failed record, so the
+            # success rate IS the deadline-hit rate net of model failures
+            print(f"  {name:<12} n={int(rep['queries']):>4}"
+                  f"  hit={rep['success_rate']:.0%}"
+                  f"  p50={rep['p50_latency_s']:.2f}s"
+                  f"  p95={rep['p95_latency_s']:.2f}s"
+                  f"  CF/query={rep['carbon_g_per_query']*1000:.2f}mg")
+        if args.backend == "engine":
+            for p in pods:
+                st = p.client.engine.scheduler_stats()["tiers"]
+                mix = {n: f"adm={int(t['admitted'])}"
+                          f" pre={int(t['preempted'])}"
+                          f" exp={int(t['expired'])}"
+                       for n, t in sorted(st.items())}
+                print(f"  pod {p.pod_id} scheduler: {mix}")
     if args.backend == "engine":
         shared = max(p.client.engine.peak_active for p in pods)
         print(f"  max concurrent sessions in one pod engine: {shared}")
@@ -79,7 +108,7 @@ def main():
     wl = FunctionCallWorkload(catalog, seed=5)
     from repro.core import fleet as fleet_mod
     orig = fleet_mod.FleetRouter._score
-    fleet_mod.FleetRouter._score = lambda self, pod, i: pod.served
+    fleet_mod.FleetRouter._score = lambda self, pod, i, tier=None: pod.served
     try:
         recs_rr = run_fleet(pods_rr, wl, n_steps=n_steps,
                             queries_per_hour=args.qph)

@@ -20,7 +20,8 @@ from repro.core.governor import CarbonGovernor, GovernorState
 from repro.core.switching import VariantSwitcher, SwitchDecision
 from repro.core.tool_select import ToolSelector, SelectionResult
 from repro.core.runtime import (
-    CarbonCallRuntime, PendingQuery, Policy, run_week, WeekResult)
+    CarbonCallRuntime, PendingQuery, Policy, run_week, tier_report,
+    WeekResult)
 from repro.core.baselines import POLICIES
 from repro.core.executor import (
     Executor, QuerySession, SimExecutor, PAPER_MODELS, ModelProfile)
@@ -31,7 +32,8 @@ __all__ = [
     "CarbonAccountant", "OperatingMode", "ORIN_MODES", "TPU_MODES",
     "PowerModel", "modes_for", "CarbonGovernor", "GovernorState",
     "VariantSwitcher", "SwitchDecision", "ToolSelector", "SelectionResult",
-    "CarbonCallRuntime", "PendingQuery", "Policy", "run_week", "WeekResult",
+    "CarbonCallRuntime", "PendingQuery", "Policy", "run_week", "tier_report",
+    "WeekResult",
     "POLICIES", "Executor", "QuerySession", "SimExecutor", "EngineExecutor",
     "make_executor", "PAPER_MODELS", "ModelProfile",
 ]

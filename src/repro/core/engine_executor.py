@@ -70,7 +70,9 @@ class EngineSession(QuerySession):
     tot_tok: int = 0
     tot_dec_t: float = 0.0
     tot_wait: float = 0.0
+    tot_qwait: float = 0.0         # scheduler queue wait across attempts
     failed: int = 0
+    expired: bool = False
 
 
 class EngineExecutor:
@@ -80,7 +82,7 @@ class EngineExecutor:
                  arch: str = "carboncall-qwen2-7b", seed: int = 0,
                  max_batch: int = 2, max_seq: int = 256,
                  tokens_per_call: int = 8, eval_tokens: int = 4,
-                 kv_layout: str = "auto",
+                 kv_layout: str = "auto", num_blocks: Optional[int] = None,
                  clock: Optional[VirtualClock] = None):
         self.profile = profile
         self.power_model = PowerModel(hw)
@@ -100,7 +102,8 @@ class EngineExecutor:
         self._mode: OperatingMode = modes_for(hw)[0]
         self.engine = ServingEngine(self.cfg, self.variants["q8"], rcfg,
                                     max_batch=max_batch, max_seq=max_seq,
-                                    kv_layout=kv_layout, clock=self.clock,
+                                    kv_layout=kv_layout, num_blocks=num_blocks,
+                                    clock=self.clock,
                                     step_cost_fn=self._step_cost)
         self.engine.variant_name = "q8"
         self.client = self.engine.client()
@@ -152,7 +155,8 @@ class EngineExecutor:
     def begin_query(self, *, n_tools_in_prompt: int, n_calls: int,
                     selection_correct: bool, variant: str,
                     mode: OperatingMode, priority: int = 0,
-                    deadline_s: Optional[float] = None) -> EngineSession:
+                    deadline_s: Optional[float] = None,
+                    tier: str = "default") -> EngineSession:
         """Open a session. The engine's weights follow the *latest* begin:
         queries batched into one settle share the switcher's variant (the
         switcher only flips between batches), so a batch is single-variant
@@ -165,7 +169,7 @@ class EngineExecutor:
             n_tools=n_tools_in_prompt, n_calls=n_calls,
             p_success=success_probability(selection_correct, variant),
             variant=variant, mode=mode, priority=priority,
-            deadline_s=deadline_s)
+            deadline_s=deadline_s, tier=tier)
 
     def settle(self, sessions: List[QuerySession]) -> None:
         """Run every open session to completion on the shared engine.
@@ -214,7 +218,8 @@ class EngineExecutor:
         new_toks = s.attempt_calls * (self.tokens_per_call + self.eval_tokens)
         s.handle = self.client.submit(SessionRequest(
             prompt=self._prompt_tokens(s.n_tools), max_new_tokens=new_toks,
-            eos_id=-1, priority=s.priority, deadline_s=s.deadline_s))
+            eos_id=-1, priority=s.priority, deadline_s=s.deadline_s,
+            tier=s.tier))
         s.submit_t = self.clock()
         s.energy_j = 0.0
         s.decode_t = 0.0
@@ -249,12 +254,18 @@ class EngineExecutor:
         lat = SELECT_S
         en = SELECT_S * pm.power(s.mode, util=0.3)
         expired = req.status != "done"
+        s.tot_qwait += req.queue_wait_s
         if expired:
-            # the query sat in the waiting queue until its deadline lapsed
-            # (never admitted — admission clears the deadline); keep any
-            # energy the attribution pass may still have assigned
+            # the deadline lapsed while the query waited (either never
+            # admitted, or preempted and its requeue outlived the budget);
+            # elapsed latency runs to the deadline, while the final unserved
+            # waiting stint (enqueue -> expiry) is added to the queue-wait
+            # clock. Keep any energy the attribution pass already assigned.
+            s.expired = True
             if s.deadline_s is not None:
                 lat += s.deadline_s
+            if req.deadline is not None:
+                s.tot_qwait += max(0.0, req.deadline - req.enqueue_time)
             en += s.energy_j
         else:
             done_t = req.done_time if req.done_time is not None else \
@@ -284,7 +295,8 @@ class EngineExecutor:
                 latency_s=s.tot_lat, energy_j=s.tot_en,
                 decode_tokens=s.tot_tok, decode_time_s=s.tot_dec_t,
                 exec_time_s=s.tot_lat - s.tot_wait,
-                failed_attempts=s.failed, succeeded=ok)
+                failed_attempts=s.failed, succeeded=ok,
+                queue_wait_s=s.tot_qwait, expired=s.expired)
             return True
         return False
 

@@ -56,6 +56,8 @@ class QueryExecution:
     exec_time_s: float            # latency minus external-tool wait
     failed_attempts: int
     succeeded: bool
+    queue_wait_s: float = 0.0     # engine backend: total scheduler wait
+    expired: bool = False         # engine backend: deadline lapsed waiting
 
     @property
     def tps(self) -> float:
@@ -78,6 +80,7 @@ class QuerySession:
     mode: OperatingMode
     priority: int = 0
     deadline_s: Optional[float] = None
+    tier: str = "default"            # QoS class label (telemetry/records)
     execution: Optional[QueryExecution] = None
 
 
@@ -99,7 +102,8 @@ class Executor(Protocol):
     def begin_query(self, *, n_tools_in_prompt: int, n_calls: int,
                     selection_correct: bool, variant: str,
                     mode: OperatingMode, priority: int = 0,
-                    deadline_s: Optional[float] = None) -> QuerySession: ...
+                    deadline_s: Optional[float] = None,
+                    tier: str = "default") -> QuerySession: ...
 
     def settle(self, sessions: List[QuerySession]) -> None: ...
 
@@ -187,16 +191,18 @@ class SimExecutor:
 
     def begin_query(self, *, priority: int = 0,
                     deadline_s: Optional[float] = None,
-                    **kw) -> QuerySession:
+                    tier: str = "default", **kw) -> QuerySession:
         """Sessions resolve eagerly: the analytic model has nothing to
         overlap, and computing at begin keeps rng consumption (and therefore
-        whole-week results) bit-identical to the old blocking contract."""
+        whole-week results) bit-identical to the old blocking contract.
+        Priority/deadline/tier are recorded but have no effect — the analytic
+        backend has no queue for them to act on."""
         s = QuerySession(n_tools=kw["n_tools_in_prompt"],
                          n_calls=kw["n_calls"],
                          p_success=success_probability(
                              kw["selection_correct"], kw["variant"]),
                          variant=kw["variant"], mode=kw["mode"],
-                         priority=priority, deadline_s=deadline_s)
+                         priority=priority, deadline_s=deadline_s, tier=tier)
         s.execution = self.run_query(**kw)
         return s
 

@@ -4,9 +4,20 @@ The paper runs one edge board; at 1000+ node scale the same control knobs
 exist per pod (mode governor, variant switcher), plus a knob the edge device
 does not have: WHERE a query runs. Each pod sits in a grid region with its own
 CI trace; the router scores pods by
-    score = ci_pod * marginal_energy(pod) + latency_penalty(queue + in-flight)
+    score = ci_pod * marginal_energy(pod)
+          + queue_weight * latency_weight(tier) * predicted_wait(pod)
 and sends the query to the argmin, subject to a TPS SLO (drain pods whose
 10-min average TPS is degraded — straggler mitigation at the fleet level).
+
+Routing is **deadline-aware**: `predicted_wait` reads the pod's LIVE
+scheduler depth when it runs a shared engine (waiting queue + this step's
+in-flight submissions, net of free decode slots), and the tier's
+`latency_weight` decides how much that wait matters against carbon —
+interactive traffic (tight deadline, high weight) is steered to pods with
+free slots while batch traffic (near-zero weight) chases the lowest-carbon
+region and absorbs its queues. A pod whose predicted wait already exceeds
+the tier's deadline budget is effectively excluded (huge additive penalty)
+unless every pod would blow it.
 
 With `backend="engine"` every pod runs ONE shared `ServingEngine` behind an
 `EngineClient`: all queries routed to a pod within an arrival step are
@@ -31,13 +42,18 @@ import numpy as np
 from repro.core.carbon import carbon_footprint
 from repro.core.governor import GovernorState
 from repro.core.runtime import CarbonCallRuntime, PendingQuery, QueryRecord
-from repro.data.workload import FunctionCallWorkload
+from repro.data.workload import FunctionCallWorkload, QoSTier
 from repro.serving import EngineClient, VirtualClock
 
 # routing proxy for one not-yet-settled query's latency contribution
 # (an in-step submission must repel further arrivals before its real
 # latency exists; the sim path settles immediately, so it never applies)
 INFLIGHT_COST_S = 30.0
+
+# additive score for a pod whose predicted wait already blows the tier's
+# deadline budget: dominates any carbon/queue term, so such a pod is chosen
+# only when no pod can make the deadline
+DEADLINE_MISS_PENALTY = 1e12
 
 
 @dataclasses.dataclass
@@ -57,28 +73,49 @@ class PodState:
 
 
 class FleetRouter:
-    """Greenest-pod-first routing with TPS-SLO health gating."""
+    """Deadline-aware greenest-pod routing with TPS-SLO health gating."""
 
     def __init__(self, pods: List[PodState], *, slo_tps_frac: float = 0.6,
-                 queue_weight: float = 50.0):
+                 queue_weight: float = 50.0,
+                 service_s: float = INFLIGHT_COST_S):
         self.pods = pods
         self.slo_tps_frac = slo_tps_frac
         self.queue_weight = queue_weight
+        self.service_s = service_s        # per queued request wait estimate
 
-    def _score(self, pod: PodState, i: int) -> float:
+    def predicted_wait_s(self, pod: PodState) -> float:
+        """Expected queue wait for a NEW arrival at this pod. Engine pods
+        expose their live scheduler depth: requests waiting in the priority
+        queue plus this step's in-flight submissions, minus free decode slots
+        (an arrival that lands straight in a slot waits ~0); sim pods fall
+        back to the flat per-in-flight proxy."""
+        if pod.client is not None:
+            eng = pod.client.engine
+            depth = len(eng.pending) + pod.inflight
+            free_slots = max(0, eng.max_batch - eng.active)
+            return pod.queue_s + max(0, depth - free_slots) * self.service_s
+        return pod.queue_s + pod.inflight * self.service_s
+
+    def _score(self, pod: PodState, i: int,
+               tier: Optional[QoSTier] = None) -> float:
         ci = pod.ci_at(i)
         mode = pod.runtime.modes[pod.gov_state.mode_idx]
         # marginal energy ~ power at current mode (J/s) -> gCO2/s proxy
         carbon_rate = carbon_footprint(pod.runtime.executor.power_model.power(mode),
                                        ci) * 3600.0
-        backlog = pod.queue_s + pod.inflight * INFLIGHT_COST_S
-        return carbon_rate + self.queue_weight * backlog
+        wait = self.predicted_wait_s(pod)
+        lw = tier.latency_weight if tier is not None else 1.0
+        score = carbon_rate + self.queue_weight * lw * wait
+        if tier is not None and tier.deadline_s is not None \
+                and wait > tier.deadline_s:
+            score += DEADLINE_MISS_PENALTY
+        return score
 
-    def route(self, i: int) -> PodState:
+    def route(self, i: int, tier: Optional[QoSTier] = None) -> PodState:
         healthy = [p for p in self.pods if p.healthy]
         if not healthy:
             healthy = self.pods                     # degraded but alive
-        return min(healthy, key=lambda p: self._score(p, i))
+        return min(healthy, key=lambda p: self._score(p, i, tier))
 
     def mark_health(self):
         """Drain pods whose variant switcher window shows degraded TPS
@@ -150,8 +187,8 @@ def run_fleet(pods: List[PodState], workload: FunctionCallWorkload, *,
         router.mark_health()
         batches: Dict[int, List[PendingQuery]] = {}
         for q in range(rng.poisson(lam)):
-            pod = router.route(i)
             query = workload.sample()
+            pod = router.route(i, query.tier)     # deadline-aware placement
             pq = pod.runtime.submit_query(t + q, query, pod.ci_at(i),
                                           pod.gov_state)
             if getattr(pod.runtime.executor, "max_concurrency", 1) > 1:

@@ -67,6 +67,7 @@ class QueryRecord:
     mode_idx: int
     n_tools: int
     succeeded: bool
+    tier: str = "default"            # QoS class ("default" = untiered)
 
 
 @dataclasses.dataclass
@@ -97,6 +98,9 @@ class WeekResult:
     def success_rate(self):
         return self._mean(lambda r: 1.0 if r.succeeded else 0.0)
 
+    def tier_summary(self) -> Dict[str, Dict[str, float]]:
+        return tier_report(self.records)
+
     def q8_utilization_by_day(self) -> List[float]:
         out = []
         for d in range(7):
@@ -106,6 +110,25 @@ class WeekResult:
             else:
                 out.append(1.0)
         return out
+
+
+def tier_report(records: List["QueryRecord"]) -> Dict[str, Dict[str, float]]:
+    """Per-QoS-tier aggregate over query records: volume, success rate (an
+    engine-backed expiry is a failed record, so for deadline-carrying tiers
+    this IS the deadline-hit rate net of model failures), latency percentiles
+    and carbon per query."""
+    out: Dict[str, Dict[str, float]] = {}
+    for tier in sorted({r.tier for r in records}):
+        rs = [r for r in records if r.tier == tier]
+        lats = np.sort([r.latency_s for r in rs])
+        out[tier] = {
+            "queries": len(rs),
+            "success_rate": float(np.mean([r.succeeded for r in rs])),
+            "p50_latency_s": float(np.percentile(lats, 50)),
+            "p95_latency_s": float(np.percentile(lats, 95)),
+            "carbon_g_per_query": float(np.mean([r.carbon_g for r in rs])),
+        }
+    return out
 
 
 class CarbonCallRuntime:
@@ -183,9 +206,15 @@ class CarbonCallRuntime:
         if p.use_selection == "all_tools":
             correct = self._all_tools_success(len(query.true_tools))
 
+        # QoS tier -> session scheduling class: an untiered query is exactly
+        # the pre-tier contract (priority 0, no deadline)
+        tier = getattr(query, "tier", None)
         session = self.executor.begin_query(
             n_tools_in_prompt=n_tools, n_calls=len(query.true_tools),
-            selection_correct=correct, variant=variant, mode=mode)
+            selection_correct=correct, variant=variant, mode=mode,
+            priority=tier.priority if tier else 0,
+            deadline_s=tier.deadline_s if tier else None,
+            tier=tier.name if tier else "default")
         return PendingQuery(t=t, ci=ci, mode_idx=gov_state.mode_idx, mode=mode,
                             variant=variant, n_tools=n_tools,
                             extra_inf=extra_inf, session=session)
@@ -227,7 +256,7 @@ class CarbonCallRuntime:
                 t=pq.t, latency_s=lat, energy_j=en,
                 carbon_g=carbon_footprint(en, pq.ci), tps=ex.tps,
                 variant=pq.variant, mode_idx=pq.mode_idx, n_tools=pq.n_tools,
-                succeeded=ex.succeeded))
+                succeeded=ex.succeeded, tier=pq.session.tier))
         return records
 
     def handle_query(self, t: float, query: Query, ci: float,

@@ -10,13 +10,23 @@ tool selection targets.
 Every query carries ground-truth tool ids so selection accuracy is measurable,
 an entity span for the NER/keyword path, and a difficulty class that the
 runtime's TPS simulation maps to output lengths.
+
+QoS tiers: real traffic is not uniform — an assistant turn blocking a user
+(interactive) competes with background agents (standard) and offline batch
+jobs. `QoSTier` names a priority class with a queue-wait deadline budget and
+an arrival share; a tiered `FunctionCallWorkload` stamps each `Query` with
+its tier, which the runtime maps onto `SessionRequest(priority=,
+deadline_s=)` and the fleet router uses for deadline-aware placement. With
+`tiers=None` (the default) nothing changes: every query arrives untiered
+(priority 0, no deadline) and the sampling rng stream is untouched, so
+pre-tier results stay bit-identical.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
 import random
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 DOMAINS = [
     ("weather", ["forecast", "temperature", "humidity", "wind", "alerts"]),
@@ -55,12 +65,65 @@ class Tool:
 
 
 @dataclasses.dataclass(frozen=True)
+class QoSTier:
+    """One priority class of the workload mix.
+
+    `priority` feeds `SessionRequest.priority` (larger admits first and may
+    preempt strictly smaller); `deadline_s` is the queue-wait budget
+    (`SessionRequest.deadline_s`; None = no deadline); `share` is the tier's
+    fraction of arrivals; `latency_weight` scales how strongly the fleet
+    router penalizes predicted queue wait for this tier (batch traffic sets
+    it near zero so placement chases low carbon instead).
+    """
+    name: str
+    priority: int
+    deadline_s: Optional[float]
+    share: float
+    latency_weight: float = 1.0
+
+
+# The canonical three-tier mix: latency-bound user turns, background agent
+# traffic with slack, and deadline-free offline jobs that exist to soak up
+# low-carbon capacity (and to be preempted under pool pressure).
+DEFAULT_TIERS: Tuple[QoSTier, ...] = (
+    QoSTier("interactive", priority=2, deadline_s=60.0, share=0.30,
+            latency_weight=4.0),
+    QoSTier("standard", priority=1, deadline_s=600.0, share=0.50,
+            latency_weight=1.0),
+    QoSTier("batch", priority=0, deadline_s=None, share=0.20,
+            latency_weight=0.001),
+)
+
+TIERS_BY_NAME: Dict[str, QoSTier] = {t.name: t for t in DEFAULT_TIERS}
+
+
+def parse_qos_mix(spec: str) -> Tuple[QoSTier, ...]:
+    """Parse "interactive:0.3,standard:0.5,batch:0.2" into QoSTiers with the
+    given arrival shares (names must come from DEFAULT_TIERS; shares are
+    normalized, so integer weights work too)."""
+    parts = []
+    for item in spec.split(","):
+        name, _, w = item.strip().partition(":")
+        if name not in TIERS_BY_NAME:
+            raise ValueError(f"unknown QoS tier {name!r}; expected one of "
+                             f"{sorted(TIERS_BY_NAME)}")
+        weight = float(w) if w else 1.0
+        if weight <= 0:
+            raise ValueError(f"QoS tier {name!r} needs a positive share, "
+                             f"got {weight}")
+        parts.append((TIERS_BY_NAME[name], weight))
+    total = sum(w for _, w in parts)
+    return tuple(dataclasses.replace(t, share=w / total) for t, w in parts)
+
+
+@dataclasses.dataclass(frozen=True)
 class Query:
     text: str
     sentences: Tuple[str, ...]
     true_tools: Tuple[int, ...]      # ordered chain of ground-truth tool ids
     entities: Tuple[str, ...]
     difficulty: str                  # "single" (BFCL-like) | "chain" (GeoEngine-like)
+    tier: Optional[QoSTier] = None   # None = untiered (priority 0, no deadline)
 
 
 @dataclasses.dataclass
@@ -98,9 +161,29 @@ class FunctionCallWorkload:
     catalog: ToolCatalog
     seed: int = 0
     chain_fraction: float = 0.35     # GeoEngine-like share of the mix
+    tiers: Optional[Sequence[QoSTier]] = None   # None = untiered traffic
 
     def __post_init__(self):
         self._rng = random.Random(self.seed)
+        # tier assignment draws from its OWN rng: the query-content stream is
+        # identical with and without tiers (same seed -> same prompts), so a
+        # tiered run and its priority-0 baseline compare the same traffic
+        self._tier_rng = random.Random(self.seed + 0x7ee5)
+        if self.tiers:
+            self._tier_cum = []
+            acc = 0.0
+            for t in self.tiers:
+                acc += t.share
+                self._tier_cum.append(acc)
+
+    def _draw_tier(self) -> Optional[QoSTier]:
+        if not self.tiers:
+            return None
+        u = self._tier_rng.random() * self._tier_cum[-1]
+        for t, edge in zip(self.tiers, self._tier_cum):
+            if u < edge:
+                return t
+        return self.tiers[-1]
 
     def _query_for(self, tool: Tool, rng) -> str:
         domain, topic, action = tool.keywords
@@ -111,6 +194,7 @@ class FunctionCallWorkload:
 
     def sample(self) -> Query:
         rng = self._rng
+        tier = self._draw_tier()
         if rng.random() < self.chain_fraction:
             n = rng.randint(2, 4)
             tools = rng.sample(self.catalog.tools, n)
@@ -122,11 +206,11 @@ class FunctionCallWorkload:
             text = ". ".join(parts)
             return Query(text=text, sentences=tuple(parts),
                          true_tools=tuple(t.tool_id for t in tools),
-                         entities=tuple(ents), difficulty="chain")
+                         entities=tuple(ents), difficulty="chain", tier=tier)
         t = rng.choice(self.catalog.tools)
         s, e = self._query_for(t, rng)
         return Query(text=s, sentences=(s,), true_tools=(t.tool_id,),
-                     entities=(e,), difficulty="single")
+                     entities=(e,), difficulty="single", tier=tier)
 
     def stream(self, n: int) -> List[Query]:
         return [self.sample() for _ in range(n)]

@@ -81,12 +81,14 @@ class Request:
     eos_id: int = 1
     temperature: float = 0.0
     priority: int = 0                      # larger runs first / preempts lower
-    deadline: Optional[float] = None       # absolute engine-clock queue limit
+    deadline: Optional[float] = None       # absolute engine-clock wait limit
+    tier: str = "default"                  # QoS class label (telemetry only)
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     status: str = WAITING
     submit_time: float = 0.0
     enqueue_time: float = 0.0
+    queue_wait_s: float = 0.0              # total time spent WAITING (all stints)
     first_token_time: Optional[float] = None
     done_time: Optional[float] = None
     seq: int = -1                          # submission order (scheduler key)
@@ -333,7 +335,7 @@ class ServingEngine:
             self._free_slot(self.slots.index(req))
         req.status = CANCELLED
         req.resume_row = None
-        self.scheduler.cancelled += 1
+        self.scheduler.note_cancelled(req)
         return True
 
     @property
@@ -419,6 +421,7 @@ class ServingEngine:
                 self.clock.advance(cost)
         for req in completed:                # completion is at end of step
             req.done_time = self.clock()
+            self.scheduler.note_done(req, req.done_time)
         dt = max(self.clock() - t0, 1e-9)
         self.tokens_emitted += tokens_this_step
         self.step_log.append({
@@ -614,7 +617,7 @@ class ServingEngine:
             np.asarray(req.output[e - 1:len(req.output) - 1], np.int32)])
         req.resume_row = seq[:int(self.lengths[i])]
         self._free_slot(i)
-        self.scheduler.preemptions += 1
+        self.scheduler.note_preempted(req)
         self.scheduler.requeue(req, self.clock())
 
     def _try_resume(self, req: Request, slot: int) -> int:
@@ -904,7 +907,7 @@ class EngineClient:
         req = Request(rid=self.engine.next_rid(), prompt=list(sreq.prompt),
                       max_new_tokens=sreq.max_new_tokens, eos_id=sreq.eos_id,
                       temperature=sreq.temperature, priority=sreq.priority,
-                      deadline=deadline)
+                      deadline=deadline, tier=sreq.tier)
         return self.engine.submit(req)
 
     def step(self) -> List[Request]:

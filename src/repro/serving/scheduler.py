@@ -14,7 +14,22 @@ Lifecycle of a request::
                  +--- preempt (requeued with saved tokens; resumes with an
                  |    exact-position re-prefill, so temperature-0 streams are
                  |    identical to an unpreempted run)
-                 +--> EXPIRED   (deadline passed while waiting)
+                 +--> EXPIRED   (deadline passed while waiting — including a
+                      preempted victim whose requeue outlived its budget)
+
+Queue order is earliest-deadline-first *within* a priority class: priority
+strictly dominates (a batch request never jumps an interactive one however
+tight its deadline), and inside one class the request closest to expiry runs
+next — the ordering that maximizes deadline-hit rate for tiered traffic.
+Deadline-free requests sort last in their class, FIFO among themselves.
+
+The deadline is an absolute engine-clock timestamp (submit + deadline_s):
+a request found WAITING past it fails with a clean EXPIRED. Admission does
+not clear it, so a preempted victim carries its original deadline back into
+the queue and expires (saved tokens dropped, nothing decoded further) when
+its requeue lands past the budget. A RUNNING request is never killed —
+`expire_due` only scans the waiting queue — so a stream that stays admitted
+finishes regardless of how long it decodes.
 
 Preemption policy: the victim is the lowest-priority active slot, ties broken
 toward the most recently admitted (LIFO, vLLM-style). Admission only preempts
@@ -22,6 +37,11 @@ toward the most recently admitted (LIFO, vLLM-style). Admission only preempts
 work never preempts itself, so FIFO workloads behave exactly like a
 non-preemptive queue. Mid-decode pool exhaustion may preempt any slot
 (including the requester, when other slots can still make progress).
+
+Per-tier telemetry: requests carry a `tier` label (QoS class name; "default"
+when untiered); the scheduler keeps per-tier counters (submitted / admitted /
+preempted / expired / cancelled / done) and completion-latency percentiles,
+surfaced through `ServingEngine.scheduler_stats()["tiers"]`.
 
 `RequestHandle` is the user-facing side: `poll()` (non-blocking status),
 `result()` (step the engine until terminal), `cancel()`. Handles are created
@@ -64,8 +84,11 @@ class SessionRequest:
     """User-facing request spec for `EngineClient.submit`.
 
     `priority`: larger runs first (and may preempt strictly smaller).
-    `deadline_s`: max *queue wait* in engine-clock seconds; a request still
-    waiting past its deadline fails cleanly with status EXPIRED.
+    `deadline_s`: service-level budget in engine-clock seconds from submit;
+    a request found *waiting* past it (never admitted, or preempted and
+    requeued past the budget) fails cleanly with status EXPIRED. A running
+    stream is never killed by its deadline.
+    `tier`: QoS class label for per-tier scheduler telemetry.
     """
     prompt: List[int]
     max_new_tokens: int = 32
@@ -73,6 +96,7 @@ class SessionRequest:
     temperature: float = 0.0
     priority: int = 0
     deadline_s: Optional[float] = None
+    tier: str = "default"
 
 
 class RequestHandle:
@@ -123,14 +147,16 @@ class RequestHandle:
 class Scheduler:
     """Priority waiting queue + preemption policy + counters for one engine.
 
-    Queue order is (-priority, submission seq); a preempted request keeps its
-    original seq, so it re-enters at the front of its priority class and
-    resumes before newer same-priority arrivals.
+    Queue order is (-priority, deadline, submission seq): priority strictly
+    dominates, the earliest deadline runs first within a class (EDF), and
+    deadline-free requests sort last in their class by submission order. A
+    preempted request keeps its original seq, so among equally-deadlined
+    same-priority peers it resumes before newer arrivals.
     """
 
     def __init__(self):
-        self._order: List[Tuple[int, int]] = []      # sort keys
-        self._queue: List["Request"] = []            # parallel to _order
+        self._order: List[Tuple[int, float, int]] = []   # sort keys
+        self._queue: List["Request"] = []                # parallel to _order
         self._seq = 0
         # counters (surfaced via ServingEngine.scheduler_stats())
         self.admitted = 0
@@ -139,6 +165,35 @@ class Scheduler:
         self.expired = 0
         self.cancelled = 0
         self.queue_wait_s = 0.0
+        self._tiers: Dict[str, Dict] = {}
+
+    # -- per-tier telemetry --------------------------------------------------
+
+    def _tier(self, req: "Request") -> Dict:
+        name = getattr(req, "tier", "default") or "default"
+        t = self._tiers.get(name)
+        if t is None:
+            t = self._tiers[name] = {
+                "submitted": 0, "admitted": 0, "preempted": 0, "expired": 0,
+                "cancelled": 0, "done": 0, "latencies": []}
+        return t
+
+    def note_preempted(self, req: "Request"):
+        """Count a preemption against the victim's tier (the engine calls
+        this right before `requeue`)."""
+        self.preemptions += 1
+        self._tier(req)["preempted"] += 1
+
+    def note_done(self, req: "Request", now: float):
+        """Record a completion and its end-to-end latency for the tier's
+        percentiles (now = the engine-clock instant the stream finished)."""
+        t = self._tier(req)
+        t["done"] += 1
+        t["latencies"].append(max(0.0, now - req.submit_time))
+
+    def note_cancelled(self, req: "Request"):
+        self.cancelled += 1
+        self._tier(req)["cancelled"] += 1
 
     # -- queue ---------------------------------------------------------------
 
@@ -150,23 +205,25 @@ class Scheduler:
         return bool(self._queue)
 
     def _push(self, req: "Request"):
-        key = (-req.priority, req.seq)
+        dl = req.deadline if req.deadline is not None else float("inf")
+        key = (-req.priority, dl, req.seq)
         i = bisect.bisect_right(self._order, key)
         self._order.insert(i, key)
         self._queue.insert(i, req)
 
     def enqueue(self, req: "Request", now: float):
-        """First submission: stamp times/seq and queue by priority."""
+        """First submission: stamp times/seq and queue by priority/EDF."""
         req.status = WAITING
         req.submit_time = now
         req.enqueue_time = now
         req.seq = self._seq
         self._seq += 1
+        self._tier(req)["submitted"] += 1
         self._push(req)
 
     def requeue(self, req: "Request", now: float):
-        """Re-queue a preempted request (keeps its original seq, so it sits
-        at the front of its priority class)."""
+        """Re-queue a preempted request (keeps its original seq and its
+        deadline: the resume must still land inside the original budget)."""
         req.status = WAITING
         req.enqueue_time = now
         self.requeues += 1
@@ -187,20 +244,27 @@ class Scheduler:
     def note_admitted(self, req: "Request", now: float):
         self.remove(req)
         req.status = RUNNING
-        # the deadline bounds QUEUE WAIT only: once admitted it is satisfied
-        # for good, so a later preemption can never expire a started stream
-        req.deadline = None
+        # the deadline is NOT cleared: it stays as the absolute budget, so a
+        # preempted request requeued past it expires instead of resuming. A
+        # RUNNING stream can still never expire — expire_due only scans the
+        # waiting queue.
         self.admitted += 1
-        self.queue_wait_s += max(0.0, now - req.enqueue_time)
+        self._tier(req)["admitted"] += 1
+        wait = max(0.0, now - req.enqueue_time)
+        req.queue_wait_s += wait
+        self.queue_wait_s += wait
 
     def expire_due(self, now: float) -> List["Request"]:
-        """Fail (cleanly) every waiting request whose deadline has passed."""
+        """Fail (cleanly) every waiting request whose deadline has passed —
+        including preempted victims, whose saved resume state is dropped."""
         due = [r for r in self._queue
                if r.deadline is not None and now > r.deadline]
         for req in due:
             self.remove(req)
             req.status = EXPIRED
+            req.resume_row = None        # never decoded further
             self.expired += 1
+            self._tier(req)["expired"] += 1
         return due
 
     # -- preemption policy ---------------------------------------------------
@@ -218,6 +282,22 @@ class Scheduler:
             return None
         return min(pool)[2]
 
+    def tier_stats(self) -> Dict[str, Dict[str, float]]:
+        """Per-tier counters + completion-latency percentiles."""
+        out: Dict[str, Dict[str, float]] = {}
+        for name, t in self._tiers.items():
+            lats = sorted(t["latencies"])
+
+            def pct(q):
+                if not lats:
+                    return 0.0
+                return float(lats[min(len(lats) - 1,
+                                      int(round(q * (len(lats) - 1))))])
+            out[name] = {k: v for k, v in t.items() if k != "latencies"}
+            out[name]["p50_latency_s"] = round(pct(0.50), 6)
+            out[name]["p95_latency_s"] = round(pct(0.95), 6)
+        return out
+
     def stats(self) -> Dict[str, float]:
         return {"admitted": self.admitted,
                 "preemptions": self.preemptions,
@@ -225,4 +305,5 @@ class Scheduler:
                 "expired": self.expired,
                 "cancelled": self.cancelled,
                 "queue_wait_s": round(self.queue_wait_s, 6),
-                "waiting": len(self._queue)}
+                "waiting": len(self._queue),
+                "tiers": self.tier_stats()}

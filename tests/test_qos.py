@@ -1,0 +1,189 @@
+"""QoS tier subsystem: tiered workload sampling, runtime tier -> session
+mapping, per-tier reporting, and deadline-aware fleet routing."""
+import numpy as np
+import pytest
+
+from repro.common.hardware import ORIN_AGX
+from repro.core import (ORIN_MODES, PAPER_MODELS, POLICIES, SimExecutor,
+                        ToolSelector, tier_report)
+from repro.core.fleet import FleetRouter, PodState
+from repro.core.runtime import CarbonCallRuntime
+from repro.data.workload import (DEFAULT_TIERS, TIERS_BY_NAME,
+                                 build_catalog, FunctionCallWorkload,
+                                 parse_qos_mix)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    catalog = build_catalog(48, seed=0)
+    return catalog, ToolSelector(catalog)
+
+
+# ---------------------------------------------------------------------------
+# workload tiers
+# ---------------------------------------------------------------------------
+
+
+def test_untiered_workload_unchanged(setup):
+    catalog, _ = setup
+    wl = FunctionCallWorkload(catalog, seed=3)
+    qs = wl.stream(50)
+    assert all(q.tier is None for q in qs)
+
+
+def test_tiered_stream_same_content_as_untiered(setup):
+    """Tier assignment draws from its own rng: the same seed yields the
+    exact same query text/tools with and without tiers, so a tiered run and
+    its priority-0 baseline compare identical traffic."""
+    catalog, _ = setup
+    plain = FunctionCallWorkload(catalog, seed=3).stream(40)
+    tiered = FunctionCallWorkload(catalog, seed=3,
+                                  tiers=DEFAULT_TIERS).stream(40)
+    assert [q.text for q in plain] == [q.text for q in tiered]
+    assert [q.true_tools for q in plain] == [q.true_tools for q in tiered]
+    names = {q.tier.name for q in tiered}
+    assert names <= {"interactive", "standard", "batch"}
+    assert len(names) >= 2               # the mix actually mixes
+
+
+def test_tier_shares_approached(setup):
+    catalog, _ = setup
+    wl = FunctionCallWorkload(catalog, seed=0, tiers=DEFAULT_TIERS)
+    qs = wl.stream(600)
+    frac = {t.name: sum(q.tier.name == t.name for q in qs) / len(qs)
+            for t in DEFAULT_TIERS}
+    for t in DEFAULT_TIERS:
+        assert abs(frac[t.name] - t.share) < 0.08
+
+
+def test_parse_qos_mix():
+    tiers = parse_qos_mix("interactive:1,batch:3")
+    assert [t.name for t in tiers] == ["interactive", "batch"]
+    assert tiers[0].share == pytest.approx(0.25)
+    assert tiers[1].share == pytest.approx(0.75)
+    # the scheduling class comes from the canonical tier definition
+    assert tiers[0].priority == TIERS_BY_NAME["interactive"].priority
+    assert tiers[0].deadline_s == TIERS_BY_NAME["interactive"].deadline_s
+    with pytest.raises(ValueError):
+        parse_qos_mix("platinum:1")
+    with pytest.raises(ValueError):
+        parse_qos_mix("interactive:0")
+
+
+# ---------------------------------------------------------------------------
+# runtime mapping + per-tier reporting
+# ---------------------------------------------------------------------------
+
+
+def _runtime(setup, seed=0):
+    catalog, selector = setup
+    ex = SimExecutor(PAPER_MODELS["qwen2-7b"], ORIN_AGX, seed=seed)
+    return CarbonCallRuntime(selector=selector, executor=ex,
+                             policy=POLICIES["carboncall"], modes=ORIN_MODES,
+                             catalog_size=len(catalog.tools), seed=seed)
+
+
+def test_runtime_maps_tier_onto_session(setup):
+    rt = _runtime(setup)
+    wl = FunctionCallWorkload(setup[0], seed=1, tiers=DEFAULT_TIERS)
+    gs = rt.governor.init(np.full(144, 300.0))
+    for _ in range(10):
+        q = wl.sample()
+        pq = rt.submit_query(0.0, q, 300.0, gs)
+        assert pq.session.priority == q.tier.priority
+        assert pq.session.deadline_s == q.tier.deadline_s
+        assert pq.session.tier == q.tier.name
+        rec = rt.settle([pq])[0]
+        assert rec.tier == q.tier.name
+
+
+def test_untiered_query_is_priority_zero(setup):
+    rt = _runtime(setup)
+    wl = FunctionCallWorkload(setup[0], seed=1)
+    gs = rt.governor.init(np.full(144, 300.0))
+    pq = rt.submit_query(0.0, wl.sample(), 300.0, gs)
+    assert pq.session.priority == 0
+    assert pq.session.deadline_s is None
+    assert pq.session.tier == "default"
+
+
+def test_tier_report_partitions_records(setup):
+    rt = _runtime(setup)
+    wl = FunctionCallWorkload(setup[0], seed=2, tiers=DEFAULT_TIERS)
+    gs = rt.governor.init(np.full(144, 300.0))
+    recs = [rt.settle([rt.submit_query(0.0, wl.sample(), 300.0, gs)])[0]
+            for _ in range(40)]
+    rep = tier_report(recs)
+    assert sum(int(v["queries"]) for v in rep.values()) == len(recs)
+    for v in rep.values():
+        assert v["p95_latency_s"] >= v["p50_latency_s"] > 0.0
+        assert 0.0 <= v["success_rate"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware routing
+# ---------------------------------------------------------------------------
+
+
+def _flat_ci_pods(setup, ci_values):
+    catalog, selector = setup
+    pods = []
+    for i, ci in enumerate(ci_values):
+        ex = SimExecutor(PAPER_MODELS["qwen2-7b"], ORIN_AGX, seed=i)
+        rt = CarbonCallRuntime(selector=selector, executor=ex,
+                               policy=POLICIES["carboncall"],
+                               modes=ORIN_MODES,
+                               catalog_size=len(catalog.tools), seed=i)
+        trace = np.full(288, float(ci))
+        pods.append(PodState(pod_id=i, runtime=rt, ci_trace=trace,
+                             gov_state=rt.governor.init(trace[:144])))
+    return pods
+
+
+def test_batch_sheds_to_green_pod_despite_backlog(setup):
+    """Near-zero latency weight: batch chases the low-carbon pod even when
+    it carries a queue that repels latency-sensitive traffic."""
+    pods = _flat_ci_pods(setup, [90.0, 700.0])
+    pods[0].queue_s = 40.0               # backlog on the green pod
+    router = FleetRouter(pods)
+    batch = TIERS_BY_NAME["batch"]
+    interactive = TIERS_BY_NAME["interactive"]
+    assert router.route(0, batch).pod_id == 0
+    assert router.route(0, interactive).pod_id == 1
+    # untiered traffic keeps the legacy scoring (weight 1.0)
+    assert router.route(0) in pods
+
+
+def test_deadline_blowing_pod_excluded(setup):
+    """A pod whose predicted wait exceeds the tier's deadline budget is
+    avoided even if far greener — unless every pod would blow it."""
+    pods = _flat_ci_pods(setup, [90.0, 700.0])
+    interactive = TIERS_BY_NAME["interactive"]
+    pods[0].queue_s = interactive.deadline_s + 10.0
+    router = FleetRouter(pods)
+    assert router.route(0, interactive).pod_id == 1
+    # batch has no deadline: the green pod's queue is acceptable
+    assert router.route(0, TIERS_BY_NAME["batch"]).pod_id == 0
+    # both pods blow the deadline -> fall back to the cheaper score
+    pods[1].queue_s = interactive.deadline_s + 1000.0
+    assert router.route(0, interactive).pod_id == 0
+
+
+def test_predicted_wait_reads_live_scheduler_depth(setup):
+    """Engine-backed pods expose queue depth net of free slots: arrivals
+    that fit a free decode slot predict ~zero wait; queued ones predict
+    service-time multiples."""
+    pods = _flat_ci_pods(setup, [300.0])
+    pod = pods[0]
+    pod.runtime.use_backend("engine")
+    pod.client = pod.runtime.executor.client
+    router = FleetRouter(pods)
+    assert router.predicted_wait_s(pod) == 0.0
+    # fill the waiting queue beyond the free slots
+    eng = pod.client.engine
+    from repro.serving import SessionRequest
+    for i in range(eng.max_batch + 2):
+        pod.client.submit(SessionRequest(prompt=[2, 2], max_new_tokens=2,
+                                         eos_id=-1))
+    wait = router.predicted_wait_s(pod)
+    assert wait == pytest.approx(2 * router.service_s)

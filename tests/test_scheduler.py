@@ -204,15 +204,17 @@ def test_deadline_expired_fails_cleanly(params):
     first = Request(rid=0, prompt=[2, 2], max_new_tokens=10, eos_id=-1,
                     deadline=1e9)
     eng.submit(first)
-    client = eng.client()
+    eng.step()                  # rid 0 occupies the slot (EDF would otherwise
+    client = eng.client()       # run the tighter-deadline arrival first)
     h = client.submit(SessionRequest(prompt=[3, 3], max_new_tokens=2,
                                      eos_id=-1, deadline_s=3.0))
     done = eng.run_until_drained()
     assert [r.rid for r in done] == [0]
     assert len(done[0].output) == 10
-    # the deadline bounds queue wait only: admission clears it, so a later
-    # preemption could never expire an already-started stream
-    assert first.deadline is None
+    # the deadline bounds total WAITING time: admission keeps it (a preempted
+    # requeue must still land inside the budget), but a RUNNING stream can
+    # never expire — expire_due only scans the waiting queue
+    assert first.deadline == 1e9 and first.status == "done"
     assert h.poll() == "expired"
     assert h.request.output == []
     with pytest.raises(DeadlineExpiredError):
@@ -226,6 +228,103 @@ def test_run_until_drained_raises_on_stall(params):
     with pytest.raises(EngineStallError, match="active=1"):
         eng.run_until_drained(max_steps=3)
     eng.run_until_drained()                     # finishes once given budget
+
+
+def test_edf_orders_within_priority_class(params):
+    """Within one priority class the earliest deadline runs first; priority
+    still strictly dominates (a tight-deadline batch request never jumps an
+    interactive one); deadline-free requests sort last, FIFO."""
+    eng = _engine(params, max_batch=1)
+    eng.submit(Request(rid=0, prompt=[2, 2], max_new_tokens=4, eos_id=-1))
+    eng.step()                                    # rid 0 occupies the slot
+    eng.submit(Request(rid=1, prompt=[3, 3], max_new_tokens=2, eos_id=-1))
+    eng.submit(Request(rid=2, prompt=[4, 4], max_new_tokens=2, eos_id=-1,
+                       deadline=1e9))
+    eng.submit(Request(rid=3, prompt=[5, 5], max_new_tokens=2, eos_id=-1,
+                       deadline=5e8))
+    eng.submit(Request(rid=4, prompt=[6, 6], max_new_tokens=2, eos_id=-1,
+                       priority=1, deadline=1e9))
+    # priority 1 first; then priority 0 by deadline (5e8 < 1e9 < none)
+    assert [r.rid for r in eng.pending] == [4, 3, 2, 1]
+    done = eng.run_until_drained()
+    assert [r.rid for r in done] == [0, 4, 3, 2, 1]
+
+
+def test_preempted_victim_requeued_past_deadline_expires(params):
+    """Deadline x preemption interplay: a victim whose requeue outlives its
+    waiting budget fails with a clean EXPIRED — it neither hangs the engine
+    nor decodes another token — while the preemptor's stream completes."""
+    clock = VirtualClock()
+    eng = _engine(params, num_blocks=6, clock=clock,
+                  step_cost_fn=lambda kind, tok, act: 1.0)
+    victim = Request(rid=0, prompt=[3] * 20, max_new_tokens=20, eos_id=-1,
+                     deadline=5.0)               # generous vs its 0s wait
+    h_victim = eng.submit(victim)
+    for _ in range(6):
+        eng.step()                               # admitted at t=0, mid-decode
+    assert victim.status == "running"
+    tokens_at_preempt = None
+    high = Request(rid=1, prompt=[9] * 20, max_new_tokens=4, eos_id=-1,
+                   priority=10)
+    eng.submit(high)
+    eng.step()                                   # high's admission preempts
+    assert eng.scheduler_stats()["preemptions"] >= 1
+    assert victim.status == "waiting" and victim.resume_row is not None
+    tokens_at_preempt = len(victim.output)
+    done = eng.run_until_drained()               # must not stall
+    assert high in done and high.status == "done"
+    assert victim.status == "expired"
+    assert victim.resume_row is None             # saved tokens dropped
+    assert len(victim.output) == tokens_at_preempt   # never decoded again
+    with pytest.raises(DeadlineExpiredError):
+        h_victim.result()
+    stats = eng.scheduler_stats()
+    assert stats["expired"] == 1
+    assert stats["tiers"]["default"]["expired"] == 1
+    # pool returns to baseline once cache refs are dropped
+    eng.prefix_cache.clear()
+    assert eng.block_pool.num_free == eng.block_pool.num_blocks - 1
+
+
+def test_tier_counters_reconcile_with_step_log(params):
+    """Per-tier scheduler counters must agree with the engine step_log: each
+    tier's admission count equals its rids' appearances in prefill steps, and
+    per-tier done/expired partition the submissions."""
+    eng = _engine(params, max_batch=2)
+    client = eng.client()
+    tiers = ["interactive", "interactive", "standard", "standard",
+             "batch", "batch"]
+    handles = {}
+    for i, tier in enumerate(tiers):
+        pri = {"interactive": 2, "standard": 1, "batch": 0}[tier]
+        handles[i] = client.submit(SessionRequest(
+            prompt=[2 + i] * 8, max_new_tokens=3, eos_id=-1,
+            priority=pri, tier=tier))
+    rid_tier = {h.rid: t for (i, h), t in zip(handles.items(), tiers)}
+    eng.run_until_drained()
+    stats = eng.scheduler_stats()
+    per_tier = stats["tiers"]
+    # global counters are the sum of the per-tier ones
+    assert sum(t["admitted"] for t in per_tier.values()) == stats["admitted"]
+    assert sum(t["preempted"] for t in per_tier.values()) \
+        == stats["preemptions"]
+    # admissions per tier == that tier's rids appearing in prefill steps
+    from collections import Counter
+    log_admits = Counter()
+    for s in eng.step_log:
+        if s["kind"] == "prefill":
+            for rid in s["rids"]:
+                log_admits[rid_tier[rid]] += 1
+    for name in ("interactive", "standard", "batch"):
+        assert per_tier[name]["admitted"] == log_admits[name]
+        assert per_tier[name]["submitted"] == 2
+        assert per_tier[name]["done"] + per_tier[name]["expired"] == 2
+        assert per_tier[name]["p95_latency_s"] >= \
+            per_tier[name]["p50_latency_s"] >= 0.0
+    # every decode step's rids belong to known sessions
+    for s in eng.step_log:
+        if s["kind"] == "decode":
+            assert all(r in rid_tier for r in s["rids"])
 
 
 # ---------------------------------------------------------------------------
