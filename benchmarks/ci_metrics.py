@@ -71,6 +71,18 @@ _SCHEMAS: Dict[str, List[Tuple[str, str, Callable]]] = {
         ("fleet_carbon_g_per_query", LOWER,
          lambda d: _get(d, "fleet", "carbon_g_per_query")),
     ],
+    "fleet_scale": [
+        ("agg_decode_tps@16", HIGHER,
+         lambda d: _get(d, "pods", "16", "agg_decode_tps")),
+        ("tps_scaling_4_to_16", HIGHER,
+         lambda d: _get(d, "acceptance", "tps_scaling_4_to_16")),
+        ("carbon_g_per_query@16", LOWER,
+         lambda d: _get(d, "pods", "16", "carbon_g_per_query")),
+        ("sharded_enabled", INFO,
+         lambda d: _get(d, "sharded", "enabled")),
+        ("acceptance_pass", INFO,
+         lambda d: _get(d, "acceptance", "pass")),
+    ],
     "qos_fleet": [
         ("decode_tps", HIGHER,
          lambda d: _get(d, "pressure", "tiered", "decode_tps")),

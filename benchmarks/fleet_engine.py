@@ -74,6 +74,9 @@ def fleet_smoke(n_pods: int = 2, n_steps: int = 2,
     cf = sum(r.carbon_g for rs in recs.values() for r in rs)
     pod_stats = {}
     for p in pods:
+        if p.client is None:        # lazily-built pod that saw no traffic
+            pod_stats[p.pod_id] = {"served": p.served, "built": False}
+            continue
         eng = p.client.engine
         pod_stats[p.pod_id] = {"served": p.served,
                                "scheduler": eng.scheduler_stats(),

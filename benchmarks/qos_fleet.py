@@ -174,7 +174,8 @@ def fleet_routing(n_steps: int = 2, queries_per_hour: float = 42.0,
         pod_stats[p.pod_id] = {
             "ci_g_per_kwh": float(p.ci_trace[0]),
             "tier_queries": served,
-            "scheduler": p.client.engine.scheduler_stats(),
+            "scheduler": (p.client.engine.scheduler_stats()
+                          if p.client is not None else {}),
         }
     out = {"pods": pod_stats, "tiers": tier_report(flat),
            "carbon_g_per_query":

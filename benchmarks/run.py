@@ -10,6 +10,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
                          concurrent sessions, per-pod scheduler counters
   qos_fleet            — QoS tiers under pool pressure (deadline-hit/p95 vs
                          the priority-0 baseline) + deadline-aware routing
+  fleet_scale          — sharded multi-host fleet scale-out: aggregate
+                         decode TPS 4 vs 16 pods, regional carbon shedding,
+                         data-parallel sharded pods (8 forced host devices)
   variant_utilization  — Fig 6 (Q8 share per weekday, weeks 3/4)
   operating_modes      — Table I + §III-C TPS/power ladder
   tool_selection       — §III-B selection quality/latency
@@ -36,9 +39,9 @@ def main() -> None:
                          "directory (CI benchmark-artifact mode)")
     args = ap.parse_args()
 
-    from benchmarks import (engine_week, fleet_engine, kernels_bench,
-                            operating_modes, paged_engine, qos_fleet,
-                            roofline_table, tool_selection,
+    from benchmarks import (engine_week, fleet_engine, fleet_scale,
+                            kernels_bench, operating_modes, paged_engine,
+                            qos_fleet, roofline_table, tool_selection,
                             variant_utilization, week_eval)
 
     if args.json_dir is not None:
@@ -47,6 +50,7 @@ def main() -> None:
             "paged_engine": paged_engine.json_summary,
             "fleet_engine": fleet_engine.json_summary,
             "qos_fleet": qos_fleet.json_summary,
+            "fleet_scale": fleet_scale.json_summary,
         }
         if args.only and args.only not in json_suites:
             raise SystemExit(
@@ -73,6 +77,7 @@ def main() -> None:
         "paged_engine": paged_engine.run,
         "fleet_engine": fleet_engine.run,
         "qos_fleet": qos_fleet.run,
+        "fleet_scale": fleet_scale.run,
         "roofline": roofline_table.run,
     }
     for name, fn in suites.items():

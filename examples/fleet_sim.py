@@ -92,6 +92,8 @@ def main():
                   f"  CF/query={rep['carbon_g_per_query']*1000:.2f}mg")
         if args.backend == "engine":
             for p in pods:
+                if p.client is None:
+                    continue        # lazily-built pod that saw no traffic
                 st = p.client.engine.scheduler_stats()["tiers"]
                 mix = {n: f"adm={int(t['admitted'])}"
                           f" pre={int(t['preempted'])}"
@@ -99,7 +101,8 @@ def main():
                        for n, t in sorted(st.items())}
                 print(f"  pod {p.pod_id} scheduler: {mix}")
     if args.backend == "engine":
-        shared = max(p.client.engine.peak_active for p in pods)
+        shared = max((p.client.engine.peak_active for p in pods
+                      if p.client is not None), default=0)
         print(f"  max concurrent sessions in one pod engine: {shared}")
         return
 

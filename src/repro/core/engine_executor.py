@@ -83,7 +83,7 @@ class EngineExecutor:
                  max_batch: int = 2, max_seq: int = 256,
                  tokens_per_call: int = 8, eval_tokens: int = 4,
                  kv_layout: str = "auto", num_blocks: Optional[int] = None,
-                 clock: Optional[VirtualClock] = None):
+                 mesh=None, clock: Optional[VirtualClock] = None):
         self.profile = profile
         self.power_model = PowerModel(hw)
         self.seed = seed
@@ -103,7 +103,7 @@ class EngineExecutor:
         self.engine = ServingEngine(self.cfg, self.variants["q8"], rcfg,
                                     max_batch=max_batch, max_seq=max_seq,
                                     kv_layout=kv_layout, num_blocks=num_blocks,
-                                    clock=self.clock,
+                                    mesh=mesh, clock=self.clock,
                                     step_cost_fn=self._step_cost)
         self.engine.variant_name = "q8"
         self.client = self.engine.client()
@@ -126,15 +126,24 @@ class EngineExecutor:
         """Roofline duration of one engine step at profile scale: prefill is
         compute-bound on the prompt tokens; batched decode streams the weights
         once per step plus one KV read per active slot (this is what makes
-        batched TPS scale with occupancy under the virtual clock)."""
+        batched TPS scale with occupancy under the virtual clock). A
+        data-parallel sharded engine splits its batch ROWS over
+        `data_shards` hosts running concurrently, so a decode step sees only
+        each shard's share of the KV reads (weights are replicated and
+        streamed by every shard in parallel). Prefill is charged in full:
+        row-sharding cannot split one prompt's tokens across hosts, and the
+        common admission is a single row — the slowest shard computes it
+        whole (charging the total is exact there and conservative for
+        multi-row admissions)."""
         pm, prof, mode = self.power_model, self.profile, self._mode
+        shards = max(1, getattr(self.engine, "data_shards", 1))
         if kind == "prefill":
             if tokens <= 0:
                 return 0.0       # full prefix-cache hit: prefill was skipped
             return pm.prefill_time(tokens, prof.n_active * 2, mode)
         return pm.decode_time_per_token(
             prof.active_bytes(self.engine.variant_name),
-            prof.kv_bytes_per_token * max(active, 1), mode)
+            prof.kv_bytes_per_token * max(-(-active // shards), 1), mode)
 
     # -- executor interface --------------------------------------------------
 

@@ -28,6 +28,22 @@ one fleet timeline — and each step rebases every pod to the same start time
 before settling (pods run in parallel in reality; the shared clock then
 advances to the slowest pod's finish).
 
+Sharded multi-host topology: a `FleetSpec` describes the fleet as regions
+(each with its own CI trace, scaled clean/dirty) composed of pods drawn from
+named `HardwareProfile`s (per-pod slot/pool sizing; `data_shards > 1` gives
+the pod a data-parallel sharded engine over a host `data` mesh axis —
+exercised on CPU under ``--xla_force_host_platform_device_count``).
+`build_fleet` materializes it into `RegionState`s + `PodState`s and a
+`HierarchicalRouter` that picks a region from O(1) aggregates before running
+the full deadline-aware pod scoring inside it — O(R + P/R) score evaluations
+per query instead of O(P), which is what lets routing scale past a
+linear scan at 64+ pods.
+
+Pod engines are built LAZILY: `run_fleet(backend="engine")` no longer
+converts every pod up front — `PodState.ensure_client()` constructs the
+shared engine on the first query routed to the pod, so a 64-pod topology
+under light traffic only pays for the pods that actually serve.
+
 This module is deliberately runnable at "2 pods on CPU" (the dry-run mesh) and
 structurally identical at 1000 pods: state per pod is O(1) and routing is a
 pure function of the per-pod summaries.
@@ -35,11 +51,12 @@ pure function of the per-pod summaries.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.carbon import carbon_footprint
+from repro.common.hardware import HardwareSpec, ORIN_AGX
+from repro.core.carbon import carbon_footprint, ci_trace
 from repro.core.governor import GovernorState
 from repro.core.runtime import CarbonCallRuntime, PendingQuery, QueryRecord
 from repro.data.workload import FunctionCallWorkload, QoSTier
@@ -67,9 +84,40 @@ class PodState:
     served: int = 0
     inflight: int = 0                 # submitted, not yet settled (this step)
     client: Optional[EngineClient] = None   # shared-engine facade (engine bk.)
+    region: str = ""                  # grid region this pod sits in
+    profile: str = ""                 # hardware profile name (telemetry)
+    engine_kw: Dict = dataclasses.field(default_factory=dict)  # pod sizing
+    fleet_clock: Optional[VirtualClock] = None   # set by run_fleet (engine)
 
     def ci_at(self, i: int) -> float:
         return float(self.ci_trace[i % len(self.ci_trace)])
+
+    @property
+    def slot_capacity(self) -> int:
+        """Decode-slot count without forcing a lazy engine build."""
+        if self.client is not None:
+            return self.client.engine.max_batch
+        return int(self.engine_kw.get("max_batch", 2))
+
+    def ensure_client(self):
+        """Build the pod's shared engine on first routed query. Constructing
+        an `EngineExecutor` (param init + quantized variants + jit warm-up)
+        is the expensive part of a pod; deferring it means a 64-pod topology
+        under light traffic only pays for the pods traffic actually reaches.
+        No-op for sim-backed runs (no fleet clock) and already-built pods."""
+        if self.fleet_clock is None or self.client is not None:
+            return self.client
+        kw = dict(self.engine_kw)
+        shards = int(kw.pop("data_shards", 1))
+        if shards > 1:
+            from repro.launch.mesh import make_data_mesh
+            # layout is NOT forced here: engine_kw() already wrote "dense"
+            # and ServingEngine(mesh=...) validates it ("auto" also resolves
+            # to dense under a mesh)
+            kw["mesh"] = make_data_mesh(shards)
+        self.runtime.use_backend("engine", clock=self.fleet_clock, **kw)
+        self.client = self.runtime.executor.client
+        return self.client
 
 
 class FleetRouter:
@@ -127,39 +175,284 @@ class FleetRouter:
             else:
                 p.healthy = True
 
+    def step_reset(self):
+        """End-of-arrival-step hook (hierarchical routers decay their
+        per-step region aggregates here)."""
 
-def _to_engine_backend(pods: List[PodState]) -> VirtualClock:
-    """Convert every pod to one shared engine behind an EngineClient, all on
-    a single fleet-wide VirtualClock (cross-pod carbon accounting needs one
-    timeline, not N drifting ones)."""
+
+# ---------------------------------------------------------------------------
+# Sharded multi-host topology: FleetSpec -> regions of heterogeneous pods
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareProfile:
+    """Named per-pod engine sizing for a fleet topology.
+
+    `data_shards > 1` gives pods of this profile a data-parallel sharded
+    engine: the decode batch splits over a `data` mesh axis of that many
+    host devices (dense KV layout; see ServingEngine(mesh=...)). When the
+    process has fewer devices than shards, `build_fleet` degrades the pod
+    to an unsharded engine so topologies stay runnable everywhere."""
+    name: str
+    hw: HardwareSpec = ORIN_AGX
+    max_batch: int = 2
+    max_seq: int = 256
+    num_blocks: Optional[int] = None
+    kv_layout: str = "auto"
+    data_shards: int = 1
+
+    def engine_kw(self) -> Dict:
+        if self.data_shards > 1 and self.kv_layout == "paged":
+            raise ValueError(
+                f"profile {self.name!r}: the paged block pool is per-pod "
+                "state — a sharded profile (data_shards > 1) requires "
+                "kv_layout 'dense' (or 'auto')")
+        kw: Dict = {"max_batch": self.max_batch, "max_seq": self.max_seq}
+        if self.num_blocks is not None:
+            kw["num_blocks"] = self.num_blocks
+        if self.kv_layout != "auto":
+            kw["kv_layout"] = self.kv_layout
+        if self.data_shards > 1:
+            kw["data_shards"] = self.data_shards
+            kw["kv_layout"] = "dense"
+        return kw
+
+
+DEFAULT_PROFILES: Tuple[HardwareProfile, ...] = (
+    HardwareProfile("edge", max_batch=2),
+    HardwareProfile("pod", max_batch=4, num_blocks=96),
+    HardwareProfile("pod-dp4", max_batch=4, data_shards=4),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionSpec:
+    """One grid region: a CI trace source (paper week x clean/dirty scale)
+    and the region's pod composition as (profile name, count) pairs."""
+    name: str
+    week: str = "week1"
+    ci_scale: float = 1.0
+    pods: Tuple[Tuple[str, int], ...] = (("edge", 1),)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """Declarative fleet topology: regions of heterogeneous pods."""
+    regions: Tuple[RegionSpec, ...]
+    profiles: Tuple[HardwareProfile, ...] = DEFAULT_PROFILES
+
+    @property
+    def n_pods(self) -> int:
+        return sum(c for r in self.regions for _, c in r.pods)
+
+
+@dataclasses.dataclass
+class RegionState:
+    """Live aggregates for one region — everything the hierarchical router's
+    region stage reads is O(1) here (no per-pod scan)."""
+    name: str
+    ci_trace: np.ndarray
+    pods: List[PodState]
+    inflight: int = 0             # routed this arrival step (reset per step)
+    routed: int = 0               # queries routed here (incl. later failures)
+    capacity: int = 0             # static sum of pod decode slots
+    # refreshed once per step by HierarchicalRouter.mark_health:
+    any_healthy: bool = True
+    backlog_s: float = 0.0        # mean pod queue_s carried over from earlier
+
+    def __post_init__(self):
+        self.capacity = sum(p.slot_capacity for p in self.pods)
+
+    def ci_at(self, i: int) -> float:
+        return float(self.ci_trace[i % len(self.ci_trace)])
+
+
+# nominal per-pod power (W) for the region-stage carbon term: region choice
+# is an argmin over regions only, so any monotone-in-CI proxy works
+NOMINAL_POD_W = 30.0
+
+
+class HierarchicalRouter(FleetRouter):
+    """Region -> pod routing. Stage 1 scores every *region* from O(1)
+    aggregates (regional CI, this step's routed count vs static slot
+    capacity); stage 2 runs the full deadline-aware pod scoring only inside
+    the winning region. Per-query cost is O(R + P/R) instead of the flat
+    router's O(P) — the difference between 4 and 64+ pods."""
+
+    def __init__(self, regions: List[RegionState], **kw):
+        super().__init__([p for r in regions for p in r.pods], **kw)
+        self.regions = regions
+
+    def _region_score(self, r: RegionState, i: int,
+                      tier: Optional[QoSTier] = None) -> float:
+        carbon_rate = carbon_footprint(NOMINAL_POD_W, r.ci_at(i)) * 3600.0
+        # queue overflow drains across every decode slot in parallel, so the
+        # expected extra wait for a new arrival divides by slot capacity;
+        # backlog_s carries the pods' persisted queues from earlier steps so
+        # a region that ended the last step deep in work repels
+        # deadline-bound traffic exactly like the flat router's pod scoring
+        over = max(0, r.inflight - r.capacity)
+        wait = r.backlog_s + over * self.service_s / max(r.capacity, 1)
+        lw = tier.latency_weight if tier is not None else 1.0
+        score = carbon_rate + self.queue_weight * lw * wait
+        if tier is not None and tier.deadline_s is not None \
+                and wait > tier.deadline_s:
+            score += DEADLINE_MISS_PENALTY
+        return score
+
+    def mark_health(self):
+        """Per-step refresh (run_fleet calls this after the queue decay):
+        also rebuilds the O(1) region aggregates the route stage reads."""
+        super().mark_health()
+        for r in self.regions:
+            r.any_healthy = any(p.healthy for p in r.pods)
+            r.backlog_s = (sum(p.queue_s for p in r.pods) / len(r.pods)
+                           if r.pods else 0.0)
+
+    def route(self, i: int, tier: Optional[QoSTier] = None) -> PodState:
+        # the region stage honors health gating from its O(1) aggregate: a
+        # fully-degraded region is skipped while any other region still has
+        # a healthy pod (all-degraded fleets stay routable, like the flat
+        # router)
+        candidates = [r for r in self.regions if r.pods and r.any_healthy]
+        if not candidates:
+            candidates = [r for r in self.regions if r.pods]
+        region = min(candidates, key=lambda r: self._region_score(r, i, tier))
+        healthy = [p for p in region.pods if p.healthy] or region.pods
+        pod = min(healthy, key=lambda p: self._score(p, i, tier))
+        region.inflight += 1
+        region.routed += 1
+        return pod
+
+    def step_reset(self):
+        for r in self.regions:
+            r.inflight = 0
+
+
+@dataclasses.dataclass
+class Fleet:
+    """A built FleetSpec: regions + flat pod list + hierarchical router."""
+    spec: FleetSpec
+    regions: List[RegionState]
+    router: Optional[HierarchicalRouter] = None
+
+    def __post_init__(self):
+        if self.router is None:
+            self.router = HierarchicalRouter(self.regions)
+
+    @property
+    def pods(self) -> List[PodState]:
+        return [p for r in self.regions for p in r.pods]
+
+    def built_pods(self) -> List[PodState]:
+        """Pods whose engine was actually constructed (traffic reached them)."""
+        return [p for p in self.pods if p.client is not None]
+
+
+def build_fleet(spec: FleetSpec, *, catalog=None, selector=None,
+                policy=None, seed: int = 0) -> Fleet:
+    """Materialize a FleetSpec into live pods grouped by region.
+
+    Pods are built with cheap sim executors; the expensive engine backend is
+    constructed lazily per pod by `run_fleet(backend="engine")` when traffic
+    first reaches it. Sharded profiles degrade to unsharded when the process
+    lacks the forced host devices, so specs are portable."""
+    import jax
+
+    from repro.core.baselines import POLICIES
+    from repro.core.executor import PAPER_MODELS, SimExecutor
+    from repro.core.power import modes_for
+    from repro.core.tool_select import ToolSelector
+    from repro.data.workload import build_catalog
+
+    if catalog is None:
+        catalog = build_catalog(32, seed=seed)
+    if selector is None:
+        selector = ToolSelector(catalog)
+    if policy is None:
+        policy = POLICIES["carboncall"]
+    profiles = {p.name: p for p in spec.profiles}
+    n_devices = jax.device_count()
+    regions: List[RegionState] = []
+    pod_id = 0
+    for rs in spec.regions:
+        ci = ci_trace(rs.week, seed=seed + 100) * rs.ci_scale
+        pods: List[PodState] = []
+        for prof_name, count in rs.pods:
+            prof = profiles[prof_name]
+            for _ in range(count):
+                ex = SimExecutor(PAPER_MODELS["qwen2-7b"], prof.hw,
+                                 seed=pod_id)
+                rt = CarbonCallRuntime(
+                    selector=selector, executor=ex, policy=policy,
+                    modes=modes_for(prof.hw),
+                    catalog_size=len(catalog.tools), seed=pod_id)
+                kw = prof.engine_kw()
+                if kw.get("data_shards", 1) > n_devices:
+                    # degrade to unsharded, keeping the profile's own
+                    # declared layout (not the mesh-forced "dense")
+                    kw.pop("data_shards")
+                    if prof.kv_layout != "auto":
+                        kw["kv_layout"] = prof.kv_layout
+                    else:
+                        kw.pop("kv_layout", None)
+                pods.append(PodState(
+                    pod_id=pod_id, runtime=rt, ci_trace=ci,
+                    gov_state=rt.governor.init(ci[:144]),
+                    region=rs.name, profile=prof.name, engine_kw=kw))
+                pod_id += 1
+        regions.append(RegionState(name=rs.name, ci_trace=ci, pods=pods))
+    return Fleet(spec=spec, regions=regions)
+
+
+def _prepare_engine_backend(pods: List[PodState]) -> VirtualClock:
+    """Put every pod on ONE fleet-wide VirtualClock (cross-pod carbon
+    accounting needs one timeline, not N drifting ones) WITHOUT building
+    engines: sim-backed pods only record the clock for their lazy
+    `ensure_client`; pods already engine-backed are rewired onto the fleet
+    timeline up front (they are already paid for)."""
+    from repro.core.engine_executor import EngineExecutor
+
     clock = VirtualClock()
     for p in pods:
-        p.runtime.use_backend("engine", clock=clock)
-        ex = p.runtime.executor
-        if ex.clock is not clock:
-            # the pod was already engine-backed: use_backend kept its
-            # executor (and its private clock) — rewire it onto the fleet
-            # timeline so this run's rebasing governs every pod
-            clock.t = max(clock.t, ex.clock())
-            ex.clock = clock
-            ex.engine.clock = clock
-        p.client = ex.client
+        p.fleet_clock = clock
+        if isinstance(p.runtime.executor, EngineExecutor):
+            ex = p.runtime.executor
+            if ex.clock is not clock:
+                clock.t = max(clock.t, ex.clock())
+                ex.clock = clock
+                ex.engine.clock = clock
+            p.client = ex.client
     return clock
 
 
-def run_fleet(pods: List[PodState], workload: FunctionCallWorkload, *,
+def run_fleet(pods, workload: FunctionCallWorkload, *,
               n_steps: int, step_minutes: int = 10,
               queries_per_hour: float = 60.0, seed: int = 0,
-              backend: Optional[str] = None
+              backend: Optional[str] = None,
+              router: Optional[FleetRouter] = None,
+              rate_fn: Optional[Callable[[float], float]] = None
               ) -> Dict[int, List[QueryRecord]]:
+    """Drive a fleet (a `Fleet` or a plain pod list) for `n_steps` arrival
+    steps. With `backend="engine"` pods share one fleet-wide VirtualClock and
+    each pod's engine is constructed lazily on its first routed query.
+    `rate_fn(t_seconds) -> queries/hour` overrides the flat arrival rate
+    (e.g. `diurnal_qph`); None keeps the pre-existing constant-rate stream
+    bit-identical."""
+    if isinstance(pods, Fleet):
+        fleet, pods = pods, pods.pods
+        if router is None:
+            router = fleet.router
     clock: Optional[VirtualClock] = None
     if backend == "engine":
-        clock = _to_engine_backend(pods)
+        clock = _prepare_engine_backend(pods)
     elif backend is not None:
         for p in pods:
             p.runtime.use_backend(backend)
     rng = np.random.default_rng(seed)
-    router = FleetRouter(pods)
+    if router is None:
+        router = FleetRouter(pods)
     steps_per_day = 24 * 60 // step_minutes
     out: Dict[int, List[QueryRecord]] = {p.pod_id: [] for p in pods}
     lam = queries_per_hour * step_minutes / 60.0
@@ -186,9 +479,12 @@ def run_fleet(pods: List[PodState], workload: FunctionCallWorkload, *,
             p.queue_s = max(0.0, p.queue_s - step_minutes * 60.0)
         router.mark_health()
         batches: Dict[int, List[PendingQuery]] = {}
-        for q in range(rng.poisson(lam)):
+        lam_i = lam if rate_fn is None else \
+            max(0.0, rate_fn(t)) * step_minutes / 60.0
+        for q in range(rng.poisson(lam_i)):
             query = workload.sample()
             pod = router.route(i, query.tier)     # deadline-aware placement
+            pod.ensure_client()       # lazy engine build on first routed query
             pq = pod.runtime.submit_query(t + q, query, pod.ci_at(i),
                                           pod.gov_state)
             if getattr(pod.runtime.executor, "max_concurrency", 1) > 1:
@@ -211,4 +507,5 @@ def run_fleet(pods: List[PodState], workload: FunctionCallWorkload, *,
                     t_end = max(t_end, clock())
             if clock is not None:
                 clock.t = t_end
+        router.step_reset()
     return out

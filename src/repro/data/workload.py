@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 import random
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -114,6 +115,20 @@ def parse_qos_mix(spec: str) -> Tuple[QoSTier, ...]:
         parts.append((TIERS_BY_NAME[name], weight))
     total = sum(w for _, w in parts)
     return tuple(dataclasses.replace(t, share=w / total) for t, w in parts)
+
+
+def diurnal_qph(base_qph: float, t_s: float, *, peak: float = 1.6,
+                trough: float = 0.4) -> float:
+    """Diurnal arrival-rate modulation for fleet-scale runs: traffic swells
+    to `peak` x base in the afternoon (~15:00) and sags to `trough` x base
+    overnight — the pattern that makes lazy pod construction and regional
+    shedding worth having (a 64-pod fleet sized for the peak idles most of
+    its pods at night). Pass as `run_fleet(rate_fn=...)` via
+    ``functools.partial`` or a lambda over the base rate."""
+    hod = (t_s / 3600.0) % 24.0
+    # cosine day-curve: minimum at 03:00, maximum at 15:00
+    phase = (1.0 - math.cos(2.0 * math.pi * (hod - 3.0) / 24.0)) / 2.0
+    return base_qph * (trough + (peak - trough) * phase)
 
 
 @dataclasses.dataclass(frozen=True)

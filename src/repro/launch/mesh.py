@@ -11,10 +11,19 @@ import math
 import jax
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    """16x16 = one v5e pod (256 chips); 2x16x16 = two pods (512 chips)."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+def make_production_mesh(*, multi_pod: bool = False, shape=None, axes=None):
+    """16x16 = one v5e pod (256 chips); 2x16x16 = two pods (512 chips).
+
+    `shape`/`axes` override the production geometry (e.g. ``shape=(4, 2)`` on
+    8 forced host devices) so the same mesh-construction path — including the
+    too-few-devices error — is exercisable in CPU tests without 256 devices.
+    """
+    if shape is None:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+    if axes is None:
+        axes = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
+    if len(shape) != len(axes):
+        raise ValueError(f"mesh shape {shape} and axes {axes} disagree")
     n = math.prod(shape)
     devices = jax.devices()[:n]
     if len(devices) < n:
@@ -24,6 +33,21 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"does this automatically)")
     import numpy as np
     return jax.sharding.Mesh(np.array(devices).reshape(shape), axes)
+
+
+def make_data_mesh(n_data: int):
+    """Data-parallel serving mesh: `n_data` devices on the `data` axis (the
+    sharded engine splits its decode batch over it), `model` axis kept at
+    size 1 so the standard sharding rules resolve unchanged."""
+    n = max(int(n_data), 1)
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"data mesh needs {n} devices, have {len(devices)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    import numpy as np
+    return jax.sharding.Mesh(np.array(devices).reshape(n, 1),
+                             ("data", "model"))
 
 
 def make_host_mesh():

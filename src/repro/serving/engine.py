@@ -36,6 +36,19 @@ projections differ, so a post-swap admission recomputes (and re-caches) its
 prefix under the live weights instead of serving stale-variant KV/logits —
 and swapping back re-hits the previous variant's still-resident entries.
 
+Sharded execution: constructed with a `mesh` carrying a `data` axis, the
+engine runs data-parallel — the decode batch (and the dense KV stripe's
+batch dim) shards over the axis via NamedShardings resolved from the
+standard logical-axis rules (`cache_batch -> data`), with constraints
+re-anchored inside the jitted step so host-side slot bookkeeping between
+steps never fights the layout. Dense layout only (the paged block pool's
+host-side block tables are per-pod state); temperature-0 outputs are
+token-identical to the unsharded engine. On CPU this is exercised under
+`--xla_force_host_platform_device_count` (see tests/test_mesh_sharded.py
+and benchmarks/fleet_scale.py). Jitted executables live in a process-wide
+cache keyed by engine configuration, so a fleet of same-shape pods
+compiles each program once instead of per pod.
+
 Timebase: `clock` defaults to wall time, but tests and the engine-backed
 carbon simulation inject a `VirtualClock` plus a `step_cost_fn`; each step
 then advances virtual time by a deterministic, power-model-derived duration
@@ -62,6 +75,7 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.config import ModelConfig, RuntimeConfig
 from repro.models import get_model
@@ -70,7 +84,19 @@ from repro.serving.sampler import sample_tokens
 from repro.serving.scheduler import (
     CANCELLED, DONE, EngineStallError, RequestHandle, RUNNING, Scheduler,
     SessionRequest, TERMINAL, WAITING)
-from repro.sharding.param import init_params
+from repro.sharding.param import ParamDef, init_params
+from repro.sharding.rules import (SERVING_RULES, activate_mesh, activate_rules,
+                                  logical_sharding)
+
+# Process-wide executable cache. A fleet runs one engine per pod; pods with
+# the same (cfg, rcfg, layout, batch, seq, mesh) would otherwise each pay
+# their own jit compilation for identical programs — at 16-64 pods that
+# dominates start-up. Cached values are jits of `_EngineExec` methods:
+# `_EngineExec` holds only configuration-pure state (model = f(cfg), rcfg,
+# dims, mesh shardings — all reflected in the cache key), never params or
+# KV buffers, so the cache retains compiled programs, not engines. jax.jit's
+# own signature cache still handles per-shape retraces (prompt buckets).
+_SHARED_EXECS: Dict[tuple, Any] = {}
 
 
 @dataclasses.dataclass
@@ -131,12 +157,116 @@ def _pow2(n: int, cap: int) -> int:
     return min(p, cap)
 
 
+class _EngineExec:
+    """Configuration-pure jit bodies for one engine shape.
+
+    Holds ONLY what the jitted programs read — the model wrapper (a pure
+    function of cfg), rcfg, dims, and the mesh shardings — never params,
+    KV buffers or request state. `_SHARED_EXECS` caches jits of these
+    methods across engines, so a fleet of same-shape pods shares compiled
+    programs without the cache pinning whole engines in memory."""
+
+    def __init__(self, model, rcfg: RuntimeConfig, max_seq: int,
+                 block_size: int = 0, mesh=None, cache_shardings=None,
+                 tok_sharding=None, len_sharding=None):
+        self.model = model
+        self.rcfg = rcfg
+        self.max_seq = max_seq
+        self.block_size = block_size
+        self.mesh = mesh
+        self.cache_shardings = cache_shardings
+        self.tok_sharding = tok_sharding
+        self.len_sharding = len_sharding
+
+    def mesh_wrap(self, impl):
+        """Trace the impl under the engine's mesh so model-internal
+        `constrain` calls resolve against the serving rules."""
+        if self.mesh is None:
+            return impl
+
+        def wrapped(*args):
+            with activate_rules(SERVING_RULES), activate_mesh(self.mesh):
+                return impl(*args)
+        return wrapped
+
+    def decode_impl(self, params, cache, tokens, lengths):
+        if self.mesh is not None:
+            # re-anchor the batch-sharded layout INSIDE the program: host-side
+            # slot updates between steps can leave the cache committed to a
+            # replicated layout, and a constraint (unlike jit in_shardings)
+            # reshards instead of rejecting it
+            cache = jax.tree.map(jax.lax.with_sharding_constraint, cache,
+                                 self.cache_shardings)
+            tokens = jax.lax.with_sharding_constraint(tokens,
+                                                      self.tok_sharding)
+            lengths = jax.lax.with_sharding_constraint(lengths,
+                                                       self.len_sharding)
+        logits, cache = self.model.decode_step(params, cache, tokens, lengths,
+                                               self.rcfg)
+        return logits, cache
+
+    def decode_paged_impl(self, params, pool, tokens, lengths, block_tables):
+        return self.model.decode_step_paged(params, pool, tokens, lengths,
+                                            block_tables, self.rcfg,
+                                            seq_cap=self.max_seq)
+
+    def prefill_impl(self, params, batch):
+        if self.mesh is not None:
+            batch = {**batch, "tokens": jax.lax.with_sharding_constraint(
+                batch["tokens"], self.tok_sharding)}
+        B = batch["tokens"].shape[0]
+        cache_spec = self.model.cache_spec(self.rcfg, B, self.max_seq)
+        cache = init_params(cache_spec, jax.random.PRNGKey(0))
+        return self.model.prefill(params, cache, batch, self.rcfg)
+
+    def prefill_prefix_impl(self, params, pool, batch, prefix_bids,
+                            prefix_lens):
+        """Gather the cached prefix blocks into a dense per-row view and run
+        the suffix-only prefill against it."""
+        nbp = prefix_bids.shape[1]
+
+        def view(key):
+            g = pool[key][:, prefix_bids]        # (L, B, nbp, bs, ...)
+            return g.reshape(g.shape[0], g.shape[1], nbp * self.block_size,
+                             *g.shape[4:])
+
+        k_pre, v_pre = view("k"), view("v")
+        if "k_scale" in pool:
+            k_pre = (k_pre.astype(jnp.float32)
+                     * view("k_scale")[..., None]).astype(jnp.bfloat16)
+            v_pre = (v_pre.astype(jnp.float32)
+                     * view("v_scale")[..., None]).astype(jnp.bfloat16)
+        return self.model.prefill_paged(params, batch, k_pre, v_pre,
+                                        prefix_lens, self.rcfg)
+
+    def scatter_impl(self, pool, entry, dst, src_b, src_s):
+        """Write entry[key][:, src_b[i], src_s[i]] into flat pool position
+        dst[i] (= block_id * block_size + offset) for every i, per leaf."""
+        out = {}
+        for key, leaf in pool.items():
+            nb, bs = leaf.shape[1], leaf.shape[2]
+            flat = leaf.reshape(leaf.shape[0], nb * bs, *leaf.shape[3:])
+            vals = entry[key][:, src_b, src_s].astype(leaf.dtype)
+            out[key] = flat.at[:, dst].set(vals).reshape(leaf.shape)
+        return out
+
+    def scatter_kv_impl(self, pool, k, v, dst, src_b, src_s):
+        from repro.models.transformer import quantize_kv_for_cache
+        entry = quantize_kv_for_cache("k_scale" in pool, k, v)
+        return self.scatter_impl(pool, entry, dst, src_b, src_s)
+
+    def copy_block_impl(self, pool, dst, src):
+        return {key: leaf.at[:, dst].set(leaf[:, src])
+                for key, leaf in pool.items()}
+
+
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, rcfg: RuntimeConfig, *,
                  max_batch: int = 4, max_seq: int = 256,
                  prompt_buckets=(32, 64, 128),
                  kv_layout: str = "auto", block_size: int = 16,
                  num_blocks: Optional[int] = None,
+                 mesh=None,
                  clock: Callable[[], float] = time.monotonic,
                  step_cost_fn: Optional[Callable[[str, int, int], float]] = None):
         self.cfg = cfg
@@ -145,6 +275,32 @@ class ServingEngine:
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
+        # data-parallel sharded execution: with a mesh carrying a `data` axis
+        # the decode batch (and the dense KV stripe's batch dim) is sharded
+        # over it via NamedShardings resolved from the standard logical-axis
+        # rules — the multi-host scale-out path, exercisable on CPU under
+        # --xla_force_host_platform_device_count. Dense layout only: the
+        # paged block pool's host-side block tables are per-pod state.
+        self.mesh = mesh
+        self.data_shards = 1
+        if mesh is not None:
+            if "data" not in mesh.shape:
+                raise ValueError("sharded engine needs a mesh with a 'data' "
+                                 f"axis; got axes {tuple(mesh.shape)}")
+            if kv_layout not in ("auto", "dense"):
+                raise ValueError(
+                    f"kv_layout={kv_layout!r} under a mesh: the paged block "
+                    "pool is single-device per pod, so the sharded engine "
+                    "path requires 'dense' (or 'auto', which picks it)")
+            kv_layout = "dense"
+            if cfg.family in ("whisper", "vlm"):
+                raise ValueError(f"family {cfg.family!r} does not support the "
+                                 "sharded engine path")
+            self.data_shards = int(mesh.shape["data"])
+            if max_batch % self.data_shards != 0:
+                raise ValueError(
+                    f"max_batch={max_batch} must divide over the data axis "
+                    f"({self.data_shards} shards)")
         # always include a terminal bucket of max_seq: max_seq <= the smallest
         # configured bucket used to leave an empty tuple (IndexError at
         # admission), and prompts longer than the largest bucket were silently
@@ -203,18 +359,40 @@ class ServingEngine:
         self._rid_counter = 0
         self.key = jax.random.PRNGKey(42)
 
+        # sharded-path placement: NamedShardings resolved from the standard
+        # logical-axis rules (cache_batch -> data)
+        cache_shardings = tok_sharding = len_sharding = None
+        if self.mesh is not None:
+            cspec = self.model.cache_spec(rcfg, max_batch, max_seq)
+            cache_shardings = jax.tree.map(
+                lambda d: logical_sharding(d.logical, d.shape, self.mesh,
+                                           SERVING_RULES),
+                cspec, is_leaf=lambda x: isinstance(x, ParamDef))
+            tok_sharding = NamedSharding(self.mesh,
+                                         PartitionSpec("data", None))
+            len_sharding = NamedSharding(self.mesh, PartitionSpec("data"))
+        self._exec = _EngineExec(
+            self.model, rcfg, max_seq,
+            block_size=getattr(self, "block_size", 0), mesh=self.mesh,
+            cache_shardings=cache_shardings, tok_sharding=tok_sharding,
+            len_sharding=len_sharding)
         # per-variant executable caches: a hot swap flips the param tree
         # structure (bf16 arrays vs QTensor nodes), so each variant gets its
-        # own jitted decode/prefill and swapping back reuses the compilation
+        # own jitted decode/prefill and swapping back reuses the compilation.
+        # The per-engine dicts front the process-wide _SHARED_EXECS cache so
+        # same-shape fleet pods compile once.
         self._decode_fns: Dict[str, Any] = {}
         self._prefill_fns: Dict[str, Any] = {}
         self._prefill_prefix_fns: Dict[str, Any] = {}
-        self._scatter_cache_fn = jax.jit(self._scatter_impl,
-                                         donate_argnums=(0,))
-        self._scatter_kv_fn = jax.jit(self._scatter_kv_impl,
-                                      donate_argnums=(0,))
-        self._copy_block_fn = jax.jit(self._copy_block_impl,
-                                      donate_argnums=(0,))
+        self._scatter_cache_fn = self._shared_exec(
+            "scatter_cache",
+            lambda: jax.jit(self._exec.scatter_impl, donate_argnums=(0,)))
+        self._scatter_kv_fn = self._shared_exec(
+            "scatter_kv",
+            lambda: jax.jit(self._exec.scatter_kv_impl, donate_argnums=(0,)))
+        self._copy_block_fn = self._shared_exec(
+            "copy_block",
+            lambda: jax.jit(self._exec.copy_block_impl, donate_argnums=(0,)))
         # telemetry
         self.tokens_emitted = 0
         self.prefill_tokens_total = 0
@@ -222,84 +400,49 @@ class ServingEngine:
         self.peak_active = 0               # max concurrent resident sessions
         self.step_log: List[Dict] = []
 
-    # -- jitted bodies ------------------------------------------------------
+    def _exec_key(self, kind: str, *extra) -> tuple:
+        """Process-wide executable identity: everything the jitted impls read
+        off `self._exec` is either in this key or a pure function of it."""
+        return (self.cfg, self.rcfg, self.kv_layout, self.max_batch,
+                self.max_seq, getattr(self, "block_size", 0), self.mesh,
+                kind) + extra
 
-    def _decode_impl(self, params, cache, tokens, lengths):
-        logits, cache = self.model.decode_step(params, cache, tokens, lengths,
-                                               self.rcfg)
-        return logits, cache
-
-    def _decode_paged_impl(self, params, pool, tokens, lengths, block_tables):
-        return self.model.decode_step_paged(params, pool, tokens, lengths,
-                                            block_tables, self.rcfg,
-                                            seq_cap=self.max_seq)
-
-    def _prefill_impl(self, params, batch):
-        B = batch["tokens"].shape[0]
-        cache_spec = self.model.cache_spec(self.rcfg, B, self.max_seq)
-        cache = init_params(cache_spec, jax.random.PRNGKey(0))
-        return self.model.prefill(params, cache, batch, self.rcfg)
-
-    def _prefill_prefix_impl(self, params, pool, batch, prefix_bids,
-                             prefix_lens):
-        """Gather the cached prefix blocks into a dense per-row view and run
-        the suffix-only prefill against it."""
-        nbp = prefix_bids.shape[1]
-
-        def view(key):
-            g = pool[key][:, prefix_bids]        # (L, B, nbp, bs, ...)
-            return g.reshape(g.shape[0], g.shape[1], nbp * self.block_size,
-                             *g.shape[4:])
-
-        k_pre, v_pre = view("k"), view("v")
-        if "k_scale" in pool:
-            k_pre = (k_pre.astype(jnp.float32)
-                     * view("k_scale")[..., None]).astype(jnp.bfloat16)
-            v_pre = (v_pre.astype(jnp.float32)
-                     * view("v_scale")[..., None]).astype(jnp.bfloat16)
-        return self.model.prefill_paged(params, batch, k_pre, v_pre,
-                                        prefix_lens, self.rcfg)
-
-    def _scatter_impl(self, pool, entry, dst, src_b, src_s):
-        """Write entry[key][:, src_b[i], src_s[i]] into flat pool position
-        dst[i] (= block_id * block_size + offset) for every i, per leaf."""
-        out = {}
-        for key, leaf in pool.items():
-            nb, bs = leaf.shape[1], leaf.shape[2]
-            flat = leaf.reshape(leaf.shape[0], nb * bs, *leaf.shape[3:])
-            vals = entry[key][:, src_b, src_s].astype(leaf.dtype)
-            out[key] = flat.at[:, dst].set(vals).reshape(leaf.shape)
-        return out
-
-    def _scatter_kv_impl(self, pool, k, v, dst, src_b, src_s):
-        from repro.models.transformer import quantize_kv_for_cache
-        entry = quantize_kv_for_cache("k_scale" in pool, k, v)
-        return self._scatter_impl(pool, entry, dst, src_b, src_s)
-
-    def _copy_block_impl(self, pool, dst, src):
-        return {key: leaf.at[:, dst].set(leaf[:, src])
-                for key, leaf in pool.items()}
+    def _shared_exec(self, kind: str, build, *extra):
+        key = self._exec_key(kind, *extra)
+        fn = _SHARED_EXECS.get(key)
+        if fn is None:
+            fn = _SHARED_EXECS[key] = build()
+        return fn
 
     def _decode_fn(self):
         fn = self._decode_fns.get(self.variant_name)
         if fn is None:
-            impl = (self._decode_paged_impl if self.kv_layout == "paged"
-                    else self._decode_impl)
-            fn = jax.jit(impl, donate_argnums=(1,))
+            impl = (self._exec.decode_paged_impl if self.kv_layout == "paged"
+                    else self._exec.decode_impl)
+
+            def build():
+                return jax.jit(self._exec.mesh_wrap(impl),
+                               donate_argnums=(1,))
+            fn = self._shared_exec("decode", build, self.variant_name)
             self._decode_fns[self.variant_name] = fn
         return fn
 
     def _prefill_fn(self):
         fn = self._prefill_fns.get(self.variant_name)
         if fn is None:
-            fn = jax.jit(self._prefill_impl)
+            def build():
+                return jax.jit(self._exec.mesh_wrap(self._exec.prefill_impl))
+            fn = self._shared_exec("prefill", build, self.variant_name)
             self._prefill_fns[self.variant_name] = fn
         return fn
 
     def _prefill_prefix_fn(self):
         fn = self._prefill_prefix_fns.get(self.variant_name)
         if fn is None:
-            fn = jax.jit(self._prefill_prefix_impl)
+            fn = self._shared_exec(
+                "prefill_prefix",
+                lambda: jax.jit(self._exec.prefill_prefix_impl),
+                self.variant_name)
             self._prefill_prefix_fns[self.variant_name] = fn
         return fn
 

@@ -1,14 +1,17 @@
 """Fleet-scale behaviour: carbon-aware routing beats round-robin, health
-gating drains degraded pods."""
+gating drains degraded pods, FleetSpec topologies build lazily and route
+hierarchically."""
 import numpy as np
 import pytest
 
 from repro.common.hardware import TPU_V5E
 from repro.core import (POLICIES, SimExecutor, TPU_MODES, ToolSelector,
                         PAPER_MODELS, ci_trace)
-from repro.core.fleet import FleetRouter, PodState, run_fleet
+from repro.core.fleet import (FleetRouter, FleetSpec, PodState, RegionSpec,
+                              build_fleet, run_fleet)
 from repro.core.runtime import CarbonCallRuntime
-from repro.data.workload import build_catalog, FunctionCallWorkload
+from repro.data.workload import (QoSTier, build_catalog, diurnal_qph,
+                                 FunctionCallWorkload)
 
 
 @pytest.fixture(scope="module")
@@ -108,6 +111,121 @@ def test_router_skips_unhealthy_even_if_greenest(setup):
     pods[0].healthy = False
     router = FleetRouter(pods)
     assert router.route(0).pod_id == 1
+
+
+# ---------------------------------------------------------------------------
+# FleetSpec topology + hierarchical routing + lazy pod construction
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_spec_build(setup):
+    catalog, selector = setup
+    spec = FleetSpec(regions=(
+        RegionSpec("clean", week="week2", ci_scale=0.5,
+                   pods=(("edge", 1), ("pod-dp4", 1))),
+        RegionSpec("dirty", week="week1", pods=(("edge", 2),)),
+    ))
+    fleet = build_fleet(spec, catalog=catalog, selector=selector, seed=0)
+    assert spec.n_pods == 4 == len(fleet.pods)
+    assert [p.region for p in fleet.pods] == ["clean"] * 2 + ["dirty"] * 2
+    assert {r.name: len(r.pods) for r in fleet.regions} == \
+        {"clean": 2, "dirty": 2}
+    # the clean region's CI trace is scaled down
+    assert fleet.regions[0].ci_at(0) < fleet.regions[1].ci_at(0)
+    # single-device test process: the sharded profile degrades to unsharded
+    dp = next(p for p in fleet.pods if p.profile == "pod-dp4")
+    assert "data_shards" not in dp.engine_kw
+    assert fleet.router is not None and len(fleet.router.pods) == 4
+    assert fleet.built_pods() == []            # nothing constructed yet
+
+
+def test_hierarchical_router_region_then_pod(setup):
+    catalog, selector = setup
+    spec = FleetSpec(regions=(
+        RegionSpec("clean", week="week1", pods=(("edge", 2),)),
+        RegionSpec("dirty", week="week1", pods=(("edge", 2),)),
+    ))
+    fleet = build_fleet(spec, catalog=catalog, selector=selector, seed=0)
+    clean, dirty = fleet.regions
+    clean.ci_trace = np.full(288, 50.0)
+    dirty.ci_trace = np.full(288, 500.0)
+    router = fleet.router
+    # idle fleet: the region stage picks the clean grid
+    assert router.route(0).region == "clean"
+    assert clean.routed == 1 and clean.inflight == 1
+    # health gating reaches the region stage: a fully-degraded clean region
+    # is skipped while the dirty region still has healthy pods
+    for p in clean.pods:
+        p.healthy = False
+    clean.any_healthy = False
+    assert router.route(0).region == "dirty"
+    for p in clean.pods:
+        p.healthy = True
+    clean.any_healthy = True
+    # overload the clean region's slots: latency-weighted tiers spill to the
+    # dirty region (its predicted wait also blows interactive's deadline)
+    clean.inflight = clean.capacity + 10
+    interactive = QoSTier("interactive", priority=2, deadline_s=60.0,
+                          share=1.0, latency_weight=4.0)
+    assert router.route(0, interactive).region == "dirty"
+    # deadline-free batch traffic keeps chasing the low-carbon region
+    batch = QoSTier("batch", priority=0, deadline_s=None, share=1.0,
+                    latency_weight=0.001)
+    assert router.route(0, batch).region == "clean"
+    router.step_reset()
+    assert clean.inflight == 0 and dirty.inflight == 0
+    # persisted pod backlog from earlier steps (queue_s) also repels
+    # deadline-bound traffic at the region stage once the per-step
+    # aggregates are refreshed; a 100 s backlog blows interactive's 60 s
+    # budget but costs batch (weight 0.001) less than the carbon delta
+    for p in clean.pods:
+        p.queue_s = 100.0
+    router.mark_health()
+    assert clean.backlog_s == pytest.approx(100.0)
+    assert router.route(0, interactive).region == "dirty"
+    assert router.route(0, batch).region == "clean"    # batch still shrugs
+
+
+def test_engine_fleet_builds_pods_lazily(setup):
+    """`run_fleet(backend="engine")` must NOT construct engines for pods that
+    receive no traffic — a 64-pod topology stays cheap under light load."""
+    catalog, selector = setup
+    pods = _flat_ci_pods(selector, catalog, [100.0, 700.0])
+    recs = run_fleet(pods, FunctionCallWorkload(catalog, seed=5), n_steps=1,
+                     queries_per_hour=12.0, seed=1, backend="engine")
+    assert sum(len(rs) for rs in recs.values()) > 0
+    assert recs[1] == []                       # all traffic went green
+    assert pods[0].client is not None          # built on first routed query
+    assert pods[1].client is None              # untouched pod: never built
+    assert isinstance(pods[1].runtime.executor, SimExecutor)
+    # the untouched pod still joins the fleet timeline lazily if traffic
+    # arrives later: its recorded clock is the shared one
+    assert pods[1].fleet_clock is pods[0].runtime.executor.clock
+
+
+def test_diurnal_rate_shape_and_run_fleet_rate_fn(setup):
+    """`diurnal_qph` peaks mid-afternoon and troughs overnight, and
+    `run_fleet(rate_fn=...)` actually draws arrivals from it: a constant
+    rate_fn reproduces the flat-rate stream exactly, a zero rate_fn
+    produces none."""
+    base = 60.0
+    qphs = [diurnal_qph(base, h * 3600.0) for h in range(24)]
+    assert max(range(24), key=lambda h: qphs[h]) == 15    # 15:00 peak
+    assert min(range(24), key=lambda h: qphs[h]) == 3     # 03:00 trough
+    assert np.isclose(max(qphs), base * 1.6)
+    assert np.isclose(min(qphs), base * 0.4)
+
+    catalog, selector = setup
+    runs = {}
+    for name, kw in (("flat", {"queries_per_hour": base}),
+                     ("fn", {"rate_fn": lambda t: base}),
+                     ("off", {"rate_fn": lambda t: 0.0})):
+        pods = _pods(2, selector, catalog, ["week1", "week2"])
+        recs = run_fleet(pods, FunctionCallWorkload(catalog, seed=5),
+                         n_steps=3, seed=1, **kw)
+        runs[name] = [r.latency_s for rs in recs.values() for r in rs]
+    assert runs["fn"] == runs["flat"] and len(runs["flat"]) > 0
+    assert runs["off"] == []
 
 
 def test_queue_backlog_drains_over_steps(setup):

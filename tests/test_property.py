@@ -11,6 +11,8 @@ from hypothesis import given, settings, strategies as st
 from repro.core import CarbonGovernor, ORIN_MODES, carbon_footprint
 from repro.core.switching import VariantSwitcher
 from repro.quant import quantize, dequantize
+from repro.serving import Request, Scheduler
+from repro.serving.scheduler import EXPIRED, WAITING
 from repro.sharding.rules import resolve_spec
 from repro.train.compression import compress_roundtrip
 from jax.sharding import Mesh
@@ -120,6 +122,76 @@ def test_compression_error_feedback_bounded(seed):
     # error feedback: cumulative decompressed ~= cumulative true gradient
     rel = np.abs(total_dec - 8 * g).max() / (np.abs(8 * g).max() + 1e-9)
     assert rel < 0.05
+
+
+# -- scheduler ----------------------------------------------------------------
+
+
+@given(st.lists(st.tuples(st.integers(0, 3),
+                          st.one_of(st.none(), st.floats(0.0, 100.0))),
+                min_size=1, max_size=40))
+def test_scheduler_priority_then_edf_dequeue(entries):
+    """Whatever the submission order, requests dequeue by priority first and
+    earliest deadline inside each priority class (deadline-free requests
+    last, FIFO among themselves)."""
+    sched = Scheduler()
+    for rid, (prio, dl) in enumerate(entries):
+        sched.enqueue(Request(rid=rid, prompt=[1], priority=prio,
+                              deadline=dl), 0.0)
+    keys = []
+    while sched.has_waiting():
+        req = sched.head()
+        sched.note_admitted(req, 0.0)
+        dl = req.deadline if req.deadline is not None else float("inf")
+        keys.append((-req.priority, dl, req.seq))
+    assert len(keys) == len(entries)
+    assert keys == sorted(keys)
+
+
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 100)),
+                min_size=1, max_size=16),
+       st.integers(0, 4))
+def test_preemption_victim_strictly_lower_priority(active_specs, below):
+    """Admission preemption never selects an equal-or-higher-priority victim,
+    and among qualifying slots it picks the lowest priority, most recently
+    admitted on ties."""
+    active = []
+    for slot, (prio, aseq) in enumerate(active_specs):
+        r = Request(rid=slot, prompt=[1], priority=prio)
+        r.admit_seq = aseq
+        active.append((slot, r))
+    v = Scheduler.pick_victim(active, below=below)
+    qualifying = [(r.priority, -r.admit_seq, s) for s, r in active
+                  if r.priority < below]
+    if not qualifying:
+        assert v is None
+    else:
+        victim = active[v][1]
+        assert victim.priority < below
+        assert (victim.priority, -victim.admit_seq, v) == min(qualifying)
+
+
+@given(st.floats(0.1, 50.0), st.floats(0.0, 100.0), st.integers(1, 20))
+def test_expired_victim_never_decoded_again(deadline, now, n_tokens):
+    """A preempted victim whose requeue outlives its deadline expires with
+    its saved resume tokens dropped — it can never re-enter a decode slot."""
+    sched = Scheduler()
+    req = Request(rid=0, prompt=[1], deadline=deadline)
+    sched.enqueue(req, 0.0)
+    sched.note_admitted(req, 0.0)                       # runs...
+    req.resume_row = np.arange(n_tokens, dtype=np.int32)
+    sched.note_preempted(req)                           # ...then is evicted
+    sched.requeue(req, 0.0)
+    due = sched.expire_due(now)
+    if now > deadline:
+        assert due == [req] and req.status == EXPIRED
+        assert req.resume_row is None           # saved tokens dropped
+        assert req not in sched.waiting         # head() can never return it
+        assert sched.head() is None
+        assert sched.stats()["expired"] == 1
+    else:
+        assert due == [] and req.status == WAITING
+        assert req in sched.waiting
 
 
 # -- sharding resolver ----------------------------------------------------------

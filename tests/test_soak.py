@@ -1,0 +1,245 @@
+"""Deterministic randomized soak test for the serving engine.
+
+A seeded event-sequence generator drives hundreds of engine steps of mixed
+admission / cancellation / preemption (via a deliberately tight block pool) /
+deadline expiry / Q8<->Q4 hot swaps against TWO engines at once — one paged,
+one dense — fed identical request streams on identical virtual clocks.
+After draining, it asserts the invariants that must survive any interleaving:
+
+  * paged-vs-dense token parity for every request that completed in both
+    engines under the same per-token weight variants (temperature-0 streams
+    are layout-independent, including across preemption/resume; a hot swap
+    is a barrier only per engine, so a pair whose engines decoded the same
+    positions under different variants is legitimately divergent and is
+    excluded by comparing variant histories);
+  * block-pool refcounts reconcile exactly with the prefix cache's holdings
+    once all slots are free, and return to the empty-pool baseline after a
+    cache flush;
+  * `scheduler_stats()` counters reconcile with the engine `step_log`:
+    admissions equal logged prefill rows, every request's emitted-token
+    count equals its logged prefill+decode appearances, requeues equal
+    preemptions, and terminal statuses match the per-tier counters;
+  * an expired request holds no resume state (its saved tokens are dropped,
+    never decoded again).
+
+The default loop runs a 3-seed quick variant; the nightly `slow` job runs
+10 seeds x ~400 events.
+"""
+import collections
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig, RuntimeConfig
+from repro.models import get_model
+from repro.quant import quantize_tree
+from repro.serving import Request, ServingEngine, VirtualClock
+from repro.serving.scheduler import CANCELLED, DONE, EXPIRED, TERMINAL
+from repro.sharding.param import init_params
+
+CFG = ModelConfig(name="soak-tiny", family="transformer", num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                  vocab_size=256)
+RCFG = RuntimeConfig()
+MAX_BATCH = 3
+MAX_SEQ = 64
+BLOCK_SIZE = 8
+# deliberately tight: ~2 full sequences' worth of blocks, so admission and
+# decode growth hit the preemption/eviction paths constantly
+NUM_BLOCKS = 16
+
+# block-aligned shared prefixes so the prefix cache sees real hits
+PREFIXES = [[3 + i] * 16 for i in range(4)]
+TIER_BY_PRIORITY = {0: "batch", 1: "standard", 2: "interactive"}
+
+
+@pytest.fixture(scope="module")
+def variants():
+    model = get_model(CFG)
+    spec = model.param_spec()
+    params = init_params(spec, jax.random.PRNGKey(0))
+    return {"q8": quantize_tree(params, spec, "q8"),
+            "q4": quantize_tree(params, spec, "q4")}
+
+
+def _engine(variants, layout: str) -> ServingEngine:
+    kw = {"num_blocks": NUM_BLOCKS} if layout == "paged" else {}
+    eng = ServingEngine(CFG, variants["q8"], RCFG, max_batch=MAX_BATCH,
+                        max_seq=MAX_SEQ, kv_layout=layout,
+                        block_size=BLOCK_SIZE, clock=VirtualClock(), **kw)
+    eng.variant_name = "q8"
+    return eng
+
+
+class SoakDriver:
+    """Replays one seeded event stream against a paged and a dense engine."""
+
+    def __init__(self, variants, seed: int, n_events: int):
+        self.rng = np.random.default_rng(seed)
+        self.engines = {"paged": _engine(variants, "paged"),
+                        "dense": _engine(variants, "dense")}
+        self.variants = variants
+        self.variant = "q8"
+        self.pairs = []          # [{layout: Request}] in submission order
+        self.n_events = n_events
+
+    def _outstanding(self):
+        return [p for p in self.pairs
+                if any(r.status not in TERMINAL for r in p.values())]
+
+    def _submit(self):
+        rng = self.rng
+        base = PREFIXES[int(rng.integers(len(PREFIXES)))]
+        tail = (2 + rng.integers(0, 200, size=int(rng.integers(2, 8))))
+        prompt = list(base) + [int(t) for t in tail]
+        prio = int(rng.integers(0, 3))
+        rel_deadline = float(rng.uniform(3.0, 25.0)) \
+            if rng.random() < 0.3 else None
+        mnt = int(rng.integers(3, 9))
+        pair = {}
+        for name, eng in self.engines.items():
+            req = Request(
+                rid=eng.next_rid(), prompt=list(prompt), max_new_tokens=mnt,
+                eos_id=-1, temperature=0.0, priority=prio,
+                deadline=(None if rel_deadline is None
+                          else eng.clock() + rel_deadline),
+                tier=TIER_BY_PRIORITY[prio])
+            eng.submit(req)
+            pair[name] = req
+        self.pairs.append(pair)
+
+    def run(self):
+        for _ in range(self.n_events):
+            u = self.rng.random()
+            if u < 0.35 and len(self._outstanding()) < 8:
+                self._submit()
+            elif u < 0.75:
+                for eng in self.engines.values():
+                    eng.step()
+            elif u < 0.83:
+                out = self._outstanding()
+                if out:
+                    pair = out[int(self.rng.integers(len(out)))]
+                    for name, eng in self.engines.items():
+                        eng.cancel(pair[name])
+            elif u < 0.90:
+                self.variant = "q4" if self.variant == "q8" else "q8"
+                for eng in self.engines.values():
+                    eng.swap_params(self.variants[self.variant], self.variant)
+            else:
+                dt = float(self.rng.uniform(0.5, 3.0))
+                for eng in self.engines.values():
+                    eng.clock.advance(dt)
+        for eng in self.engines.values():
+            for _ in range(5000):
+                if not eng.has_work():
+                    break
+                eng.step()
+            assert not eng.has_work(), "soak engine failed to drain"
+
+
+def _check_engine(eng: ServingEngine, reqs):
+    """Counter/step_log reconciliation + (paged) refcount conservation."""
+    log = eng.step_log
+    assert eng.tokens_emitted == sum(s["tokens"] for s in log)
+    dec_count = collections.Counter()
+    fresh_count = collections.Counter()
+    for s in log:
+        if s["kind"] == "decode":
+            for r in s["rids"]:
+                dec_count[r] += 1
+        elif s["tokens"] > 0:            # fresh admissions emit one token;
+            for r in s["rids"]:          # resume re-prefills emit none
+                fresh_count[r] += 1
+    stats = eng.scheduler_stats()
+    # every admission (fresh or resume) appears as a logged prefill row
+    assert stats["admitted"] == sum(
+        len(s["rids"]) for s in log if s["kind"] == "prefill")
+    assert stats["requeues"] == stats["preemptions"]
+    assert stats["waiting"] == 0
+    by_status = collections.Counter(r.status for r in reqs)
+    assert stats["expired"] == by_status[EXPIRED]
+    assert stats["cancelled"] == by_status[CANCELLED]
+    tiers = stats["tiers"]
+    assert sum(t["submitted"] for t in tiers.values()) == len(reqs)
+    for key, status in (("done", DONE), ("expired", EXPIRED),
+                        ("cancelled", CANCELLED)):
+        assert sum(t[key] for t in tiers.values()) == by_status[status]
+    for req in reqs:
+        assert req.status in TERMINAL
+        assert fresh_count[req.rid] <= 1
+        # emitted tokens reconcile exactly with logged appearances
+        assert len(req.output) == fresh_count[req.rid] + dec_count[req.rid]
+        if req.status == EXPIRED:
+            # an expired victim's saved tokens are dropped, never decoded
+            assert req.resume_row is None
+
+    if eng.kv_layout == "paged":
+        pool = eng.block_pool
+        # all slots free -> every remaining reference is a prefix-cache hold
+        held = collections.Counter()
+        for e in eng.prefix_cache.entries.values():
+            for b in e.blocks:
+                held[b] += 1
+        for bid in range(pool.num_blocks):
+            assert pool.refcount[bid] == held.get(bid, 0), bid
+        eng.prefix_cache.clear()
+        assert pool.num_free == pool.num_blocks - 1     # all but scratch
+        assert (pool.refcount == 0).all()
+
+
+def _variant_history(eng: ServingEngine):
+    """Per-rid sequence of the weight variant each emitted token was computed
+    under (one entry per fresh-admission token + one per decode token)."""
+    hist = collections.defaultdict(list)
+    for s in eng.step_log:
+        if s["kind"] == "decode" or s["tokens"] > 0:
+            for r in s["rids"]:
+                hist[r].append(s["variant"])
+    return hist
+
+
+def _soak(variants, seed: int, n_events: int) -> dict:
+    driver = SoakDriver(variants, seed, n_events)
+    driver.run()
+    for name, eng in driver.engines.items():
+        _check_engine(eng, [p[name] for p in driver.pairs])
+    hists = {name: _variant_history(eng)
+             for name, eng in driver.engines.items()}
+    both_done = [p for p in driver.pairs
+                 if all(r.status == DONE for r in p.values())]
+    compared = 0
+    for p in both_done:
+        # parity holds whenever both engines computed every token position
+        # under the same weights — engine-local timing (deferred admissions,
+        # preemptions) around a hot swap legitimately diverges otherwise
+        if hists["paged"][p["paged"].rid] == hists["dense"][p["dense"].rid]:
+            assert p["paged"].output == p["dense"].output
+            compared += 1
+    return {
+        "pairs": len(driver.pairs),
+        "both_done": compared,
+        "preemptions":
+            driver.engines["paged"].scheduler_stats()["preemptions"],
+        "expired": driver.engines["paged"].scheduler_stats()["expired"],
+    }
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_soak_quick(variants, seed):
+    out = _soak(variants, seed, n_events=150)
+    assert out["pairs"] >= 10
+    assert out["both_done"] >= 3      # parity assertions actually ran
+
+
+@pytest.mark.slow
+def test_soak_nightly(variants):
+    totals = collections.Counter()
+    for seed in range(10):
+        out = _soak(variants, 100 + seed, n_events=400)
+        totals.update(out)
+    # across the seed set every hard path must have fired
+    assert totals["both_done"] >= 50
+    assert totals["preemptions"] >= 1
+    assert totals["expired"] >= 1
