@@ -83,6 +83,20 @@ _SCHEMAS: Dict[str, List[Tuple[str, str, Callable]]] = {
         ("acceptance_pass", INFO,
          lambda d: _get(d, "acceptance", "pass")),
     ],
+    "chunked_prefill": [
+        ("interactive_p95_s", LOWER,
+         lambda d: _get(d, "acceptance", "interactive_p95_s")),
+        ("decode_tps", HIGHER,
+         lambda d: _get(d, "chunked", "decode_tps")),
+        ("p95_speedup", INFO,
+         lambda d: _get(d, "acceptance", "p95_speedup")),
+        ("chunk_steps", INFO,
+         lambda d: _get(d, "chunked", "chunk_steps")),
+        ("stall_time_s", INFO,
+         lambda d: _get(d, "chunked", "stall_time_s")),
+        ("acceptance_pass", INFO,
+         lambda d: _get(d, "acceptance", "pass")),
+    ],
     "qos_fleet": [
         ("decode_tps", HIGHER,
          lambda d: _get(d, "pressure", "tiered", "decode_tps")),

@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
                          concurrent sessions, per-pod scheduler counters
   qos_fleet            — QoS tiers under pool pressure (deadline-hit/p95 vs
                          the priority-0 baseline) + deadline-aware routing
+  chunked_prefill      — chunked prefill vs monolithic admission: interactive
+                         p95 under a heavy-batch mix, decode-TPS parity gate
   fleet_scale          — sharded multi-host fleet scale-out: aggregate
                          decode TPS 4 vs 16 pods, regional carbon shedding,
                          data-parallel sharded pods (8 forced host devices)
@@ -39,10 +41,10 @@ def main() -> None:
                          "directory (CI benchmark-artifact mode)")
     args = ap.parse_args()
 
-    from benchmarks import (engine_week, fleet_engine, fleet_scale,
-                            kernels_bench, operating_modes, paged_engine,
-                            qos_fleet, roofline_table, tool_selection,
-                            variant_utilization, week_eval)
+    from benchmarks import (chunked_prefill, engine_week, fleet_engine,
+                            fleet_scale, kernels_bench, operating_modes,
+                            paged_engine, qos_fleet, roofline_table,
+                            tool_selection, variant_utilization, week_eval)
 
     if args.json_dir is not None:
         json_suites = {
@@ -51,6 +53,7 @@ def main() -> None:
             "fleet_engine": fleet_engine.json_summary,
             "qos_fleet": qos_fleet.json_summary,
             "fleet_scale": fleet_scale.json_summary,
+            "chunked_prefill": chunked_prefill.json_summary,
         }
         if args.only and args.only not in json_suites:
             raise SystemExit(
@@ -78,6 +81,7 @@ def main() -> None:
         "fleet_engine": fleet_engine.run,
         "qos_fleet": qos_fleet.run,
         "fleet_scale": fleet_scale.run,
+        "chunked_prefill": chunked_prefill.run,
         "roofline": roofline_table.run,
     }
     for name, fn in suites.items():

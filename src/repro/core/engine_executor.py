@@ -64,6 +64,7 @@ class EngineSession(QuerySession):
     submit_t: float = 0.0
     energy_j: float = 0.0          # attributed share of engine-step energy
     decode_t: float = 0.0          # engine decode time spent on this query
+    stall_t: float = 0.0           # resident time stalled by others' prefill
     # totals across attempts
     tot_lat: float = 0.0
     tot_en: float = 0.0
@@ -71,6 +72,7 @@ class EngineSession(QuerySession):
     tot_dec_t: float = 0.0
     tot_wait: float = 0.0
     tot_qwait: float = 0.0         # scheduler queue wait across attempts
+    tot_stall: float = 0.0         # prefill-stall time across attempts
     failed: int = 0
     expired: bool = False
 
@@ -83,6 +85,7 @@ class EngineExecutor:
                  max_batch: int = 2, max_seq: int = 256,
                  tokens_per_call: int = 8, eval_tokens: int = 4,
                  kv_layout: str = "auto", num_blocks: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
                  mesh=None, clock: Optional[VirtualClock] = None):
         self.profile = profile
         self.power_model = PowerModel(hw)
@@ -103,6 +106,7 @@ class EngineExecutor:
         self.engine = ServingEngine(self.cfg, self.variants["q8"], rcfg,
                                     max_batch=max_batch, max_seq=max_seq,
                                     kv_layout=kv_layout, num_blocks=num_blocks,
+                                    prefill_chunk=prefill_chunk,
                                     mesh=mesh, clock=self.clock,
                                     step_cost_fn=self._step_cost)
         self.engine.variant_name = "q8"
@@ -137,7 +141,7 @@ class EngineExecutor:
         multi-row admissions)."""
         pm, prof, mode = self.power_model, self.profile, self._mode
         shards = max(1, getattr(self.engine, "data_shards", 1))
-        if kind == "prefill":
+        if kind != "decode":     # "prefill" or a chunked "prefill_chunk"
             if tokens <= 0:
                 return 0.0       # full prefix-cache hit: prefill was skipped
             return pm.prefill_time(tokens, prof.n_active * 2, mode)
@@ -232,24 +236,45 @@ class EngineExecutor:
         s.submit_t = self.clock()
         s.energy_j = 0.0
         s.decode_t = 0.0
+        s.stall_t = 0.0
         self._rid_sessions[s.handle.rid] = s
 
     def _attribute_steps(self):
         """Split each new engine step across the sessions resident in it:
         full duration onto every resident session's decode clock, energy
-        divided evenly (a shared step is one power draw serving N users)."""
+        divided evenly (a shared step is one power draw serving N users).
+
+        A prefill-kind step (fresh admission, resume re-prefill, or a chunk
+        window) stalls every *already-resident* stream for its whole
+        duration — `rids` lists only the admitted/advanced requests, so
+        splitting over `rids` alone silently dropped the stalled residents'
+        share: their latency already ran through the step on the engine
+        clock, but their energy (and any stall telemetry) recorded zero.
+        `resident_rids` (slot occupancy at step start) closes the gap: the
+        stalled residents split the step's energy alongside its owners and
+        accrue it as `stall_t`."""
         pm = self.power_model
         for entry in self.engine.step_log[self._log_pos:]:
             rids = entry.get("rids") or []
             owners = [self._rid_sessions[r] for r in rids
                       if r in self._rid_sessions]
-            if not owners:
+            stalled = []
+            if entry["kind"] != "decode":
+                stalled = [self._rid_sessions[r]
+                           for r in entry.get("resident_rids") or []
+                           if r in self._rid_sessions and r not in rids]
+            payers = owners + stalled
+            if not payers:
                 continue
-            util = 0.95 if entry["kind"] == "prefill" else 0.70
-            e_share = entry["dt"] * pm.power(self._mode, util=util) / len(owners)
-            for s in owners:
+            util = 0.70 if entry["kind"] == "decode" else 0.95
+            e_share = (entry["dt"] * pm.power(self._mode, util=util)
+                       / len(payers))
+            for s in payers:
                 s.energy_j += e_share
-                if entry["kind"] == "decode":
+            for s in stalled:
+                s.stall_t += entry["dt"]
+            if entry["kind"] == "decode":
+                for s in owners:
                     s.decode_t += entry["dt"]
         self._log_pos = len(self.engine.step_log)
 
@@ -264,6 +289,7 @@ class EngineExecutor:
         en = SELECT_S * pm.power(s.mode, util=0.3)
         expired = req.status != "done"
         s.tot_qwait += req.queue_wait_s
+        s.tot_stall += s.stall_t
         if expired:
             # the deadline lapsed while the query waited (either never
             # admitted, or preempted and its requeue outlived the budget);
@@ -305,7 +331,8 @@ class EngineExecutor:
                 decode_tokens=s.tot_tok, decode_time_s=s.tot_dec_t,
                 exec_time_s=s.tot_lat - s.tot_wait,
                 failed_attempts=s.failed, succeeded=ok,
-                queue_wait_s=s.tot_qwait, expired=s.expired)
+                queue_wait_s=s.tot_qwait, expired=s.expired,
+                stall_s=s.tot_stall)
             return True
         return False
 

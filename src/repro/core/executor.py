@@ -58,6 +58,8 @@ class QueryExecution:
     succeeded: bool
     queue_wait_s: float = 0.0     # engine backend: total scheduler wait
     expired: bool = False         # engine backend: deadline lapsed waiting
+    stall_s: float = 0.0          # engine backend: resident time stalled
+                                  # behind other requests' prefill steps
 
     @property
     def tps(self) -> float:

@@ -73,6 +73,15 @@ class Model:
         return self.mod.prefill_paged(params, batch, prefix_k, prefix_v,
                                       prefix_lens, self.cfg, rcfg)
 
+    def prefill_chunk(self, params, batch, prefix_k, prefix_v, prefix_lens,
+                      rcfg: RuntimeConfig, *, need_logits: bool):
+        """One window of a chunked prefill over an already-prefilled prefix.
+        -> (logits (B,V) or None, window (k,v) (L,B,S_win,K,H)). With
+        need_logits=False (middle chunks) the unembed is skipped entirely."""
+        return self.mod.prefill_chunk(params, batch, prefix_k, prefix_v,
+                                      prefix_lens, self.cfg, rcfg,
+                                      need_logits=need_logits)
+
     def decode_step_paged(self, params, pool, tokens, lengths, block_tables,
                           rcfg: RuntimeConfig, *, seq_cap: int):
         """-> (logits (B,V), pool')."""

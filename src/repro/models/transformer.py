@@ -319,22 +319,13 @@ def prefill(params, cache, batch, cfg: ModelConfig, rcfg: RuntimeConfig):
     return logits, new_cache, lengths
 
 
-def prefill_paged(params, batch, prefix_k, prefix_v, prefix_lens,
-                  cfg: ModelConfig, rcfg: RuntimeConfig):
-    """Suffix prefill over a cached prompt prefix (paged prefix-cache hit).
-
-    batch["tokens"]: (B, S_suf) left-padded suffix rows — row b's real tokens
-    sit in the last (total - prefix_lens[b]) slots of the bucket-wide suffix.
-    batch["positions"]: (S_suf,) absolute positions, uniform across rows
-    (every row in an admission batch is padded to the same total length).
-    prefix_k/v: (L, B, P, K, H) prefix KV gathered (and dequantized) from the
-    block pool, valid where the absolute position is < prefix_lens[b].
-
-    Returns (last-position logits (B, V), suffix (k, v) stacks each
-    (L, B, S_suf, K, H) for the engine to scatter into the pool). Restricted
-    to pattern-1, non-M-RoPE families — the engine falls back to the dense
-    layout otherwise.
-    """
+def _prefill_window(params, batch, prefix_k, prefix_v, prefix_lens,
+                    cfg: ModelConfig, rcfg: RuntimeConfig, *,
+                    need_logits: bool):
+    """Shared body for `prefill_paged` / `prefill_chunk`: run a left-padded
+    token window over a cached (gathered) prefix, returning the window's KV
+    stacks and — only when `need_logits` — the last-position logits. Middle
+    chunks of a chunked prefill skip the unembed matmul entirely."""
     assert _pattern(cfg) == 1, "paged prefill: local/global patterns unsupported"
     assert not cfg.use_mrope, "paged prefill: M-RoPE unsupported"
     x = embed_tokens(params, batch, cfg)
@@ -367,9 +358,47 @@ def prefill_paged(params, batch, prefix_k, prefix_v, prefix_lens,
 
     x, (k_suf, v_suf) = jax.lax.scan(body, x,
                                      (params["layers"], prefix_k, prefix_v))
+    if not need_logits:
+        return None, (k_suf, v_suf)
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = unembed(params, x[:, -1:, :], cfg, rcfg)[:, 0]
     return logits, (k_suf, v_suf)
+
+
+def prefill_paged(params, batch, prefix_k, prefix_v, prefix_lens,
+                  cfg: ModelConfig, rcfg: RuntimeConfig):
+    """Suffix prefill over a cached prompt prefix (paged prefix-cache hit).
+
+    batch["tokens"]: (B, S_suf) left-padded suffix rows — row b's real tokens
+    sit in the last (total - prefix_lens[b]) slots of the bucket-wide suffix.
+    batch["positions"]: (S_suf,) absolute positions, uniform across rows
+    (every row in an admission batch is padded to the same total length).
+    prefix_k/v: (L, B, P, K, H) prefix KV gathered (and dequantized) from the
+    block pool, valid where the absolute position is < prefix_lens[b].
+
+    Returns (last-position logits (B, V), suffix (k, v) stacks each
+    (L, B, S_suf, K, H) for the engine to scatter into the pool). Restricted
+    to pattern-1, non-M-RoPE families — the engine falls back to the dense
+    layout otherwise.
+    """
+    return _prefill_window(params, batch, prefix_k, prefix_v, prefix_lens,
+                           cfg, rcfg, need_logits=True)
+
+
+def prefill_chunk(params, batch, prefix_k, prefix_v, prefix_lens,
+                  cfg: ModelConfig, rcfg: RuntimeConfig, *,
+                  need_logits: bool):
+    """One window of a chunked prefill: the tokens in `batch` extend a
+    partially-prefilled prompt whose first `prefix_lens[b]` positions already
+    sit in the block pool (the parked chain from earlier chunks — the same
+    shape as a prefix-cache hit, which is what makes chunking reuse the CoW
+    machinery unchanged). Numerically identical to running the same window
+    inside one monolithic `prefill_paged` call, so temperature-0 streams stay
+    token-identical chunked vs. unchunked. Middle windows pass
+    `need_logits=False` and get `(None, (k, v))` — only the final window pays
+    for the unembed."""
+    return _prefill_window(params, batch, prefix_k, prefix_v, prefix_lens,
+                           cfg, rcfg, need_logits=need_logits)
 
 
 def decode_step_paged(params, pool, tokens, lengths, block_tables,

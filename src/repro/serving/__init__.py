@@ -3,10 +3,12 @@ from repro.serving.engine import (EngineClient, Request, ServingEngine,
                                   VirtualClock)
 from repro.serving.sampler import sample_tokens
 from repro.serving.scheduler import (DeadlineExpiredError, EngineStallError,
+                                     PoolExhaustedError,
                                      RequestCancelledError, RequestHandle,
                                      Scheduler, SessionRequest)
 
 __all__ = ["BlockPool", "PrefixCache", "PrefixEntry", "ServingEngine",
            "EngineClient", "Request", "RequestHandle", "Scheduler",
            "SessionRequest", "VirtualClock", "EngineStallError",
-           "DeadlineExpiredError", "RequestCancelledError", "sample_tokens"]
+           "PoolExhaustedError", "DeadlineExpiredError",
+           "RequestCancelledError", "sample_tokens"]

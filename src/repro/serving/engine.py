@@ -65,6 +65,19 @@ are saved, and it re-enters the queue; on resume the engine re-prefills the
 saved sequence at its exact original positions (right-padded to a power-of-two
 width, so causality makes the padding numerically invisible), which keeps
 temperature-0 token streams identical to an unpreempted run.
+
+Chunked prefill (`prefill_chunk=N`): a long prompt no longer monopolizes a
+step. The queue head's prefill is split into N-token windows, one per engine
+step, and `step()` alternates pending prefill work with a decode step for the
+residents — so interactive decode streams keep emitting while a batch prompt
+admits incrementally. A partial prefill is parked in the refcounted block
+pool through the existing prefix-cache machinery (a half-prefilled chain IS a
+cached prefix that the next chunk extends — the same block-handoff idiom
+planned for prefill/decode disaggregation); the dense layout parks progress
+in a reserved slot stripe instead. Each window resumes at its exact
+positions, so temperature-0 streams are token-identical to an unchunked run.
+Non-final windows are logged as kind "prefill_chunk" (0 tokens emitted); the
+final window admits the request and is logged as a normal "prefill" row.
 """
 from __future__ import annotations
 
@@ -82,8 +95,8 @@ from repro.models import get_model
 from repro.serving.block_pool import BlockPool, PrefixCache
 from repro.serving.sampler import sample_tokens
 from repro.serving.scheduler import (
-    CANCELLED, DONE, EngineStallError, RequestHandle, RUNNING, Scheduler,
-    SessionRequest, TERMINAL, WAITING)
+    CANCELLED, DONE, EngineStallError, PoolExhaustedError, RequestHandle,
+    RUNNING, Scheduler, SessionRequest, TERMINAL, WAITING)
 from repro.sharding.param import ParamDef, init_params
 from repro.sharding.rules import (SERVING_RULES, activate_mesh, activate_rules,
                                   logical_sharding)
@@ -121,6 +134,16 @@ class Request:
     admit_seq: int = -1                    # admission order (victim tie-break)
     # saved token sequence (exact KV positions 0..len-1) while preempted
     resume_row: Optional[np.ndarray] = None
+    # chunked-prefill progress while WAITING (cleared on admission/release):
+    # the bucket-padded prompt row, how many positions are already prefilled,
+    # and where that partial KV lives — a parked block chain (paged) or a
+    # reserved slot stripe (dense)
+    chunk_row: Optional[np.ndarray] = None
+    chunk_done: int = 0
+    chunk_blocks: List[int] = dataclasses.field(default_factory=list)
+    chunk_cached: int = 0                  # real prompt tokens served from cache
+    chunk_hit: bool = False
+    chunk_slot: Optional[int] = None       # dense: reserved slot index
 
 
 class VirtualClock:
@@ -219,10 +242,8 @@ class _EngineExec:
         cache = init_params(cache_spec, jax.random.PRNGKey(0))
         return self.model.prefill(params, cache, batch, self.rcfg)
 
-    def prefill_prefix_impl(self, params, pool, batch, prefix_bids,
-                            prefix_lens):
-        """Gather the cached prefix blocks into a dense per-row view and run
-        the suffix-only prefill against it."""
+    def _gather_prefix(self, pool, prefix_bids):
+        """Gather cached prefix blocks into a dense per-row (k, v) view."""
         nbp = prefix_bids.shape[1]
 
         def view(key):
@@ -236,8 +257,43 @@ class _EngineExec:
                      * view("k_scale")[..., None]).astype(jnp.bfloat16)
             v_pre = (v_pre.astype(jnp.float32)
                      * view("v_scale")[..., None]).astype(jnp.bfloat16)
+        return k_pre, v_pre
+
+    def prefill_prefix_impl(self, params, pool, batch, prefix_bids,
+                            prefix_lens):
+        """Gather the cached prefix blocks into a dense per-row view and run
+        the suffix-only prefill against it."""
+        k_pre, v_pre = self._gather_prefix(pool, prefix_bids)
         return self.model.prefill_paged(params, batch, k_pre, v_pre,
                                         prefix_lens, self.rcfg)
+
+    def prefill_chunk_impl(self, params, pool, batch, prefix_bids,
+                           prefix_lens, need_logits):
+        """One chunked-prefill window against the parked block chain (the
+        already-prefilled positions of the same prompt). `need_logits` is
+        static: middle windows skip the unembed entirely."""
+        k_pre, v_pre = self._gather_prefix(pool, prefix_bids)
+        return self.model.prefill_chunk(params, batch, k_pre, v_pre,
+                                        prefix_lens, self.rcfg,
+                                        need_logits=need_logits)
+
+    def prefill_dense_chunk_impl(self, params, cache, batch, prefix_lens,
+                                 p_len, need_logits):
+        """One chunked-prefill window against a dense slot stripe: the
+        already-prefilled positions live in `cache[:, :, :p_len]` (`p_len`
+        static, pow2-rounded by the caller to bound executable counts)."""
+        k_pre = cache["k"][:, :, :p_len]
+        v_pre = cache["v"][:, :, :p_len]
+        if "k_scale" in cache:
+            k_pre = (k_pre.astype(jnp.float32)
+                     * cache["k_scale"][:, :, :p_len][..., None]
+                     ).astype(jnp.bfloat16)
+            v_pre = (v_pre.astype(jnp.float32)
+                     * cache["v_scale"][:, :, :p_len][..., None]
+                     ).astype(jnp.bfloat16)
+        return self.model.prefill_chunk(params, batch, k_pre, v_pre,
+                                        prefix_lens, self.rcfg,
+                                        need_logits=need_logits)
 
     def scatter_impl(self, pool, entry, dst, src_b, src_s):
         """Write entry[key][:, src_b[i], src_s[i]] into flat pool position
@@ -266,6 +322,7 @@ class ServingEngine:
                  prompt_buckets=(32, 64, 128),
                  kv_layout: str = "auto", block_size: int = 16,
                  num_blocks: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
                  mesh=None,
                  clock: Callable[[], float] = time.monotonic,
                  step_cost_fn: Optional[Callable[[str, int, int], float]] = None):
@@ -349,6 +406,30 @@ class ServingEngine:
             cache_spec = self.model.cache_spec(rcfg, max_batch, max_seq)
             self.cache = init_params(cache_spec, jax.random.PRNGKey(0))
             self.lengths = jnp.zeros((max_batch,), jnp.int32)
+        # chunked prefill: split a long prompt's admission into
+        # `prefill_chunk`-token windows, one per step, interleaved with
+        # decode steps for the residents (None = monolithic prefill)
+        if prefill_chunk is not None:
+            if mesh is not None:
+                raise ValueError(
+                    "prefill_chunk: chunk progress is per-pod host-side "
+                    "state, unsupported on the sharded engine path")
+            if prefill_chunk <= 0:
+                raise ValueError(
+                    f"prefill_chunk must be positive, got {prefill_chunk}")
+            if not self.model.supports_paged():
+                raise ValueError(
+                    f"{cfg.name}: family {cfg.family!r} does not implement "
+                    "the chunked prefill contract (pattern-1 transformer "
+                    "families only)")
+            if self.kv_layout == "paged":
+                # block-aligned windows keep parked chains on block
+                # boundaries, so partial inserts reuse the prefix cache's
+                # chunk_lens keying unchanged
+                prefill_chunk = -(-prefill_chunk // block_size) * block_size
+        self.prefill_chunk = prefill_chunk
+        self._prefer_prefill = True      # alternation flag: prefill <-> decode
+        self._chunk_slots: set = set()   # dense: slots reserved by parked chunks
         self.slots: List[Optional[Request]] = [None] * max_batch
         # the admitted token row + emitted-count baseline per slot: together
         # they reconstruct the exact KV sequence when a slot is preempted
@@ -384,6 +465,8 @@ class ServingEngine:
         self._decode_fns: Dict[str, Any] = {}
         self._prefill_fns: Dict[str, Any] = {}
         self._prefill_prefix_fns: Dict[str, Any] = {}
+        self._prefill_chunk_fns: Dict[str, Any] = {}
+        self._dense_chunk_fns: Dict[str, Any] = {}
         self._scatter_cache_fn = self._shared_exec(
             "scatter_cache",
             lambda: jax.jit(self._exec.scatter_impl, donate_argnums=(0,)))
@@ -446,6 +529,28 @@ class ServingEngine:
             self._prefill_prefix_fns[self.variant_name] = fn
         return fn
 
+    def _prefill_chunk_fn(self):
+        fn = self._prefill_chunk_fns.get(self.variant_name)
+        if fn is None:
+            fn = self._shared_exec(
+                "prefill_chunk",
+                lambda: jax.jit(self._exec.prefill_chunk_impl,
+                                static_argnums=(5,)),
+                self.variant_name)
+            self._prefill_chunk_fns[self.variant_name] = fn
+        return fn
+
+    def _dense_chunk_fn(self):
+        fn = self._dense_chunk_fns.get(self.variant_name)
+        if fn is None:
+            fn = self._shared_exec(
+                "prefill_dense_chunk",
+                lambda: jax.jit(self._exec.prefill_dense_chunk_impl,
+                                static_argnums=(4, 5)),
+                self.variant_name)
+            self._dense_chunk_fns[self.variant_name] = fn
+        return fn
+
     # -- public API ---------------------------------------------------------
 
     def swap_params(self, params, variant_name: str):
@@ -453,6 +558,12 @@ class ServingEngine:
         self.params = params
         self.variant_name = variant_name
         self.swap_count += 1
+        # drop parked partial prefills: their KV was computed under the old
+        # weights, and restarting under the live variant keeps every admitted
+        # prefill single-variant (the parity guarantee chunking preserves)
+        for req in self.scheduler.waiting:
+            if req.chunk_row is not None:
+                self._release_chunk(req)
 
     def submit(self, req: Request) -> RequestHandle:
         """Queue a request; returns an async handle (poll/result/cancel)."""
@@ -474,6 +585,7 @@ class ServingEngine:
             return False
         if req.status == WAITING:
             self.scheduler.remove(req)
+            self._release_chunk(req)
         elif req in self.slots:
             self._free_slot(self.slots.index(req))
         req.status = CANCELLED
@@ -512,43 +624,57 @@ class ServingEngine:
                 "prefill_tokens_saved": self.prefill_tokens_saved}
 
     def step(self) -> List[Request]:
-        """Admit waiting requests into free slots (one batched prefill, or one
-        preemption-resume re-prefill) or run one batched decode step. Returns
-        requests completed this step."""
+        """Admit waiting requests into free slots (one batched prefill, one
+        preemption-resume re-prefill, or — with `prefill_chunk` — one prefill
+        window) or run one batched decode step. With chunking enabled the
+        step alternates pending prefill work with a decode step for the
+        residents, so a long prompt admits incrementally instead of stalling
+        every resident stream at once. Returns requests completed this step."""
         t0 = self.clock()
-        self.scheduler.expire_due(t0)
+        # who was resident when the step started: prefill-kind steps stall
+        # exactly these streams, and the executor charges them the step's
+        # dt/energy share (see EngineExecutor._attribute_steps)
+        resident_rids = [s.rid for s in self.slots if s is not None]
+        for req in self.scheduler.expire_due(t0):
+            self._release_chunk(req)
         completed: List[Request] = []
-        free = [i for i, s in enumerate(self.slots) if s is None]
-        admitted: List[Request] = []
-        charged = cached = 0
-        resumed = False
-        head = self.scheduler.head()
-        if head is not None and free:
-            if head.resume_row is not None:
-                # strict priority: a blocked resume never lets lower-priority
-                # fresh admissions jump it — decode continues instead
-                got = self._try_resume(head, free[0])
-                if got >= 0:
-                    admitted, charged, resumed = [head], got, True
-            else:
-                admitted, charged, cached = self._admit_batch(free)
-        rids: List[int] = []
-        if admitted:
-            # one sampled token per fresh admission; a resume re-prefills
-            # already-emitted context and samples nothing new
-            tokens_this_step = 0 if resumed else len(admitted)
-            occupancy = self.active              # includes the new slots
-            kind = "prefill"
-            rids = [r.rid for r in admitted]
+        work: Optional[Dict] = None
+        if self.prefill_chunk is None or self._prefer_prefill \
+                or not self.active:
+            work = self._prefill_work()
+        if work is None and not self.active \
+                and self.prefill_chunk is not None:
+            # liveness fallback: the head is blocked (e.g. its final chunk
+            # needs a slot another parked dense chunk reserves) and nothing
+            # can decode — advance the first parked chunk so reserved slots
+            # drain. A bounded priority inversion, traded for progress.
+            head = self.scheduler.head()
+            for req in self.scheduler.waiting:
+                if req is not head and req.chunk_row is not None:
+                    work = self._chunk_step(req, self._free_slots())
+                    if work is not None:
+                        break
+        if work is not None:
+            kind = work["kind"]
+            tokens_this_step = work["tokens"]
+            charged, cached = work["charged"], work["cached"]
+            rids = work["rids"]
+            occupancy = max(self.active, 1)      # includes any new slots
+            self._prefer_prefill = False
         elif self.active:
+            charged = cached = 0
             tokens_this_step, rids = self._decode_active(completed)
             occupancy = max(len(rids), 1)        # before completions free slots
             kind = "decode"
+            self._prefer_prefill = True
         else:
             if self.scheduler.has_waiting():
-                raise RuntimeError(
+                raise PoolExhaustedError(
                     "paged KV pool exhausted: cannot admit any pending "
-                    "request with an idle engine — raise num_blocks")
+                    "request with an idle engine — raise num_blocks",
+                    waiting=len(self.pending),
+                    free_blocks=(self.block_pool.num_free
+                                 if self.kv_layout == "paged" else 0))
             return completed
         self.peak_active = max(self.peak_active, self.active, occupancy)
         if self.step_cost_fn is not None and hasattr(self.clock, "advance"):
@@ -558,7 +684,7 @@ class ServingEngine:
             # is charged its full re-prefilled sequence (preemption is not
             # free, which is exactly why the scheduler only uses it under
             # real pool pressure)
-            cost_tokens = charged if kind == "prefill" else tokens_this_step
+            cost_tokens = charged if kind != "decode" else tokens_this_step
             cost = float(self.step_cost_fn(kind, cost_tokens, occupancy))
             if cost > 0.0:
                 self.clock.advance(cost)
@@ -572,6 +698,7 @@ class ServingEngine:
             "tps": tokens_this_step / dt, "variant": self.variant_name,
             "active": occupancy, "prompt_tokens": charged,
             "cached_tokens": cached, "rids": rids,
+            "resident_rids": resident_rids,
         })
         return completed
 
@@ -589,13 +716,81 @@ class ServingEngine:
 
     # -- admission ----------------------------------------------------------
 
+    def _free_slots(self) -> List[int]:
+        """Slots available for fresh admission — excludes slots a parked
+        dense chunk has reserved for its in-progress stripe."""
+        return [i for i, s in enumerate(self.slots)
+                if s is None and i not in self._chunk_slots]
+
+    def _prefill_work(self) -> Optional[Dict]:
+        """One unit of pending prefill work for the queue head — a resume
+        re-prefill, a chunk window, or a batched fresh admission. Returns the
+        step-log record for it, or None when nothing can run (the step
+        decodes instead)."""
+        head = self.scheduler.head()
+        if head is None:
+            return None
+        free = self._free_slots()
+        if head.resume_row is not None:
+            # strict priority: a blocked resume never lets lower-priority
+            # fresh admissions jump it — decode continues instead
+            if not free:
+                return None
+            got = self._try_resume(head, free[0])
+            if got < 0:
+                return None
+            # a resume re-prefills already-emitted context, samples nothing
+            return {"kind": "prefill", "tokens": 0, "charged": got,
+                    "cached": 0, "rids": [head.rid]}
+        if self._chunk_needed(head):
+            return self._chunk_step(head, free)
+        if not free:
+            return None
+        admitted, charged, cached = self._admit_batch(free)
+        if not admitted:
+            return None
+        return {"kind": "prefill", "tokens": len(admitted),
+                "charged": charged, "cached": cached,
+                "rids": [r.rid for r in admitted]}
+
+    def _chunk_needed(self, req: Request) -> bool:
+        """Whether `req` admits through the chunked path: chunking enabled,
+        and the prompt's *non-cached* prefill work exceeds one window."""
+        if self.prefill_chunk is None or req.resume_row is not None:
+            return False
+        if req.chunk_row is not None:
+            return True                  # mid-chunk: must finish via chunks
+        b = _bucket(len(req.prompt), self.prompt_buckets)
+        if b <= self.prefill_chunk:
+            return False
+        if self.kv_layout != "paged":
+            return True
+        row = self._padded_row(req.prompt, b)
+        hit = self.prefix_cache.lookup(row, salt=self.variant_name)
+        cached = hit.cached_len if hit else 0
+        if cached >= b:
+            return False                 # whole-row hit: one cheap admission
+        return b - cached > self.prefill_chunk
+
+    def _chunk_step(self, req: Request, free: List[int]) -> Optional[Dict]:
+        if self.kv_layout == "paged":
+            return self._chunk_step_paged(req, free)
+        return self._chunk_step_dense(req, free)
+
     def _admit_batch(self, free: List[int]):
         """Batched admission: fill free slots this step. Returns
         (admitted requests, prompt tokens charged, prompt tokens cached)."""
         if self.kv_layout == "paged":
             return self._admit_batch_paged(free)
-        waiting = self.scheduler.waiting
-        reqs = waiting[:min(len(free), len(waiting))]
+        reqs: List[Request] = []
+        for req in self.scheduler.waiting:
+            if self._chunk_needed(req):
+                break       # chunked admissions run one window per step
+            reqs.append(req)
+            if len(reqs) == len(free):
+                break
+        if not reqs:
+            return [], 0, 0
         now = self.clock()
         for req in reqs:
             self.scheduler.note_admitted(req, now)
@@ -640,8 +835,9 @@ class ServingEngine:
         bs = self.block_size
         cand: List[Request] = []
         for req in self.scheduler.waiting:
-            if req.resume_row is not None:
-                break               # resumes are re-admitted one per step
+            if req.resume_row is not None or self._chunk_needed(req):
+                break               # resumes and chunked prefills are
+                                    # re-admitted/advanced one per step
             cand.append(req)
             if len(cand) == len(free):
                 break
@@ -729,14 +925,256 @@ class ServingEngine:
         self.prefill_tokens_saved += cached
         return [r["req"] for r in rows], charged, cached
 
+    # -- chunked prefill -----------------------------------------------------
+
+    def _chunk_init(self, req: Request):
+        """First window of a chunked prefill: bucket the prompt and (paged)
+        adopt the longest cached prefix chain — the request holds one ref per
+        block, exactly like an admission, so eviction cannot free the chain
+        while it is being extended."""
+        b = _bucket(len(req.prompt), self.prompt_buckets)
+        row = self._padded_row(req.prompt, b)
+        cached_len = 0
+        if self.kv_layout == "paged":
+            hit = self.prefix_cache.lookup(row, salt=self.variant_name)
+            if hit is not None:
+                cached_len = hit.cached_len
+                for bid in hit.blocks:
+                    self.block_pool.incref(bid)
+                req.chunk_blocks = list(hit.blocks)
+        pad = b - min(len(req.prompt), b)
+        req.chunk_row = row
+        req.chunk_done = cached_len
+        req.chunk_cached = max(0, cached_len - pad)
+        req.chunk_hit = cached_len > 0
+
+    def _chunk_window(self, req: Request, start: int, end: int,
+                      final: bool):
+        """Run one prefill window [start, end) for the parked chain (paged).
+        Returns last-position logits (only meaningful when `final`)."""
+        bs = self.block_size
+        row = req.chunk_row
+        b = len(row)
+        nwin = end - start
+        if start == 0:
+            # cold first window: nothing parked to attend — reuse the stock
+            # full prefill over a right-padded pow2 row (causality makes the
+            # padding invisible) and scatter positions [0, end). Never final:
+            # `_chunk_needed` guarantees the first window cannot cover the
+            # whole bucket, so no logits are needed here.
+            W = _pow2(end, self.max_seq)
+            toks = np.zeros((self.max_batch, W), np.int32)
+            toks[0, :end] = row[:end]
+            _, cache_n, _ = self._prefill_fn()(self.params,
+                                               self._prefill_batch(toks))
+            dst = [req.chunk_blocks[p // bs] * bs + p % bs
+                   for p in range(end)]
+            self.pool = self._scatter_cache_fn(
+                self.pool, cache_n,
+                *self._scatter_idx(dst, [0] * end, list(range(end))))
+            return None
+        # middle/final window: the parked chain is the "cached prefix", the
+        # window is a left-padded suffix at its exact absolute positions —
+        # the same shape as a prefix-cache-hit admission, so the rounding
+        # tricks (pow2 window width / prefix block count) carry over and the
+        # result is bit-identical to the same positions inside one
+        # monolithic prefill
+        W = _pow2(nwin, b)
+        nbp = _pow2(-(-start // bs), self.blocks_per_slot)
+        toks = np.zeros((self.max_batch, W), np.int32)
+        toks[0, W - nwin:] = row[start:end]
+        bids = np.zeros((self.max_batch, nbp), np.int32)
+        bids[0, :start // bs] = req.chunk_blocks[:start // bs]
+        plens = np.zeros((self.max_batch,), np.int32)
+        plens[0] = start
+        batch = self._prefill_batch(toks)
+        batch["positions"] = jnp.arange(end - W, end, dtype=jnp.int32)
+        logits, (k_win, v_win) = self._prefill_chunk_fn()(
+            self.params, self.pool, batch, jnp.asarray(bids),
+            jnp.asarray(plens), final)
+        dst = [req.chunk_blocks[p // bs] * bs + p % bs
+               for p in range(start, end)]
+        src_s = [p - (end - W) for p in range(start, end)]
+        self.pool = self._scatter_kv_fn(
+            self.pool, k_win, v_win,
+            *self._scatter_idx(dst, [0] * nwin, src_s))
+        return logits
+
+    def _chunk_step_paged(self, req: Request,
+                          free: List[int]) -> Optional[Dict]:
+        bs = self.block_size
+        if req.chunk_row is None:
+            self._chunk_init(req)
+        row = req.chunk_row
+        b = len(row)
+        start = req.chunk_done
+        end = min(start + self.prefill_chunk, b)
+        final = end >= b
+        if final and not free:
+            return None                  # the final window needs a slot
+        need = -(-end // bs) - len(req.chunk_blocks)
+        if need > 0:
+            if not self._reclaim(need + self.active + 1,
+                                 priority=req.priority, exclude=req):
+                return None              # parked state persists; retry later
+            fresh = self._alloc_blocks(need)
+            if fresh is None:            # unreachable after _reclaim
+                return None
+            req.chunk_blocks.extend(fresh)
+        logits = self._chunk_window(req, start, end, final)
+        req.chunk_done = end
+        pad = b - min(len(req.prompt), b)
+        charged = max(0, end - max(start, pad))
+        self.prefill_tokens_total += charged
+        if not final:
+            # park the progress as ordinary prefix-cache entries: pinned by
+            # the request's refs while it extends them, CoW-shareable by
+            # concurrent admissions of the same prefix, and plain evictable
+            # cache if the chunk is dropped
+            self.prefix_cache.insert(row[:end], req.chunk_blocks,
+                                     salt=self.variant_name)
+            self.scheduler.note_chunk_step(req)
+            return {"kind": "prefill_chunk", "tokens": 0, "charged": charged,
+                    "cached": 0, "rids": [req.rid]}
+        # final window: admit into the slot exactly like a batched admission
+        charged += max(0, len(req.prompt) - b)   # no free truncation discount
+        slot = free[0]
+        self.scheduler.note_admitted(req, self.clock())
+        logits = np.asarray(logits)
+        self.prefix_cache.insert(row, req.chunk_blocks,
+                                 last_logits=logits[0],
+                                 salt=self.variant_name)
+        if req.chunk_hit:
+            self.prefix_cache.hits += 1
+        else:
+            self.prefix_cache.misses += 1
+        cached = req.chunk_cached
+        self.prefill_tokens_total += cached
+        self.prefill_tokens_saved += cached
+        self.slot_blocks[slot] = list(req.chunk_blocks)   # refs transfer
+        self.block_tables[slot] = 0
+        self.block_tables[slot, :len(req.chunk_blocks)] = req.chunk_blocks
+        self.lengths[slot] = b
+        self._place(req, slot, row)
+        tok = self._sample(logits[0:1], req)
+        self._emit(req, slot, int(tok[0]))
+        self._slot_emit0[slot] = len(req.output)
+        self._clear_chunk(req)
+        return {"kind": "prefill", "tokens": 1, "charged": charged,
+                "cached": cached, "rids": [req.rid]}
+
+    def _chunk_step_dense(self, req: Request,
+                          free: List[int]) -> Optional[Dict]:
+        if req.chunk_row is None:
+            if not free:
+                return None              # needs a slot stripe to reserve
+            self._chunk_init(req)
+            req.chunk_slot = free[0]
+            self._chunk_slots.add(free[0])
+        slot = req.chunk_slot
+        row = req.chunk_row
+        b = len(row)
+        start = req.chunk_done
+        end = min(start + self.prefill_chunk, b)
+        final = end >= b
+        nwin = end - start
+        logits = None
+        if start == 0:
+            # cold first window (never final, see _chunk_window): stock full
+            # prefill of [0, end), window copied into the reserved stripe
+            W = _pow2(end, self.max_seq)
+            toks = np.zeros((self.max_batch, W), np.int32)
+            toks[0, :end] = row[:end]
+            _, cache_n, _ = self._prefill_fn()(self.params,
+                                               self._prefill_batch(toks))
+            self.cache = jax.tree.map(
+                lambda c, p: c.at[:, slot, :end].set(
+                    p[:, 0, :end].astype(c.dtype)) if c.ndim >= 3 else c,
+                self.cache, cache_n)
+        else:
+            from repro.models.transformer import quantize_kv_for_cache
+            p_len = _pow2(start, self.max_seq)
+            W = _pow2(nwin, b)
+            # the prefix view is cache[:, :, :p_len] — batch rows align with
+            # cache slots, so the window MUST ride in row `slot` to attend the
+            # reserved stripe (row 0 would read slot 0's resident KV instead)
+            toks = np.zeros((self.max_batch, W), np.int32)
+            toks[slot, W - nwin:] = row[start:end]
+            plens = np.zeros((self.max_batch,), np.int32)
+            plens[slot] = start
+            batch = self._prefill_batch(toks)
+            batch["positions"] = jnp.arange(end - W, end, dtype=jnp.int32)
+            logits, (k_win, v_win) = self._dense_chunk_fn()(
+                self.params, self.cache, batch, jnp.asarray(plens),
+                p_len, final)
+            entry = quantize_kv_for_cache("k_scale" in self.cache,
+                                          k_win, v_win)
+            for key, val in entry.items():
+                self.cache[key] = self.cache[key].at[
+                    :, slot, start:end].set(
+                        val[:, slot, W - nwin:].astype(self.cache[key].dtype))
+        req.chunk_done = end
+        # advance the stripe's fill mark: an interleaved dense decode step
+        # blindly writes its per-row KV at lengths[slot] for EVERY row, so
+        # pointing it at the next window's first position makes the garbage
+        # write land where the next chunk overwrites it
+        self.lengths = self.lengths.at[slot].set(end)
+        pad = b - min(len(req.prompt), b)
+        charged = max(0, end - max(start, pad))
+        if not final:
+            self.scheduler.note_chunk_step(req)
+            return {"kind": "prefill_chunk", "tokens": 0, "charged": charged,
+                    "cached": 0, "rids": [req.rid]}
+        charged += max(0, len(req.prompt) - b)   # no free truncation discount
+        self.scheduler.note_admitted(req, self.clock())
+        self._chunk_slots.discard(slot)
+        self._place(req, slot, row)
+        tok = self._sample(np.asarray(logits)[slot:slot + 1], req)
+        self._emit(req, slot, int(tok[0]))
+        self._slot_emit0[slot] = len(req.output)
+        self._clear_chunk(req)
+        return {"kind": "prefill", "tokens": 1, "charged": charged,
+                "cached": 0, "rids": [req.rid]}
+
+    def _clear_chunk(self, req: Request):
+        req.chunk_row = None
+        req.chunk_done = 0
+        req.chunk_blocks = []
+        req.chunk_cached = 0
+        req.chunk_hit = False
+        req.chunk_slot = None
+
+    def _release_chunk(self, req: Request):
+        """Drop a parked partial prefill (cancel / expiry / hot swap / pool
+        pressure). Paged: the request's block refs are dropped — progress
+        survives as ordinary prefix-cache entries until eviction actually
+        needs the blocks, so a quick retry often resumes for free. Dense:
+        the reserved slot stripe is returned."""
+        if req.chunk_row is None:
+            return
+        if self.kv_layout == "paged":
+            for bid in req.chunk_blocks:
+                self.block_pool.decref(bid)
+        elif req.chunk_slot is not None:
+            self._chunk_slots.discard(req.chunk_slot)
+            self.lengths = self.lengths.at[req.chunk_slot].set(0)
+        self._clear_chunk(req)
+        self.scheduler.note_chunk_dropped(req)
+
     # -- preemption / resume -------------------------------------------------
 
-    def _reclaim(self, want_free: int, *, priority: Optional[int]) -> bool:
+    def _reclaim(self, want_free: int, *, priority: Optional[int],
+                 exclude: Optional[Request] = None) -> bool:
         """Bring the pool's free count up to `want_free`: first by LRU
-        prefix-cache eviction, then (when `priority` is given) by preempting
-        strictly-lower-priority running slots on the caller's behalf."""
+        prefix-cache eviction, then by dropping another waiting request's
+        parked partial prefill (its chain becomes evictable cache entries),
+        then (when `priority` is given) by preempting strictly-lower-priority
+        running slots on the caller's behalf. `exclude` protects the caller's
+        own parked chain while it extends it."""
         while self.block_pool.num_free < want_free:
             if self.prefix_cache.evict_lru():
+                continue
+            if self._drop_parked_chunk(exclude):
                 continue
             victim = None
             if priority is not None:
@@ -746,6 +1184,20 @@ class ServingEngine:
             if victim is None:
                 return False
             self._preempt_slot(victim)
+        return True
+
+    def _drop_parked_chunk(self, exclude: Optional[Request]) -> bool:
+        """Release the lowest-priority (newest on ties) parked partial
+        prefill to relieve block pressure. The dropped request stays queued:
+        its progress survives as ordinary prefix-cache entries until eviction
+        actually needs the blocks, so a quick retry often resumes for free."""
+        if self.kv_layout != "paged":
+            return False
+        cands = [r for r in self.scheduler.waiting
+                 if r.chunk_row is not None and r is not exclude]
+        if not cands:
+            return False
+        self._release_chunk(min(cands, key=lambda r: (r.priority, -r.seq)))
         return True
 
     def _preempt_slot(self, i: int):
@@ -810,12 +1262,16 @@ class ServingEngine:
                 return bid
             if self.prefix_cache.evict_lru():
                 continue
+            if self._drop_parked_chunk(None):
+                continue                 # parked chains yield before slots do
             active = [(s, r) for s, r in enumerate(self.slots)
                       if r is not None]
             if len(active) <= 1:
-                raise RuntimeError(
+                raise PoolExhaustedError(
                     "paged KV pool exhausted mid-decode with no preemptable "
-                    "slot — raise num_blocks")
+                    "slot — raise num_blocks",
+                    waiting=len(self.pending),
+                    free_blocks=self.block_pool.num_free)
             victim = Scheduler.pick_victim(active)
             self._preempt_slot(victim)
             if victim == i:

@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import math
 from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard (engine -> scheduler)
@@ -69,6 +70,21 @@ TERMINAL = (DONE, CANCELLED, EXPIRED)
 class EngineStallError(RuntimeError):
     """`run_until_drained` exhausted its step budget with work still queued
     or resident — a silent partial result would masquerade as completion."""
+
+
+class PoolExhaustedError(EngineStallError):
+    """The paged KV block pool cannot make progress: no request can be
+    admitted (idle engine) or grown (mid-decode) even after cache eviction
+    and preemption. Carries the queue depth and pool occupancy at the point
+    of failure so fleet/soak callers can report actionable sizing errors.
+    Subclasses `EngineStallError` so both stall shapes are handled uniformly.
+    """
+
+    def __init__(self, msg: str, *, waiting: int = 0, free_blocks: int = 0):
+        super().__init__(
+            f"{msg} (waiting={waiting}, free_blocks={free_blocks})")
+        self.waiting = waiting
+        self.free_blocks = free_blocks
 
 
 class DeadlineExpiredError(RuntimeError):
@@ -165,6 +181,8 @@ class Scheduler:
         self.expired = 0
         self.cancelled = 0
         self.queue_wait_s = 0.0
+        self.chunk_steps = 0        # non-final chunked-prefill steps run
+        self.chunk_drops = 0        # partial prefills released un-admitted
         self._tiers: Dict[str, Dict] = {}
 
     # -- per-tier telemetry --------------------------------------------------
@@ -194,6 +212,16 @@ class Scheduler:
     def note_cancelled(self, req: "Request"):
         self.cancelled += 1
         self._tier(req)["cancelled"] += 1
+
+    def note_chunk_step(self, req: "Request"):
+        """Count one non-final chunked-prefill step (the request stays
+        WAITING at the queue head; its partial KV is parked in the pool)."""
+        self.chunk_steps += 1
+
+    def note_chunk_dropped(self, req: "Request"):
+        """Count a partial prefill released before admission (cancel, expiry,
+        hot swap, or pool pressure dropping a parked chain)."""
+        self.chunk_drops += 1
 
     # -- queue ---------------------------------------------------------------
 
@@ -289,10 +317,13 @@ class Scheduler:
             lats = sorted(t["latencies"])
 
             def pct(q):
+                # ceil-based nearest-rank: the smallest sample >= the
+                # requested quantile. `round` used banker's rounding, which
+                # skewed small samples low (p50 of 2 returned the min).
                 if not lats:
                     return 0.0
                 return float(lats[min(len(lats) - 1,
-                                      int(round(q * (len(lats) - 1))))])
+                                      math.ceil(q * (len(lats) - 1)))])
             out[name] = {k: v for k, v in t.items() if k != "latencies"}
             out[name]["p50_latency_s"] = round(pct(0.50), 6)
             out[name]["p95_latency_s"] = round(pct(0.95), 6)
@@ -304,6 +335,8 @@ class Scheduler:
                 "requeues": self.requeues,
                 "expired": self.expired,
                 "cancelled": self.cancelled,
+                "chunk_steps": self.chunk_steps,
+                "chunk_drops": self.chunk_drops,
                 "queue_wait_s": round(self.queue_wait_s, 6),
                 "waiting": len(self._queue),
                 "tiers": self.tier_stats()}

@@ -1,0 +1,171 @@
+"""Chunked prefill + decode interleaving: temperature-0 token parity with
+monolithic admission (both KV layouts), interleaving evidence, parked-chain
+block accounting across cancel/expiry, typed pool exhaustion, and config
+validation."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig, RuntimeConfig
+from repro.models import get_model
+from repro.serving import (EngineStallError, PoolExhaustedError, Request,
+                           ServingEngine, VirtualClock)
+from repro.sharding.param import init_params
+
+CFG = ModelConfig(name="tiny", family="transformer", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256)
+RCFG = RuntimeConfig()
+
+RNG = np.random.default_rng(23)
+# same prompt bucket (64) for every prompt: admission composition changes the
+# right-pad width, so parity across engines requires bucket-stable prompts
+LONG = [int(t) for t in 2 + RNG.integers(0, 250, size=60)]
+SHORT = [int(t) for t in 2 + RNG.integers(0, 250, size=40)]
+SHARED_TAIL = [int(t) for t in 2 + RNG.integers(0, 250, size=28)]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(get_model(CFG).param_spec(), jax.random.PRNGKey(0))
+
+
+def _engine(params, layout, chunk, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_seq", 128)
+    return ServingEngine(CFG, params, RCFG, kv_layout=layout,
+                         prefill_chunk=chunk, **kw)
+
+
+def _run_mix(eng):
+    eng.submit(Request(rid=1, prompt=SHORT, max_new_tokens=8, eos_id=-1))
+    eng.submit(Request(rid=2, prompt=LONG, max_new_tokens=8, eos_id=-1))
+    done = {r.rid: r.output for r in eng.run_until_drained()}
+    eng.submit(Request(rid=3, prompt=LONG[:32] + SHARED_TAIL,
+                       max_new_tokens=8, eos_id=-1))
+    done.update({r.rid: r.output for r in eng.run_until_drained()})
+    return done
+
+
+@pytest.mark.parametrize("layout", ["paged", "dense"])
+def test_chunked_token_parity_and_interleave(params, layout):
+    """Chunked admission is a pure scheduling change: temperature-0 streams
+    are token-identical to the unchunked engine on the same workload, while
+    decode steps for residents run *between* prefill windows (the
+    head-of-line stall this PR removes). The paged leg also crosses a
+    partial prefix-cache hit (rid 3 shares rid 2's first 32 tokens), so
+    windows resume from a warm mid-prompt boundary."""
+    base = _run_mix(_engine(params, layout, None))
+    eng = _engine(params, layout, 16)
+    chunked = _run_mix(eng)
+    assert chunked == base
+    kinds = [e["kind"] for e in eng.step_log]
+    assert kinds.count("prefill_chunk") >= 3
+    # interleaving: some decode runs with chunk windows both before and after
+    decodes = [i for i, k in enumerate(kinds) if k == "decode"]
+    chunks = [i for i, k in enumerate(kinds) if k == "prefill_chunk"]
+    assert any(chunks[0] < d < chunks[-1] for d in decodes)
+    # scheduler counter reconciles exactly with the step log
+    assert eng.scheduler.stats()["chunk_steps"] == kinds.count("prefill_chunk")
+    # schema: every entry records who was resident when the step started,
+    # and non-final windows emit no tokens
+    assert all("resident_rids" in e for e in eng.step_log)
+    assert all(e["tokens"] == 0 for e in eng.step_log
+               if e["kind"] == "prefill_chunk")
+
+
+def test_chunk_windows_stall_residents_visibly(params):
+    """While rid 1 decodes, rid 2's prefill windows record rid 1 as resident
+    — the hook `EngineExecutor._attribute_steps` uses to charge stall time
+    to the streams the window actually paused."""
+    eng = _engine(params, "paged", 16)
+    eng.submit(Request(rid=1, prompt=SHORT, max_new_tokens=8, eos_id=-1))
+    eng.submit(Request(rid=2, prompt=LONG, max_new_tokens=8, eos_id=-1))
+    eng.run_until_drained()
+    stalled = [e for e in eng.step_log
+               if e["kind"] == "prefill_chunk" and e["resident_rids"]]
+    assert stalled and all(e["resident_rids"] == [1] for e in stalled)
+
+
+def test_cancel_mid_chunk_reconciles_refcounts(params):
+    """Cancelling a partially-prefilled request drops exactly the request's
+    own refs: the parked chain survives as ordinary prefix-cache entries
+    (warm retry), and evicting those returns every block to the pool."""
+    eng = _engine(params, "paged", 16, block_size=16)
+    req = Request(rid=0, prompt=LONG, max_new_tokens=4, eos_id=-1)
+    eng.submit(req)
+    eng.step()                       # cold window [0, 16)
+    eng.step()                       # window [16, 32)
+    assert req.status == "waiting" and req.chunk_done == 32
+    b0, b1 = req.chunk_blocks
+    # request ref + entry refs: [row[:16]] holds b0; [row[:32]] holds both
+    assert eng.block_pool.refcount[b0] == 3
+    assert eng.block_pool.refcount[b1] == 2
+    assert eng.cancel(req)
+    assert req.chunk_row is None and req.chunk_blocks == []
+    assert eng.scheduler.stats()["chunk_drops"] == 1
+    # only the cache entries' refs remain
+    assert eng.block_pool.refcount[b0] == 2
+    assert eng.block_pool.refcount[b1] == 1
+    while eng.prefix_cache.evict_lru():
+        pass
+    assert not eng.prefix_cache.entries
+    assert eng.block_pool.num_free == eng.block_pool.num_blocks - 1
+
+
+def test_expiry_mid_chunk_releases_chain(params):
+    """A deadline lapsing between windows releases the parked chain through
+    the same path as cancel — no leaked block refs, no stuck queue entry."""
+    clock = VirtualClock()
+    eng = _engine(params, "paged", 16, block_size=16, clock=clock,
+                  step_cost_fn=lambda kind, tok, act: 1.0)
+    req = Request(rid=0, prompt=LONG, max_new_tokens=4, eos_id=-1,
+                  deadline=1.5)
+    eng.submit(req)
+    eng.step()                       # t0=0.0: window [0, 16), clock -> 1.0
+    assert req.chunk_done == 16 and req.status == "waiting"
+    eng.step()                       # t0=1.0: window [16, 32), clock -> 2.0
+    done = eng.step()                # t0=2.0 > deadline: expired, released
+    assert done == [] and req.status == "expired"
+    assert req.chunk_row is None and req.chunk_blocks == []
+    assert not eng.has_work()
+    assert eng.scheduler.stats()["chunk_drops"] == 1
+    while eng.prefix_cache.evict_lru():
+        pass
+    assert eng.block_pool.num_free == eng.block_pool.num_blocks - 1
+
+
+def test_pool_exhausted_error_is_typed(params):
+    """An idle engine that cannot admit its queue raises PoolExhaustedError
+    (an EngineStallError) carrying the queue depth and free-block count —
+    not a bare RuntimeError the fleet layer can't triage."""
+    for chunk, free_at_raise in ((None, 2), (16, 1)):
+        eng = _engine(params, "paged", chunk, num_blocks=3, block_size=16)
+        eng.submit(Request(rid=0, prompt=LONG, max_new_tokens=4, eos_id=-1))
+        # unchunked: the very first step cannot admit; chunked: the first
+        # window lands in the 2 free blocks, the next one starves
+        with pytest.raises(PoolExhaustedError) as ei:
+            eng.run_until_drained()
+        assert isinstance(ei.value, EngineStallError)
+        assert ei.value.waiting == 1
+        assert ei.value.free_blocks == free_at_raise
+        assert "waiting=1" in str(ei.value)
+
+
+def test_prefill_chunk_config_validation(params):
+    with pytest.raises(ValueError, match="must be positive"):
+        _engine(params, "paged", 0)
+    with pytest.raises(ValueError, match="must be positive"):
+        _engine(params, "dense", -16)
+    with pytest.raises(ValueError, match="chunked prefill contract"):
+        mrope = dataclasses.replace(CFG, use_mrope=True)
+        ServingEngine(mrope, params, RCFG, kv_layout="dense",
+                      prefill_chunk=16)
+
+
+def test_paged_chunk_rounds_to_block_multiple(params):
+    eng = _engine(params, "paged", 10, block_size=16)
+    assert eng.prefill_chunk == 16   # parked chains stay block-aligned
+    eng = _engine(params, "dense", 10)
+    assert eng.prefill_chunk == 10   # dense stripes have no block grid

@@ -6,7 +6,7 @@ import sys
 import pytest
 
 from benchmarks.ci_compare import compare, main as compare_main
-from benchmarks.ci_metrics import collect, HIGHER, LOWER
+from benchmarks.ci_metrics import collect, HIGHER, INFO, LOWER
 from benchmarks.ci_summary import render
 
 
@@ -17,6 +17,12 @@ def _write_bench(dirpath, *, tps=70.0, carbon=0.0028, day_tps=12.0):
                             "carbon_g_per_query": carbon,
                             "peak_active": 4}},
         "fleet": {"queries": 10, "carbon_g_per_query": carbon, "pods": {}},
+    }))
+    (dirpath / "chunked_prefill.json").write_text(json.dumps({
+        "chunked": {"decode_tps": tps, "chunk_steps": 25,
+                    "stall_time_s": 0.4},
+        "acceptance": {"interactive_p95_s": 1.9, "p95_speedup": 1.5,
+                       "pass": True},
     }))
     (dirpath / "engine_week.json").write_text(json.dumps({
         "decode_tps": {"1": 17.0, "4": tps},
@@ -34,6 +40,11 @@ def test_collect_extracts_tagged_metrics(tmp_path):
     assert m["fleet_engine/carbon_g_per_query@4"].direction == LOWER
     assert m["engine_week/prefix_hit_rate"].value == pytest.approx(0.9)
     assert m["engine_week/sched_preemptions"].value == 2
+    # chunked-prefill suite: p95 gates as a cost, chunk counters are info
+    assert m["chunked_prefill/interactive_p95_s"].direction == LOWER
+    assert m["chunked_prefill/decode_tps"].direction == HIGHER
+    assert m["chunked_prefill/chunk_steps"].direction == INFO
+    assert m["chunked_prefill/acceptance_pass"].value == 1.0
     # missing dir / empty dir -> empty mapping, never raises
     assert collect(str(tmp_path / "nope")) == {}
 

@@ -115,3 +115,35 @@ def test_use_backend_roundtrip():
     rt.use_backend("sim")
     assert isinstance(rt.executor, SimExecutor)
     assert rt.switcher.ref_tps == pytest.approx(ref_sim)
+
+
+def test_prefill_stall_attributed_to_residents():
+    """Regression: a prefill step admitting rid C while rid B decodes stalls
+    B for the step's full duration. `_attribute_steps` used to split such
+    steps over `rids` (the admitted request) only, so B's energy and stall
+    telemetry silently recorded zero even though its latency ran through the
+    step on the shared engine clock. Now the step_log's `resident_rids`
+    closes the gap: B pays an energy share and accrues the dt as stall_s."""
+    ex = EngineExecutor(PROF, ORIN_AGX, seed=0, max_batch=2)
+    mk = lambda tools, calls: ex.begin_query(
+        n_tools_in_prompt=tools, n_calls=calls, selection_correct=True,
+        variant="q8", mode=ORIN_MODES[0])
+    s1, s2, s3 = mk(1, 1), mk(2, 2), mk(3, 1)   # rids 0, 1, 2
+    ex.settle([s1, s2, s3])
+    # s1 (12 new tokens) finishes before s2 (24); its freed slot admits s3
+    # while s2 is still resident — that admission is the stall under test
+    stall_entries = [e for e in ex.engine.step_log
+                     if e["kind"] != "decode" and 1 in e["resident_rids"]
+                     and 1 not in e["rids"]]
+    assert stall_entries and all(e["rids"] == [2] for e in stall_entries)
+    expected = sum(e["dt"] for e in stall_entries)
+    assert s2.execution.stall_s == pytest.approx(expected)
+    assert s2.execution.stall_s > 0.0
+    # the co-admitted batch (rids [0, 1]) stalls nobody; s1 and s3 were
+    # never resident through someone else's prefill
+    assert s1.execution.stall_s == 0.0
+    assert s3.execution.stall_s == 0.0
+    # the stalled time is real wall (engine-clock) time inside the query:
+    # exec time covers decode + own prefill + the stall it sat through
+    assert s2.execution.exec_time_s \
+        >= s2.execution.decode_time_s + s2.execution.stall_s

@@ -408,3 +408,32 @@ def test_engine_fleet_shares_pod_engines():
     assert pods[0].runtime.executor.clock is not old_clock
     assert all(p.runtime.executor.engine.clock
                is p.runtime.executor.clock for p in pods)
+
+
+def test_tier_percentiles_nearest_rank_small_samples():
+    """Latency percentiles use ceil-based nearest-rank: the smallest sample
+    >= the requested quantile. The old `int(round(q * (n - 1)))` used
+    banker's rounding, which skewed small samples low — p50 of a 2-sample
+    tier returned the *min*."""
+    from types import SimpleNamespace
+
+    from repro.serving import Scheduler
+
+    def tier_with(lats):
+        sched = Scheduler()
+        for lat in lats:
+            sched.note_done(SimpleNamespace(tier="t", submit_time=0.0), lat)
+        if not lats:                     # create the tier without samples
+            sched.note_cancelled(SimpleNamespace(tier="t"))
+        return sched.tier_stats()["t"]
+
+    t = tier_with([])                    # n=0: defined, not a crash
+    assert t["p50_latency_s"] == 0.0 and t["p95_latency_s"] == 0.0
+    t = tier_with([5.0])                 # n=1: the only sample
+    assert t["p50_latency_s"] == 5.0 and t["p95_latency_s"] == 5.0
+    t = tier_with([1.0, 3.0])            # n=2: p50 is the UPPER sample
+    assert t["p50_latency_s"] == 3.0
+    assert t["p95_latency_s"] == 3.0
+    t = tier_with([float(i) for i in range(1, 21)])   # n=20
+    assert t["p50_latency_s"] == 11.0    # ceil(0.5 * 19) = rank 10
+    assert t["p95_latency_s"] == 20.0    # ceil(0.95 * 19) = rank 19

@@ -2,16 +2,21 @@
 
 A seeded event-sequence generator drives hundreds of engine steps of mixed
 admission / cancellation / preemption (via a deliberately tight block pool) /
-deadline expiry / Q8<->Q4 hot swaps against TWO engines at once — one paged,
-one dense — fed identical request streams on identical virtual clocks.
-After draining, it asserts the invariants that must survive any interleaving:
+deadline expiry / Q8<->Q4 hot swaps against THREE engines at once — one
+paged, one dense, one paged with chunked prefill (`prefill_chunk=16`, so the
+32-token prompt buckets always split into >= 2 windows) — fed identical
+request streams on identical virtual clocks. After draining, it asserts the
+invariants that must survive any interleaving:
 
-  * paged-vs-dense token parity for every request that completed in both
-    engines under the same per-token weight variants (temperature-0 streams
-    are layout-independent, including across preemption/resume; a hot swap
-    is a barrier only per engine, so a pair whose engines decoded the same
-    positions under different variants is legitimately divergent and is
-    excluded by comparing variant histories);
+  * paged-vs-dense and paged-vs-chunked token parity for every request that
+    completed in both engines under the same per-token weight variants
+    (temperature-0 streams are layout- and chunking-independent, including
+    across preemption/resume and mid-chunk drops under pool pressure; a hot
+    swap is a barrier only per engine, so a pair whose engines decoded the
+    same positions under different variants is legitimately divergent and
+    is excluded by comparing variant histories — as is a pair where one
+    engine's preemption resume re-prefilled its KV under swapped weights,
+    which the emission-only histories cannot see);
   * block-pool refcounts reconcile exactly with the prefix cache's holdings
     once all slots are free, and return to the empty-pool baseline after a
     cache flush;
@@ -64,9 +69,12 @@ def variants():
 
 
 def _engine(variants, layout: str) -> ServingEngine:
-    kw = {"num_blocks": NUM_BLOCKS} if layout == "paged" else {}
+    kv = "paged" if layout == "chunked" else layout
+    kw = {"num_blocks": NUM_BLOCKS} if kv == "paged" else {}
+    if layout == "chunked":
+        kw["prefill_chunk"] = 16
     eng = ServingEngine(CFG, variants["q8"], RCFG, max_batch=MAX_BATCH,
-                        max_seq=MAX_SEQ, kv_layout=layout,
+                        max_seq=MAX_SEQ, kv_layout=kv,
                         block_size=BLOCK_SIZE, clock=VirtualClock(), **kw)
     eng.variant_name = "q8"
     return eng
@@ -78,7 +86,8 @@ class SoakDriver:
     def __init__(self, variants, seed: int, n_events: int):
         self.rng = np.random.default_rng(seed)
         self.engines = {"paged": _engine(variants, "paged"),
-                        "dense": _engine(variants, "dense")}
+                        "dense": _engine(variants, "dense"),
+                        "chunked": _engine(variants, "chunked")}
         self.variants = variants
         self.variant = "q8"
         self.pairs = []          # [{layout: Request}] in submission order
@@ -153,9 +162,15 @@ def _check_engine(eng: ServingEngine, reqs):
             for r in s["rids"]:          # resume re-prefills emit none
                 fresh_count[r] += 1
     stats = eng.scheduler_stats()
-    # every admission (fresh or resume) appears as a logged prefill row
+    # every admission (fresh or resume) appears as a logged prefill row —
+    # non-final chunk windows are logged as "prefill_chunk" and admit nobody
     assert stats["admitted"] == sum(
         len(s["rids"]) for s in log if s["kind"] == "prefill")
+    # every non-final window the scheduler counted is in the log, and vice
+    # versa; after drain no parked partial prefill can remain
+    assert stats["chunk_steps"] == sum(
+        1 for s in log if s["kind"] == "prefill_chunk")
+    assert all(not r.chunk_blocks and r.chunk_row is None for r in reqs)
     assert stats["requeues"] == stats["preemptions"]
     assert stats["waiting"] == 0
     by_status = collections.Counter(r.status for r in reqs)
@@ -200,6 +215,28 @@ def _variant_history(eng: ServingEngine):
     return hist
 
 
+def _unsafe_resumes(eng: ServingEngine):
+    """Rids whose preemption resume (a "prefill" row emitting no token)
+    re-prefilled the saved sequence under a *different* weight variant than
+    some already-emitted position was first computed under. The resume
+    legitimately rewrites KV history — recompute under the live weights is
+    the documented contract — so parity with an engine that kept the old
+    variant's KV across the swap is not expected, yet the emission-variant
+    histories still match (the resume emits nothing). These rids must be
+    excluded from cross-engine comparison explicitly."""
+    emitted = collections.defaultdict(list)
+    unsafe = set()
+    for s in eng.step_log:
+        if s["kind"] == "decode" or s["tokens"] > 0:
+            for r in s["rids"]:
+                emitted[r].append(s["variant"])
+        elif s["kind"] == "prefill":
+            for r in s["rids"]:
+                if any(v != s["variant"] for v in emitted[r]):
+                    unsafe.add(r)
+    return unsafe
+
+
 def _soak(variants, seed: int, n_events: int) -> dict:
     driver = SoakDriver(variants, seed, n_events)
     driver.run()
@@ -207,19 +244,30 @@ def _soak(variants, seed: int, n_events: int) -> dict:
         _check_engine(eng, [p[name] for p in driver.pairs])
     hists = {name: _variant_history(eng)
              for name, eng in driver.engines.items()}
+    unsafe = {name: _unsafe_resumes(eng)
+              for name, eng in driver.engines.items()}
     both_done = [p for p in driver.pairs
                  if all(r.status == DONE for r in p.values())]
-    compared = 0
+    compared = collections.Counter()
     for p in both_done:
         # parity holds whenever both engines computed every token position
         # under the same weights — engine-local timing (deferred admissions,
-        # preemptions) around a hot swap legitimately diverges otherwise
-        if hists["paged"][p["paged"].rid] == hists["dense"][p["dense"].rid]:
-            assert p["paged"].output == p["dense"].output
-            compared += 1
+        # preemptions, chunk windows) around a hot swap legitimately
+        # diverges otherwise, as does a resume that re-prefilled under
+        # swapped weights
+        for other in ("dense", "chunked"):
+            if p["paged"].rid in unsafe["paged"] \
+                    or p[other].rid in unsafe[other]:
+                continue
+            if hists["paged"][p["paged"].rid] == hists[other][p[other].rid]:
+                assert p["paged"].output == p[other].output
+                compared[other] += 1
     return {
         "pairs": len(driver.pairs),
-        "both_done": compared,
+        "both_done": compared["dense"],
+        "chunked_done": compared["chunked"],
+        "chunk_steps":
+            driver.engines["chunked"].scheduler_stats()["chunk_steps"],
         "preemptions":
             driver.engines["paged"].scheduler_stats()["preemptions"],
         "expired": driver.engines["paged"].scheduler_stats()["expired"],
@@ -231,6 +279,8 @@ def test_soak_quick(variants, seed):
     out = _soak(variants, seed, n_events=150)
     assert out["pairs"] >= 10
     assert out["both_done"] >= 3      # parity assertions actually ran
+    assert out["chunked_done"] >= 3   # ...including chunked-vs-paged
+    assert out["chunk_steps"] >= 1    # the chunked path actually exercised
 
 
 @pytest.mark.slow
@@ -241,5 +291,7 @@ def test_soak_nightly(variants):
         totals.update(out)
     # across the seed set every hard path must have fired
     assert totals["both_done"] >= 50
+    assert totals["chunked_done"] >= 50
+    assert totals["chunk_steps"] >= 10
     assert totals["preemptions"] >= 1
     assert totals["expired"] >= 1
