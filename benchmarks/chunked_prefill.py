@@ -91,7 +91,7 @@ def _run(chunk: Optional[int]) -> Dict:
         "interactive_p95_s": float(np.percentile(inter, 95)),
         "decode_tps": dec_tok / max(dec_dt, 1e-9),
         "decode_tokens": dec_tok,
-        "chunk_steps": eng.scheduler_stats()["chunk_steps"],
+        "chunk_steps": eng.stats().chunk_steps,
         "stall_time_s": stall,
         "interactive_stall_s": float(np.mean(
             [s.execution.stall_s for _, tier, s in sessions

@@ -37,8 +37,8 @@ def _get(data, *path):
 
 
 def _prefix_hit_rate(data) -> Optional[float]:
-    hits = _get(data, "prefix_cache", "hits")
-    misses = _get(data, "prefix_cache", "misses")
+    hits = _get(data, "engine_stats", "prefix_cache", "hits")
+    misses = _get(data, "engine_stats", "prefix_cache", "misses")
     if hits is None or misses is None or hits + misses == 0:
         return None
     return hits / (hits + misses)
@@ -52,10 +52,13 @@ _SCHEMAS: Dict[str, List[Tuple[str, str, Callable]]] = {
         ("day_carbon_g_per_query", LOWER,
          lambda d: _get(d, "day", "avg_carbon_g")),
         ("prefix_hit_rate", INFO, _prefix_hit_rate),
-        ("sched_admitted", INFO, lambda d: _get(d, "scheduler", "admitted")),
+        # versioned EngineStats artifact (schema_version inside the payload)
+        ("sched_admitted", INFO,
+         lambda d: _get(d, "engine_stats", "admitted")),
         ("sched_preemptions", INFO,
-         lambda d: _get(d, "scheduler", "preemptions")),
-        ("sched_expired", INFO, lambda d: _get(d, "scheduler", "expired")),
+         lambda d: _get(d, "engine_stats", "preemptions")),
+        ("sched_expired", INFO,
+         lambda d: _get(d, "engine_stats", "expired")),
     ],
     "paged_engine": [
         ("prefix_saved_frac", HIGHER,
@@ -94,6 +97,19 @@ _SCHEMAS: Dict[str, List[Tuple[str, str, Callable]]] = {
          lambda d: _get(d, "chunked", "chunk_steps")),
         ("stall_time_s", INFO,
          lambda d: _get(d, "chunked", "stall_time_s")),
+        ("acceptance_pass", INFO,
+         lambda d: _get(d, "acceptance", "pass")),
+    ],
+    "fleet_workers": [
+        # gated: aggregate VIRTUAL decode TPS across worker processes —
+        # machine-stable (virtual clock), unlike the wall-time speedup
+        ("agg_decode_tps", HIGHER,
+         lambda d: _get(d, "workers", "agg_decode_tps")),
+        ("carbon_g_per_query", LOWER,
+         lambda d: _get(d, "workers", "carbon_g_per_query")),
+        ("wall_speedup", INFO,
+         lambda d: _get(d, "acceptance", "wall_speedup")),
+        ("n_workers", INFO, lambda d: _get(d, "workers", "n_workers")),
         ("acceptance_pass", INFO,
          lambda d: _get(d, "acceptance", "pass")),
     ],

@@ -88,10 +88,10 @@ def json_summary(out=None, quiet: bool = True):
                 "queries": len(res.records),
                 "swaps": ex.swap_count,
                 "tokens_emitted": ex.engine.tokens_emitted},
-        "prefix_cache": ex.engine.prefix_cache_stats(),
-        # nightly trajectory of the preemptive scheduler: preemptions,
-        # requeues, queue-wait time and the slot-occupancy high-water mark
-        "scheduler": ex.engine.scheduler_stats(),
+        # nightly trajectory of the engine telemetry — the versioned
+        # EngineStats schema (scheduler counters, per-tier percentiles,
+        # prefix-cache stats) under one "engine_stats" key
+        "engine_stats": ex.engine.stats().to_wire(),
     }
 
 

@@ -78,15 +78,14 @@ def fleet_smoke(n_pods: int = 2, n_steps: int = 2,
             pod_stats[p.pod_id] = {"served": p.served, "built": False}
             continue
         eng = p.client.engine
+        s = eng.stats()
         pod_stats[p.pod_id] = {"served": p.served,
-                               "scheduler": eng.scheduler_stats(),
-                               "prefix_cache": eng.prefix_cache_stats()}
+                               "engine_stats": s.to_wire()}
         if not quiet:
-            s = eng.scheduler_stats()
             emit(f"fleet_engine/pod{p.pod_id}", eng.recent_tps(
                 window=len(eng.step_log)),
-                f"served={p.served} peak={s['peak_active']} "
-                f"preempt={s['preemptions']} wait={s['queue_wait_s']:.2f}s")
+                f"served={p.served} peak={s.peak_active} "
+                f"preempt={s.preemptions} wait={s.queue_wait_s:.2f}s")
     if not quiet:
         emit("fleet_engine/total", float(n),
              f"CF/query={cf / max(n, 1) * 1000:.2f}mg")

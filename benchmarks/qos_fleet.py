@@ -114,22 +114,23 @@ def pressure(quiet: bool = False) -> Dict:
                  for _, s in allq) / len(allq)
         runs[label] = {
             "tiers": _tier_metrics(allq),
-            "scheduler": eng.scheduler_stats(),
+            "engine_stats": eng.stats().to_wire(),
             "carbon_g_per_query": cf,
             "decode_tps": eng.recent_tps(window=len(eng.step_log)),
         }
     t, b = runs["tiered"], runs["baseline"]
     ti, bi = t["tiers"]["interactive"], b["tiers"]["interactive"]
+    batch_preempted = t["engine_stats"]["tiers"]["batch"]["preempted"]
     t["acceptance"] = {
         "interactive_hit_rate": ti["deadline_hit_rate"],
         "interactive_p95_s": ti["p95_latency_s"],
         "baseline_interactive_p95_s": bi["p95_latency_s"],
-        "batch_preemptions": t["scheduler"]["tiers"]["batch"]["preempted"],
+        "batch_preemptions": batch_preempted,
         "carbon_g_per_query": t["carbon_g_per_query"],
         "pr3_4session_carbon_g": PR3_4SESSION_CARBON_G,
         "pass": bool(ti["deadline_hit_rate"] >= 0.95
                      and ti["p95_latency_s"] < bi["p95_latency_s"]
-                     and t["scheduler"]["tiers"]["batch"]["preempted"] >= 1
+                     and batch_preempted >= 1
                      and t["carbon_g_per_query"] <= PR3_4SESSION_CARBON_G),
     }
     if not quiet:
@@ -174,8 +175,8 @@ def fleet_routing(n_steps: int = 2, queries_per_hour: float = 42.0,
         pod_stats[p.pod_id] = {
             "ci_g_per_kwh": float(p.ci_trace[0]),
             "tier_queries": served,
-            "scheduler": (p.client.engine.scheduler_stats()
-                          if p.client is not None else {}),
+            "engine_stats": (p.client.engine.stats().to_wire()
+                             if p.client is not None else {}),
         }
     out = {"pods": pod_stats, "tiers": tier_report(flat),
            "carbon_g_per_query":

@@ -15,6 +15,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
   fleet_scale          — sharded multi-host fleet scale-out: aggregate
                          decode TPS 4 vs 16 pods, regional carbon shedding,
                          data-parallel sharded pods (8 forced host devices)
+  fleet_workers        — multi-process fleet workers behind the control
+                         protocol vs the same topology in-process: wall
+                         speedup, aggregate virtual TPS, carbon/query
   variant_utilization  — Fig 6 (Q8 share per weekday, weeks 3/4)
   operating_modes      — Table I + §III-C TPS/power ladder
   tool_selection       — §III-B selection quality/latency
@@ -42,9 +45,10 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (chunked_prefill, engine_week, fleet_engine,
-                            fleet_scale, kernels_bench, operating_modes,
-                            paged_engine, qos_fleet, roofline_table,
-                            tool_selection, variant_utilization, week_eval)
+                            fleet_scale, fleet_workers, kernels_bench,
+                            operating_modes, paged_engine, qos_fleet,
+                            roofline_table, tool_selection,
+                            variant_utilization, week_eval)
 
     if args.json_dir is not None:
         json_suites = {
@@ -54,6 +58,7 @@ def main() -> None:
             "qos_fleet": qos_fleet.json_summary,
             "fleet_scale": fleet_scale.json_summary,
             "chunked_prefill": chunked_prefill.json_summary,
+            "fleet_workers": fleet_workers.json_summary,
         }
         if args.only and args.only not in json_suites:
             raise SystemExit(
@@ -81,6 +86,7 @@ def main() -> None:
         "fleet_engine": fleet_engine.run,
         "qos_fleet": qos_fleet.run,
         "fleet_scale": fleet_scale.run,
+        "fleet_workers": fleet_workers.run,
         "chunked_prefill": chunked_prefill.run,
         "roofline": roofline_table.run,
     }

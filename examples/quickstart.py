@@ -18,7 +18,7 @@ from repro.core.power import PowerModel
 from repro.data.workload import build_catalog
 from repro.models import get_model
 from repro.quant import quantize_tree
-from repro.serving import Request, ServingEngine
+from repro.serving import EngineConfig, ServingEngine, SessionRequest
 from repro.sharding.param import init_params, count_params
 
 
@@ -49,11 +49,15 @@ def main():
           f"(P_max {mode.p_max:.0f} W)")
 
     # -- serve ------------------------------------------------------------------
-    engine = ServingEngine(cfg, q8, RuntimeConfig(), max_batch=2, max_seq=128)
+    engine = ServingEngine(cfg, q8, RuntimeConfig(),
+                           config=EngineConfig(max_batch=2, max_seq=128))
+    client = engine.client()
     prompt = [2 + int.from_bytes(__import__('hashlib').md5(w.encode()).digest()[:4], 'little') % (cfg.vocab_size - 2) for w in query.split()]
-    engine.submit(Request(rid=0, prompt=prompt, max_new_tokens=8, eos_id=-1))
-    done = engine.run_until_drained()
-    print(f"generated {len(done[0].output)} tokens: {done[0].output}")
+    handle = client.submit(SessionRequest(prompt=prompt, max_new_tokens=8,
+                                          eos_id=-1))
+    client.settle([handle])
+    out = handle.request.output
+    print(f"generated {len(out)} tokens: {out}")
 
     # -- account ------------------------------------------------------------------
     pm = PowerModel(ORIN_AGX)

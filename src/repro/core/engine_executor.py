@@ -34,6 +34,7 @@ carbon accounting).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional
 
 import jax
@@ -49,8 +50,8 @@ from repro.core.executor import (
 from repro.core.power import OperatingMode, PowerModel, modes_for
 from repro.models import get_model
 from repro.quant import quantize_tree
-from repro.serving import (RequestHandle, ServingEngine, SessionRequest,
-                           VirtualClock)
+from repro.serving import (EngineConfig, RequestHandle, ServingEngine,
+                           SessionRequest, VirtualClock)
 from repro.sharding.param import init_params
 
 
@@ -82,11 +83,26 @@ class EngineExecutor:
 
     def __init__(self, profile: ModelProfile, hw: HardwareSpec, *,
                  arch: str = "carboncall-qwen2-7b", seed: int = 0,
-                 max_batch: int = 2, max_seq: int = 256,
+                 config: Optional[EngineConfig] = None,
+                 max_batch: Optional[int] = None,
+                 max_seq: Optional[int] = None,
                  tokens_per_call: int = 8, eval_tokens: int = 4,
-                 kv_layout: str = "auto", num_blocks: Optional[int] = None,
+                 kv_layout: Optional[str] = None,
+                 num_blocks: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  mesh=None, clock: Optional[VirtualClock] = None):
+        # engine sizing flows through ONE serializable EngineConfig — the
+        # same payload a worker process is constructed from; the explicit
+        # kwargs remain as per-field overrides (None = no override). The
+        # executor's historical default is a 2-slot engine.
+        base = config if config is not None else EngineConfig(max_batch=2)
+        over = {k: v for k, v in (("max_batch", max_batch),
+                                  ("max_seq", max_seq),
+                                  ("kv_layout", kv_layout),
+                                  ("num_blocks", num_blocks),
+                                  ("prefill_chunk", prefill_chunk))
+                if v is not None}
+        config = base.replace(**over) if over else base
         self.profile = profile
         self.power_model = PowerModel(hw)
         self.seed = seed
@@ -99,17 +115,23 @@ class EngineExecutor:
         model = get_model(self.cfg)
         spec = model.param_spec()
         params = init_params(spec, jax.random.PRNGKey(seed))
-        self.variants = {"q8": quantize_tree(params, spec, "q8"),
-                         "q4": quantize_tree(params, spec, "q4")}
+        self.variants = {v: quantize_tree(params, spec, v)
+                         for v in config.variants}
+        boot = config.variants[0]
         self.clock = clock if clock is not None else VirtualClock()
         self._mode: OperatingMode = modes_for(hw)[0]
-        self.engine = ServingEngine(self.cfg, self.variants["q8"], rcfg,
-                                    max_batch=max_batch, max_seq=max_seq,
-                                    kv_layout=kv_layout, num_blocks=num_blocks,
-                                    prefill_chunk=prefill_chunk,
+        if mesh is None and config.data_shards > 1:
+            # materialize the config's mesh spec: a data-parallel engine
+            # over `data_shards` host devices (raises when the process
+            # lacks them — fleet builders degrade the config beforehand)
+            from repro.launch.mesh import make_data_mesh
+            mesh = make_data_mesh(config.data_shards)
+        self.engine = ServingEngine(self.cfg, self.variants[boot], rcfg,
+                                    config=config,
                                     mesh=mesh, clock=self.clock,
                                     step_cost_fn=self._step_cost)
-        self.engine.variant_name = "q8"
+        self.engine.variant_name = boot
+        self.config = self.engine.config
         self.client = self.engine.client()
         self._log_pos = 0              # step_log watermark for attribution
         self._rid_sessions: Dict[int, EngineSession] = {}
@@ -203,7 +225,12 @@ class EngineExecutor:
     def run_query(self, *, n_tools_in_prompt: int, n_calls: int,
                   selection_correct: bool, variant: str,
                   mode: OperatingMode) -> QueryExecution:
-        """Blocking shim over the session API (begin + settle of one)."""
+        """DEPRECATED blocking shim (one release): the session API
+        (`begin_query` + `settle`) is the one executor contract."""
+        warnings.warn(
+            "Executor.run_query is deprecated; use begin_query(...) + "
+            "settle([...]) — the async session API is the one contract",
+            DeprecationWarning, stacklevel=2)
         s = self.begin_query(n_tools_in_prompt=n_tools_in_prompt,
                              n_calls=n_calls,
                              selection_correct=selection_correct,

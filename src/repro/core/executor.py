@@ -17,18 +17,20 @@ per-query retry scaffold defined here (`attempt_loop`).
 
 Execution contract (`Executor` protocol): the runtime talks to backends
 through an *async session* API — `begin_query(...) -> QuerySession` then
-`settle(sessions)` — so a backend that can overlap queries (the engine, whose
-decode slots batch across users) receives a whole arrival batch before any
-result is demanded. `run_query` remains as the blocking shim
-(begin + settle of a single session); `SimExecutor` resolves sessions eagerly
+`settle(sessions)` — the ONE contract, serializable over the worker control
+protocol (serving/protocol.py). A backend that can overlap queries (the
+engine, whose decode slots batch across users) receives a whole arrival
+batch before any result is demanded. `SimExecutor` resolves sessions eagerly
 at `begin_query`, which keeps its random-stream consumption — and therefore
 every `run_week(backend="sim")` result — bit-identical to the old blocking
-contract.
+contract. The blocking `run_query` shim is deprecated (one release): it
+warns and forwards to begin+settle.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import List, Optional, Protocol, runtime_checkable
 
 import numpy as np
@@ -108,10 +110,6 @@ class Executor(Protocol):
                     tier: str = "default") -> QuerySession: ...
 
     def settle(self, sessions: List[QuerySession]) -> None: ...
-
-    def run_query(self, *, n_tools_in_prompt: int, n_calls: int,
-                  selection_correct: bool, variant: str,
-                  mode: OperatingMode) -> QueryExecution: ...
 
     def variant_switch_cost(self, variant: str, mode: OperatingMode): ...
 
@@ -205,7 +203,7 @@ class SimExecutor:
                              kw["selection_correct"], kw["variant"]),
                          variant=kw["variant"], mode=kw["mode"],
                          priority=priority, deadline_s=deadline_s, tier=tier)
-        s.execution = self.run_query(**kw)
+        s.execution = self._execute(**kw)
         return s
 
     def settle(self, sessions: List[QuerySession]) -> None:
@@ -224,6 +222,19 @@ class SimExecutor:
     def run_query(self, *, n_tools_in_prompt: int, n_calls: int,
                   selection_correct: bool, variant: str,
                   mode: OperatingMode) -> QueryExecution:
+        """DEPRECATED blocking shim (one release): the session API
+        (`begin_query` + `settle`) is the one executor contract."""
+        warnings.warn(
+            "Executor.run_query is deprecated; use begin_query(...) + "
+            "settle([...]) — the async session API is the one contract",
+            DeprecationWarning, stacklevel=2)
+        return self._execute(
+            n_tools_in_prompt=n_tools_in_prompt, n_calls=n_calls,
+            selection_correct=selection_correct, variant=variant, mode=mode)
+
+    def _execute(self, *, n_tools_in_prompt: int, n_calls: int,
+                 selection_correct: bool, variant: str,
+                 mode: OperatingMode) -> QueryExecution:
         pm, prof = self.power_model, self.profile
         prompt = QUERY_TOKENS + n_tools_in_prompt * TOKENS_PER_TOOL
         # prefill is compute-bound (pulls toward the cap); decode is

@@ -60,7 +60,8 @@ from repro.core.carbon import carbon_footprint, ci_trace
 from repro.core.governor import GovernorState
 from repro.core.runtime import CarbonCallRuntime, PendingQuery, QueryRecord
 from repro.data.workload import FunctionCallWorkload, QoSTier
-from repro.serving import EngineClient, VirtualClock
+from repro.serving import (EngineClient, EngineConfig, EngineStats,
+                           VirtualClock)
 
 # routing proxy for one not-yet-settled query's latency contribution
 # (an in-step submission must repel further arrivals before its real
@@ -86,8 +87,12 @@ class PodState:
     client: Optional[EngineClient] = None   # shared-engine facade (engine bk.)
     region: str = ""                  # grid region this pod sits in
     profile: str = ""                 # hardware profile name (telemetry)
-    engine_kw: Dict = dataclasses.field(default_factory=dict)  # pod sizing
+    engine_cfg: Optional[EngineConfig] = None   # serializable pod sizing —
+    # the SAME payload a worker process is constructed from (launch/workers)
     fleet_clock: Optional[VirtualClock] = None   # set by run_fleet (engine)
+    worker: Optional[object] = None   # WorkerHandle when out-of-process
+    last_stats: Optional[EngineStats] = None  # latest stats shipped back
+    # over the control protocol (worker pods; refreshed per settle round)
 
     def ci_at(self, i: int) -> float:
         return float(self.ci_trace[i % len(self.ci_trace)])
@@ -97,7 +102,9 @@ class PodState:
         """Decode-slot count without forcing a lazy engine build."""
         if self.client is not None:
             return self.client.engine.max_batch
-        return int(self.engine_kw.get("max_batch", 2))
+        if self.engine_cfg is not None:
+            return self.engine_cfg.max_batch
+        return 2
 
     def ensure_client(self):
         """Build the pod's shared engine on first routed query. Constructing
@@ -107,15 +114,11 @@ class PodState:
         No-op for sim-backed runs (no fleet clock) and already-built pods."""
         if self.fleet_clock is None or self.client is not None:
             return self.client
-        kw = dict(self.engine_kw)
-        shards = int(kw.pop("data_shards", 1))
-        if shards > 1:
-            from repro.launch.mesh import make_data_mesh
-            # layout is NOT forced here: engine_kw() already wrote "dense"
-            # and ServingEngine(mesh=...) validates it ("auto" also resolves
-            # to dense under a mesh)
-            kw["mesh"] = make_data_mesh(shards)
-        self.runtime.use_backend("engine", clock=self.fleet_clock, **kw)
+        # the EngineConfig carries the full sizing, including data_shards
+        # (the executor materializes the mesh; build_fleet already degraded
+        # shard counts the process cannot host)
+        self.runtime.use_backend("engine", clock=self.fleet_clock,
+                                 config=self.engine_cfg)
         self.client = self.runtime.executor.client
         return self.client
 
@@ -142,6 +145,14 @@ class FleetRouter:
             depth = len(eng.pending) + pod.inflight
             free_slots = max(0, eng.max_batch - eng.active)
             return pod.queue_s + max(0, depth - free_slots) * self.service_s
+        if pod.worker is not None:
+            # out-of-process pod: the scheduler depth travels back as
+            # EngineStats over the control protocol (a worker drains between
+            # arrival steps, so every decode slot counts as free)
+            st = pod.last_stats
+            depth = (st.waiting if st is not None else 0) + pod.inflight
+            return pod.queue_s + max(0, depth - pod.slot_capacity) \
+                * self.service_s
         return pod.queue_s + pod.inflight * self.service_s
 
     def _score(self, pod: PodState, i: int,
@@ -202,21 +213,19 @@ class HardwareProfile:
     kv_layout: str = "auto"
     data_shards: int = 1
 
-    def engine_kw(self) -> Dict:
+    def engine_config(self) -> EngineConfig:
+        """The profile as a serializable `EngineConfig` — the one payload
+        that sizes an in-process engine AND ships to a worker process over
+        the control protocol."""
         if self.data_shards > 1 and self.kv_layout == "paged":
             raise ValueError(
                 f"profile {self.name!r}: the paged block pool is per-pod "
                 "state — a sharded profile (data_shards > 1) requires "
                 "kv_layout 'dense' (or 'auto')")
-        kw: Dict = {"max_batch": self.max_batch, "max_seq": self.max_seq}
-        if self.num_blocks is not None:
-            kw["num_blocks"] = self.num_blocks
-        if self.kv_layout != "auto":
-            kw["kv_layout"] = self.kv_layout
-        if self.data_shards > 1:
-            kw["data_shards"] = self.data_shards
-            kw["kv_layout"] = "dense"
-        return kw
+        layout = "dense" if self.data_shards > 1 else self.kv_layout
+        return EngineConfig(max_batch=self.max_batch, max_seq=self.max_seq,
+                            kv_layout=layout, num_blocks=self.num_blocks,
+                            data_shards=self.data_shards)
 
 
 DEFAULT_PROFILES: Tuple[HardwareProfile, ...] = (
@@ -347,7 +356,21 @@ class Fleet:
 
     def built_pods(self) -> List[PodState]:
         """Pods whose engine was actually constructed (traffic reached them)."""
-        return [p for p in self.pods if p.client is not None]
+        return [p for p in self.pods
+                if p.client is not None or p.worker is not None]
+
+    def engine_stats(self) -> Optional[EngineStats]:
+        """Fleet-wide telemetry: the `EngineStats.merge` of every built
+        pod — live engines read fresh, worker pods contribute the latest
+        stats shipped back over the control protocol. None until traffic
+        has reached at least one pod."""
+        stats: List[EngineStats] = []
+        for p in self.pods:
+            if p.worker is not None and p.last_stats is not None:
+                stats.append(p.last_stats)
+            elif p.client is not None:
+                stats.append(p.client.engine.stats())
+        return EngineStats.merge(stats) if stats else None
 
 
 def build_fleet(spec: FleetSpec, *, catalog=None, selector=None,
@@ -388,19 +411,16 @@ def build_fleet(spec: FleetSpec, *, catalog=None, selector=None,
                     selector=selector, executor=ex, policy=policy,
                     modes=modes_for(prof.hw),
                     catalog_size=len(catalog.tools), seed=pod_id)
-                kw = prof.engine_kw()
-                if kw.get("data_shards", 1) > n_devices:
-                    # degrade to unsharded, keeping the profile's own
+                cfg = prof.engine_config()
+                if cfg.data_shards > n_devices:
+                    # degrade to unsharded, restoring the profile's own
                     # declared layout (not the mesh-forced "dense")
-                    kw.pop("data_shards")
-                    if prof.kv_layout != "auto":
-                        kw["kv_layout"] = prof.kv_layout
-                    else:
-                        kw.pop("kv_layout", None)
+                    cfg = cfg.replace(data_shards=1,
+                                      kv_layout=prof.kv_layout)
                 pods.append(PodState(
                     pod_id=pod_id, runtime=rt, ci_trace=ci,
                     gov_state=rt.governor.init(ci[:144]),
-                    region=rs.name, profile=prof.name, engine_kw=kw))
+                    region=rs.name, profile=prof.name, engine_cfg=cfg))
                 pod_id += 1
         regions.append(RegionState(name=rs.name, ci_trace=ci, pods=pods))
     return Fleet(spec=spec, regions=regions)

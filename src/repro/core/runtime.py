@@ -14,12 +14,13 @@ in arrival order. Backends that can overlap work (`max_concurrency > 1`, i.e.
 the engine) receive a whole arrival step's worth of sessions before settling,
 so concurrent users share decode steps; the analytic backend settles each
 session immediately, which keeps `run_week(backend="sim")` results
-bit-identical to the old blocking `handle_query` contract (itself retained as
-a shim over submit+settle).
+bit-identical to the old blocking `handle_query` contract (itself deprecated,
+retained one release as a warning shim over submit+settle).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
@@ -261,8 +262,13 @@ class CarbonCallRuntime:
 
     def handle_query(self, t: float, query: Query, ci: float,
                      gov_state: GovernorState) -> QueryRecord:
-        """Blocking shim: submit + settle of a single query (the pre-session
-        API, kept for callers that don't batch arrivals)."""
+        """DEPRECATED blocking shim (one release): submit + settle of a
+        single query. The session API (`submit_query` + `settle`) is the
+        one runtime contract — batch arrivals and settle them together."""
+        warnings.warn(
+            "CarbonCallRuntime.handle_query is deprecated; use "
+            "submit_query(...) + settle([...]) — the async session API is "
+            "the one contract", DeprecationWarning, stacklevel=2)
         return self.settle([self.submit_query(t, query, ci, gov_state)])[0]
 
 

@@ -3,10 +3,17 @@ config, CPU) — tool selection, CI-driven operating modes, and live Q8/Q4
 hot-swap on the serving engine.
 
   PYTHONPATH=src python -m repro.launch.serve --queries 12 --minutes-per-query 30
+
+With ``--workers N`` the same query stream is served by N worker PROCESSES
+behind the engine control protocol (launch/workers.py): each worker builds
+its own engine from the serialized `EngineConfig` + reduced model config,
+queries round-robin across them as `SessionRequest` wire payloads, and
+telemetry comes back as versioned `EngineStats`.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import numpy as np
@@ -22,8 +29,16 @@ from repro.core.power import PowerModel
 from repro.data.workload import build_catalog, FunctionCallWorkload
 from repro.models import get_model
 from repro.quant import quantize_tree
-from repro.serving import Request, ServingEngine
+from repro.serving import (EngineConfig, EngineStats, ServingEngine,
+                           SessionRequest, WorkerSpec)
 from repro.sharding.param import init_params
+
+
+def _prompt_for(text: str, vocab_size: int):
+    import hashlib
+    return [2 + (int.from_bytes(hashlib.md5(w.encode()).digest()[:4],
+                                'little') % (vocab_size - 2))
+            for w in text.lower().split()][:24]
 
 
 def main():
@@ -33,19 +48,35 @@ def main():
     ap.add_argument("--minutes-per-query", type=float, default=30.0)
     ap.add_argument("--week", default="week1")
     ap.add_argument("--max-new-tokens", type=int, default=12)
+    ap.add_argument("--workers", type=int, default=0,
+                    help="serve through N worker processes behind the "
+                         "control protocol (0 = in-process engine)")
     args = ap.parse_args()
 
     cfg = reduce_config(get_arch(args.arch))
-    rcfg = RuntimeConfig()
-    model = get_model(cfg)
-    spec = model.param_spec()
-    params = init_params(spec, jax.random.PRNGKey(0))
-    variants = {
-        "q8": quantize_tree(params, spec, "q8"),
-        "q4": quantize_tree(params, spec, "q4"),
-    }
-    engine = ServingEngine(cfg, variants["q8"], rcfg, max_batch=4, max_seq=128)
-    engine.variant_name = "q8"
+    econfig = EngineConfig(max_batch=4, max_seq=128)
+    workers = []
+    client = None
+    if args.workers > 0:
+        from repro.launch.workers import launch_workers
+        specs = [WorkerSpec(config=econfig,
+                            model_cfg=dataclasses.asdict(cfg), seed=w,
+                            label=f"serve-w{w}")
+                 for w in range(args.workers)]
+        workers = launch_workers(specs)
+        print(f"[serve] {len(workers)} worker process(es) ready")
+    else:
+        rcfg = RuntimeConfig()
+        model = get_model(cfg)
+        spec = model.param_spec()
+        params = init_params(spec, jax.random.PRNGKey(0))
+        variants = {
+            "q8": quantize_tree(params, spec, "q8"),
+            "q4": quantize_tree(params, spec, "q4"),
+        }
+        engine = ServingEngine(cfg, variants["q8"], rcfg, config=econfig)
+        engine.variant_name = "q8"
+        client = engine.client()
 
     cat = build_catalog(64, seed=0)
     selector = ToolSelector(cat)
@@ -67,13 +98,19 @@ def main():
         mode = governor.mode(state)
         q = workload.sample()
         sel = selector.select(q.text)
-        # serve a real request through the engine
-        prompt = [2 + (int.from_bytes(__import__('hashlib').md5(w.encode()).digest()[:4], 'little') % (cfg.vocab_size - 2))
-                  for w in q.text.lower().split()][:24]
-        engine.submit(Request(rid=qi, prompt=prompt,
-                              max_new_tokens=args.max_new_tokens, eos_id=-1))
-        done = engine.run_until_drained()
-        tps = engine.recent_tps()
+        # serve a real request through the engine / a worker
+        sreq = SessionRequest(prompt=_prompt_for(q.text, cfg.vocab_size),
+                              max_new_tokens=args.max_new_tokens, eos_id=-1)
+        if workers:
+            w = workers[qi % len(workers)]
+            res = w.settle([w.submit(sreq)])[0]
+            tokens = len(res.output)
+            tps = w.stats().decode_tps
+        else:
+            h = client.submit(sreq)
+            client.settle([h])
+            tokens = len(h.request.output)
+            tps = client.engine.recent_tps()
         # TPS model at this mode feeds the switcher (CPU wall time is not
         # Orin TPS; scale by the mode ladder)
         mode_tps = 20.0 * (0.3 + 0.7 * mode.f_gpu / ORIN_MODES[0].f_gpu) * \
@@ -82,7 +119,12 @@ def main():
         dec = switcher.decide(t_virtual)
         if dec.switch_to:
             switcher.apply(t_virtual, dec)
-            engine.swap_params(variants[switcher.variant], switcher.variant)
+            if workers:
+                for w in workers:
+                    w.call("swap", variant=switcher.variant)
+            else:
+                client.engine.swap_params(variants[switcher.variant],
+                                          switcher.variant)
             print(f"  >> variant switch -> {switcher.variant} ({dec.reason})")
         exec_s = args.max_new_tokens / mode_tps
         energy = pm.power(mode) * exec_s
@@ -90,11 +132,17 @@ def main():
         total_cf += cf
         print(f"[serve] q{qi:02d} ci={ci[idx]:.0f} mode=m{mode.index} "
               f"variant={switcher.variant} tools={sel.tool_ids[:4]} "
-              f"tokens={sum(len(d.output) for d in done)} "
-              f"engine_tps={tps:.1f} cf={cf*1000:.1f} mgCO2")
+              f"tokens={tokens} engine_tps={tps:.1f} cf={cf*1000:.1f} mgCO2")
         t_virtual += args.minutes_per_query * 60.0
     print(f"[serve] total carbon: {total_cf*1000:.1f} mgCO2 over "
           f"{args.queries} queries")
+    if workers:
+        agg = EngineStats.merge([w.stats() for w in workers])
+        print(f"[serve] fleet stats v{agg.schema_version}: "
+              f"admitted={agg.admitted} tokens={agg.tokens_emitted} "
+              f"swaps={agg.swap_count}")
+        for w in workers:
+            w.close()
 
 
 if __name__ == "__main__":

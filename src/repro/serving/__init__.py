@@ -1,6 +1,12 @@
 from repro.serving.block_pool import BlockPool, PrefixCache, PrefixEntry
 from repro.serving.engine import (EngineClient, Request, ServingEngine,
                                   VirtualClock)
+from repro.serving.invariants import check_invariants
+from repro.serving.protocol import (PROTOCOL_VERSION, STATS_SCHEMA_VERSION,
+                                    EngineConfig, EngineStats, ProtocolError,
+                                    QuerySpec, RequestResult, WorkerSpec,
+                                    session_request_from_wire,
+                                    session_request_to_wire)
 from repro.serving.sampler import sample_tokens
 from repro.serving.scheduler import (DeadlineExpiredError, EngineStallError,
                                      PoolExhaustedError,
@@ -11,4 +17,9 @@ __all__ = ["BlockPool", "PrefixCache", "PrefixEntry", "ServingEngine",
            "EngineClient", "Request", "RequestHandle", "Scheduler",
            "SessionRequest", "VirtualClock", "EngineStallError",
            "PoolExhaustedError", "DeadlineExpiredError",
-           "RequestCancelledError", "sample_tokens"]
+           "RequestCancelledError", "sample_tokens",
+           # control protocol (serializable engine surface)
+           "PROTOCOL_VERSION", "STATS_SCHEMA_VERSION", "EngineConfig",
+           "EngineStats", "ProtocolError", "QuerySpec", "RequestResult",
+           "WorkerSpec", "session_request_from_wire",
+           "session_request_to_wire", "check_invariants"]

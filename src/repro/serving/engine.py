@@ -93,6 +93,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 from repro.config import ModelConfig, RuntimeConfig
 from repro.models import get_model
 from repro.serving.block_pool import BlockPool, PrefixCache
+from repro.serving.protocol import EngineConfig, EngineStats
 from repro.serving.sampler import sample_tokens
 from repro.serving.scheduler import (
     CANCELLED, DONE, EngineStallError, PoolExhaustedError, RequestHandle,
@@ -318,14 +319,41 @@ class _EngineExec:
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, rcfg: RuntimeConfig, *,
-                 max_batch: int = 4, max_seq: int = 256,
-                 prompt_buckets=(32, 64, 128),
-                 kv_layout: str = "auto", block_size: int = 16,
+                 config: Optional[EngineConfig] = None,
+                 max_batch: Optional[int] = None,
+                 max_seq: Optional[int] = None,
+                 prompt_buckets=None,
+                 kv_layout: Optional[str] = None,
+                 block_size: Optional[int] = None,
                  num_blocks: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  mesh=None,
                  clock: Callable[[], float] = time.monotonic,
                  step_cost_fn: Optional[Callable[[str, int, int], float]] = None):
+        # sizing comes from ONE serializable EngineConfig (the control
+        # protocol's construction payload); the explicit kwargs remain as
+        # per-field overrides so existing call sites read unchanged. None
+        # means "no override" — EngineConfig's own defaults match the
+        # pre-protocol keyword defaults exactly.
+        base = config if config is not None else EngineConfig()
+        over = {k: v for k, v in (("max_batch", max_batch),
+                                  ("max_seq", max_seq),
+                                  ("kv_layout", kv_layout),
+                                  ("block_size", block_size),
+                                  ("num_blocks", num_blocks),
+                                  ("prefill_chunk", prefill_chunk))
+                if v is not None}
+        if prompt_buckets is not None:
+            over["prompt_buckets"] = tuple(prompt_buckets)
+        self.config = base.replace(**over) if over else base
+        config = self.config
+        max_batch = config.max_batch
+        max_seq = config.max_seq
+        prompt_buckets = config.prompt_buckets
+        kv_layout = config.kv_layout
+        block_size = config.block_size
+        num_blocks = config.num_blocks
+        prefill_chunk = config.prefill_chunk
         self.cfg = cfg
         self.rcfg = rcfg
         self.model = get_model(cfg)
@@ -622,6 +650,13 @@ class ServingEngine:
                 "free_blocks": self.block_pool.num_free,
                 "prefill_tokens_total": self.prefill_tokens_total,
                 "prefill_tokens_saved": self.prefill_tokens_saved}
+
+    def stats(self) -> EngineStats:
+        """The versioned telemetry snapshot (protocol.EngineStats): one
+        schema unifying `scheduler_stats()` + `prefix_cache_stats()` plus
+        swap/token counters — what a worker publishes over the wire and
+        what the JSON benchmark artifacts persist."""
+        return EngineStats.from_engine(self)
 
     def step(self) -> List[Request]:
         """Admit waiting requests into free slots (one batched prefill, one

@@ -27,8 +27,15 @@ def _write_bench(dirpath, *, tps=70.0, carbon=0.0028, day_tps=12.0):
     (dirpath / "engine_week.json").write_text(json.dumps({
         "decode_tps": {"1": 17.0, "4": tps},
         "day": {"avg_tps": day_tps, "avg_carbon_g": carbon, "queries": 100},
-        "prefix_cache": {"hits": 90, "misses": 10},
-        "scheduler": {"admitted": 100, "preemptions": 2, "expired": 1},
+        # versioned EngineStats wire payload (schema_version travels inside)
+        "engine_stats": {"schema_version": 1, "admitted": 100,
+                         "preemptions": 2, "expired": 1,
+                         "prefix_cache": {"hits": 90, "misses": 10}},
+    }))
+    (dirpath / "fleet_workers.json").write_text(json.dumps({
+        "workers": {"n_workers": 4, "agg_decode_tps": 2 * tps,
+                    "carbon_g_per_query": carbon},
+        "acceptance": {"wall_speedup": 1.6, "pass": True},
     }))
 
 
@@ -45,6 +52,11 @@ def test_collect_extracts_tagged_metrics(tmp_path):
     assert m["chunked_prefill/decode_tps"].direction == HIGHER
     assert m["chunked_prefill/chunk_steps"].direction == INFO
     assert m["chunked_prefill/acceptance_pass"].value == 1.0
+    # fleet_workers suite: virtual TPS + carbon gate, wall speedup is info
+    assert m["fleet_workers/agg_decode_tps"].direction == HIGHER
+    assert m["fleet_workers/carbon_g_per_query"].direction == LOWER
+    assert m["fleet_workers/wall_speedup"].direction == INFO
+    assert m["fleet_workers/acceptance_pass"].value == 1.0
     # missing dir / empty dir -> empty mapping, never raises
     assert collect(str(tmp_path / "nope")) == {}
 

@@ -27,7 +27,9 @@ def _run(ex, **kw):
     base = dict(n_tools_in_prompt=2, n_calls=1, selection_correct=True,
                 variant="q8", mode=ORIN_MODES[0])
     base.update(kw)
-    return ex.run_query(**base)
+    s = ex.begin_query(**base)
+    ex.settle([s])
+    return s.execution
 
 
 def test_make_executor_backends(engine_ex):
@@ -60,7 +62,7 @@ def test_degraded_mode_lowers_engine_tps(engine_ex):
     assert slow.latency_s > fast.latency_s
 
 
-def test_run_query_emits_real_tokens(engine_ex):
+def test_sessions_emit_real_tokens(engine_ex):
     before = engine_ex.engine.tokens_emitted
     qe = _run(engine_ex, n_calls=2)
     emitted = engine_ex.engine.tokens_emitted - before
@@ -68,6 +70,17 @@ def test_run_query_emits_real_tokens(engine_ex):
                                     + engine_ex.eval_tokens)
     assert emitted >= qe.decode_tokens
     assert qe.tps > 0 and qe.energy_j > 0
+
+
+def test_run_query_shim_warns_but_works(engine_ex):
+    """The retired blocking contract survives one release as a warning
+    alias over begin_query + settle, on both backends."""
+    for ex in (SimExecutor(PROF, ORIN_AGX, seed=0), engine_ex):
+        with pytest.warns(DeprecationWarning, match="run_query is deprecated"):
+            qe = ex.run_query(n_tools_in_prompt=1, n_calls=1,
+                              selection_correct=True, variant="q8",
+                              mode=ORIN_MODES[0])
+        assert qe.succeeded and qe.decode_tokens > 0
 
 
 def test_live_swap_follows_requested_variant(engine_ex):

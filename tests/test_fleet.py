@@ -134,7 +134,7 @@ def test_fleet_spec_build(setup):
     assert fleet.regions[0].ci_at(0) < fleet.regions[1].ci_at(0)
     # single-device test process: the sharded profile degrades to unsharded
     dp = next(p for p in fleet.pods if p.profile == "pod-dp4")
-    assert "data_shards" not in dp.engine_kw
+    assert dp.engine_cfg.data_shards == 1
     assert fleet.router is not None and len(fleet.router.pods) == 4
     assert fleet.built_pods() == []            # nothing constructed yet
 

@@ -1,0 +1,185 @@
+"""Wire-contract tests for the frozen engine control protocol.
+
+Every payload that crosses the fleet/worker process boundary must survive a
+``to_wire()`` -> JSON -> ``from_wire()`` round trip unchanged, tolerate
+unknown keys from a *newer* writer (forward compatibility), and refuse a
+payload stamped with a newer protocol/schema version than this reader
+understands (a stale reader must fail loudly, never mis-parse). These tests
+are pure Python — no engine, no jax — so they pin the contract cheaply.
+"""
+import json
+
+import pytest
+
+from repro.serving import (EngineConfig, EngineStats, ProtocolError,
+                           QuerySpec, RequestResult, SessionRequest,
+                           WorkerSpec, session_request_from_wire,
+                           session_request_to_wire)
+from repro.serving.protocol import PROTOCOL_VERSION, STATS_SCHEMA_VERSION
+
+
+def _json_trip(wire):
+    """The wire dict must be JSON-safe — the protocol's whole point."""
+    return json.loads(json.dumps(wire))
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig
+# ---------------------------------------------------------------------------
+
+
+def test_engine_config_round_trip():
+    cfg = EngineConfig(max_batch=3, max_seq=64, prompt_buckets=(16, 32),
+                       kv_layout="paged", block_size=8, num_blocks=16,
+                       prefill_chunk=16, data_shards=2, variants=("q4",))
+    back = EngineConfig.from_wire(_json_trip(cfg.to_wire()))
+    assert back == cfg
+    assert isinstance(back.prompt_buckets, tuple)
+    assert isinstance(back.variants, tuple)
+
+
+def test_engine_config_defaults_and_replace():
+    cfg = EngineConfig()
+    assert cfg.replace(max_batch=8).max_batch == 8
+    assert cfg.max_batch == 4              # frozen: replace returns a copy
+    assert EngineConfig.from_wire({}) == cfg   # missing keys -> defaults
+
+
+def test_engine_config_ignores_unknown_keys():
+    wire = EngineConfig().to_wire()
+    wire["flux_capacitor"] = 88            # a newer writer's field
+    assert EngineConfig.from_wire(wire) == EngineConfig()
+
+
+def test_engine_config_rejects_newer_version():
+    wire = EngineConfig().to_wire()
+    wire["v"] = PROTOCOL_VERSION + 1
+    with pytest.raises(ProtocolError, match="newer than supported"):
+        EngineConfig.from_wire(wire)
+
+
+# ---------------------------------------------------------------------------
+# EngineStats
+# ---------------------------------------------------------------------------
+
+
+def _stats(**kw):
+    base = dict(admitted=10, preemptions=2, requeues=2, expired=1,
+                cancelled=1, chunk_steps=4, chunk_drops=0, queue_wait_s=1.5,
+                waiting=0, peak_active=3, swap_count=2, tokens_emitted=80,
+                decode_tps=40.0,
+                tiers={"interactive": {"submitted": 5, "done": 4,
+                                       "p95_latency_s": 2.0}},
+                prefix_cache={"hits": 9, "misses": 3})
+    base.update(kw)
+    return EngineStats(**base)
+
+
+def test_engine_stats_round_trip():
+    st = _stats()
+    back = EngineStats.from_wire(_json_trip(st.to_wire()))
+    assert back == st
+    assert back.schema_version == STATS_SCHEMA_VERSION
+
+
+def test_engine_stats_rejects_newer_schema():
+    wire = _stats().to_wire()
+    wire["schema_version"] = STATS_SCHEMA_VERSION + 1
+    with pytest.raises(ProtocolError, match="newer than supported"):
+        EngineStats.from_wire(wire)
+
+
+def test_engine_stats_merge_semantics():
+    a = _stats()
+    b = _stats(admitted=5, peak_active=7, decode_tps=10.0,
+               tiers={"interactive": {"submitted": 2, "done": 2,
+                                      "p95_latency_s": 5.0},
+                      "batch": {"submitted": 1, "done": 1}},
+               prefix_cache={"hits": 1, "misses": 1})
+    m = EngineStats.merge([a, b])
+    assert m.admitted == 15                # counters sum
+    assert m.tokens_emitted == 160
+    assert m.peak_active == 7              # concurrency peaks take the max
+    assert m.decode_tps == 50.0            # independent timelines: additive
+    ti = m.tiers["interactive"]
+    assert ti["submitted"] == 7            # tier counters sum...
+    assert ti["p95_latency_s"] == 5.0      # ...percentiles take the max
+    assert m.tiers["batch"]["submitted"] == 1
+    assert m.prefix_cache == {"hits": 10, "misses": 4}
+
+
+def test_engine_stats_merge_empty():
+    assert EngineStats.merge([]) == EngineStats()
+
+
+# ---------------------------------------------------------------------------
+# SessionRequest / QuerySpec / RequestResult
+# ---------------------------------------------------------------------------
+
+
+def test_session_request_round_trip():
+    sreq = SessionRequest(prompt=[3, 3, 5, 7], max_new_tokens=6, eos_id=-1,
+                          temperature=0.0, priority=2, deadline_s=4.5,
+                          tier="interactive")
+    back = session_request_from_wire(_json_trip(session_request_to_wire(sreq)))
+    assert back == sreq
+    assert all(isinstance(t, int) for t in back.prompt)
+
+
+def test_session_request_version_and_unknown_keys():
+    wire = session_request_to_wire(SessionRequest(prompt=[1, 2]))
+    wire["shiny_new_field"] = True
+    assert session_request_from_wire(wire).prompt == [1, 2]
+    wire["v"] = PROTOCOL_VERSION + 1
+    with pytest.raises(ProtocolError):
+        session_request_from_wire(wire)
+
+
+def test_query_spec_round_trip():
+    qs = QuerySpec(n_tools=3, n_calls=2, selection_correct=False,
+                   variant="q4", mode_index=1, priority=2, deadline_s=9.0,
+                   tier="standard")
+    assert QuerySpec.from_wire(_json_trip(qs.to_wire())) == qs
+    wire = qs.to_wire()
+    wire["v"] = PROTOCOL_VERSION + 1
+    with pytest.raises(ProtocolError):
+        QuerySpec.from_wire(wire)
+
+
+def test_request_result_round_trip():
+    rr = RequestResult(rid=7, status="done", output=(5, 6, 7),
+                       submit_time=1.0, done_time=3.5, first_token_time=1.2,
+                       queue_wait_s=0.4, tier="batch")
+    back = RequestResult.from_wire(_json_trip(rr.to_wire()))
+    assert back == rr
+    assert isinstance(back.output, tuple)
+
+
+# ---------------------------------------------------------------------------
+# WorkerSpec
+# ---------------------------------------------------------------------------
+
+
+def test_worker_spec_round_trip_executor_mode():
+    ws = WorkerSpec(config=EngineConfig(max_batch=2), profile="qwen2-7b",
+                    hw="tpu_v5e", seed=3, label="eu-west/pod1")
+    back = WorkerSpec.from_wire(_json_trip(ws.to_wire()))
+    assert back == ws
+    assert back.model_cfg is None
+
+
+def test_worker_spec_round_trip_raw_mode():
+    ws = WorkerSpec(config=EngineConfig(max_batch=3, kv_layout="paged",
+                                        num_blocks=16),
+                    model_cfg={"name": "soak-tiny", "family": "transformer",
+                               "num_layers": 2}, label="soak0")
+    back = WorkerSpec.from_wire(_json_trip(ws.to_wire()))
+    assert back == ws
+    assert back.config.num_blocks == 16
+
+
+def test_worker_spec_rejects_newer_version():
+    wire = WorkerSpec().to_wire()
+    wire["v"] = PROTOCOL_VERSION + 1
+    with pytest.raises(ProtocolError):
+        WorkerSpec.from_wire(wire)

@@ -29,8 +29,17 @@ invariants that must survive any interleaving:
 
 The default loop runs a 3-seed quick variant; the nightly `slow` job runs
 10 seeds x ~400 events.
+
+Multi-process mode: the same invariants must survive a PROCESS boundary.
+A pre-generated event stream (pure — no engine-state dependence, so every
+replica sees byte-identical ops) is replayed against an in-process
+`EngineActor` and >= 2 spawned raw-mode workers speaking the control
+protocol. Identical replicas on identical virtual clocks must produce
+identical terminal results, identical `EngineStats`, and a clean invariant
+sweep (`check` op) — refcount/counter reconciliation included.
 """
 import collections
+import dataclasses
 
 import jax
 import numpy as np
@@ -295,3 +304,128 @@ def test_soak_nightly(variants):
     assert totals["chunk_steps"] >= 10
     assert totals["preemptions"] >= 1
     assert totals["expired"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Multi-process mode
+# ---------------------------------------------------------------------------
+
+from repro.launch.workers import (EngineActor, WorkerSpec,      # noqa: E402
+                                  launch_workers, shutdown_workers)
+from repro.serving import EngineConfig, EngineStats             # noqa: E402
+
+SOAK_ECFG = EngineConfig(max_batch=MAX_BATCH, max_seq=MAX_SEQ,
+                         kv_layout="paged", block_size=BLOCK_SIZE,
+                         num_blocks=NUM_BLOCKS)
+SOAK_SPEC = WorkerSpec(config=SOAK_ECFG, seed=0,
+                       model_cfg=dataclasses.asdict(CFG), label="soak-mp")
+
+
+def _pure_event_stream(seed: int, n_events: int):
+    """The SoakDriver mix as a PURE list of wire ops: generation never reads
+    engine state (the in-flight estimate is generator-side bookkeeping), so
+    every replica — in-process or spawned — replays the identical bytes."""
+    rng = np.random.default_rng(seed)
+    events, n_submitted, live = [], 0, 0
+    variant = "q8"
+    for _ in range(n_events):
+        u = rng.random()
+        if u < 0.35 and live < 8:
+            base = PREFIXES[int(rng.integers(len(PREFIXES)))]
+            tail = (2 + rng.integers(0, 200, size=int(rng.integers(2, 8))))
+            prio = int(rng.integers(0, 3))
+            rel = float(rng.uniform(3.0, 25.0)) \
+                if rng.random() < 0.3 else None
+            events.append(("submit", {
+                "v": 1, "prompt": list(base) + [int(t) for t in tail],
+                "max_new_tokens": int(rng.integers(3, 9)), "eos_id": -1,
+                "temperature": 0.0, "priority": prio, "deadline_s": rel,
+                "tier": TIER_BY_PRIORITY[prio]}))
+            n_submitted += 1
+            live += 1
+        elif u < 0.75:
+            events.append(("step", {"n": 1}))
+            live = max(0, live - 1)      # rough decay, bookkeeping only
+        elif u < 0.83 and n_submitted:
+            # cancel by submission index: rids are allocated in submission
+            # order, so the index resolves identically on every replica
+            # (cancelling an already-terminal stream is a no-op everywhere)
+            events.append(("cancel_idx", int(rng.integers(n_submitted))))
+        elif u < 0.90:
+            variant = "q4" if variant == "q8" else "q8"
+            events.append(("swap", variant))
+        else:
+            events.append(("advance", {"dt": float(rng.uniform(0.5, 3.0))}))
+    return events
+
+
+class _LocalActor:
+    """In-process replica with the worker's exact op surface — the control
+    protocol's dispatcher run without a pipe."""
+
+    def __init__(self, spec):
+        self.actor = EngineActor(spec)
+
+    def call(self, op, **payload):
+        return self.actor.handle(op, payload)
+
+
+def _replay(target, events):
+    rids = []
+    for kind, payload in events:
+        if kind == "submit":
+            rids.append(target.call("submit", request=payload)["rid"])
+        elif kind == "cancel_idx":
+            target.call("cancel", rid=rids[payload])
+        elif kind == "swap":
+            target.call("swap", variant=payload)
+        else:
+            target.call(kind, **payload)
+    target.call("drain")
+    stats = EngineStats.from_wire(target.call("stats")["stats"])
+    results = target.call("results")["results"]
+    violations = target.call("check", flush=True)["violations"]
+    return results, stats, violations
+
+
+def _mp_soak(seed: int, n_events: int, n_workers: int = 2):
+    events = _pure_event_stream(seed, n_events)
+    specs = [dataclasses.replace(SOAK_SPEC, label=f"soak-mp{w}")
+             for w in range(n_workers)]
+    workers = launch_workers(specs)
+    try:
+        replicas = [_replay(_LocalActor(SOAK_SPEC), events)]
+        replicas += [_replay(w, events) for w in workers]
+    finally:
+        shutdown_workers(workers)
+
+    ref_results, ref_stats, _ = replicas[0]
+    for results, stats, violations in replicas:
+        assert violations == []          # refcounts/counters reconcile
+        # token/status parity: the process boundary changed NOTHING
+        assert results == ref_results
+        assert stats == ref_stats
+    by_status = collections.Counter(r["status"] for r in ref_results)
+    return {"submitted": len(ref_results), "done": by_status["done"],
+            "cancelled": by_status["cancelled"], "stats": ref_stats}
+
+
+def test_soak_multiprocess_quick():
+    out = _mp_soak(seed=7, n_events=120, n_workers=2)
+    assert out["submitted"] >= 10
+    assert out["done"] >= 5              # parity compared real decodes
+    assert out["stats"].tokens_emitted > 0
+
+
+@pytest.mark.slow
+def test_soak_multiprocess_nightly():
+    totals = collections.Counter()
+    for seed in (200, 201, 202):
+        out = _mp_soak(seed=seed, n_events=350, n_workers=3)
+        totals["submitted"] += out["submitted"]
+        totals["done"] += out["done"]
+        totals["cancelled"] += out["cancelled"]
+        totals["preemptions"] += out["stats"].preemptions
+    assert totals["done"] >= 30
+    assert totals["cancelled"] >= 1      # the cancel path actually fired
+    assert totals["preemptions"] >= 1    # pool pressure actually fired
