@@ -14,10 +14,10 @@ def emit(name: str, us_per_call: float, derived: str = ""):
 
 def timed(name: str, fn: Callable, *, repeats: int = 3, derived_fn=None):
     fn()                                     # warmup / compile
-    t0 = time.perf_counter()
+    t0 = time.perf_counter()  # cc-lint: disable=CC001 -- real wall-clock is the measurement here
     out = None
     for _ in range(repeats):
         out = fn()
-    us = (time.perf_counter() - t0) / repeats * 1e6
+    us = (time.perf_counter() - t0) / repeats * 1e6  # cc-lint: disable=CC001 -- real wall-clock is the measurement here
     emit(name, us, derived_fn(out) if derived_fn else "")
     return out

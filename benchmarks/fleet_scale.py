@@ -34,18 +34,18 @@ if __name__ == "__main__":
     os.environ["XLA_FLAGS"] = " ".join(
         ["--xla_force_host_platform_device_count=8"] + _flags)
 
-import argparse
-import json
-import subprocess
-import sys
-import tempfile
-from typing import Dict
+import argparse  # noqa: E402
+import json  # noqa: E402
+import subprocess  # noqa: E402
+import sys  # noqa: E402
+import tempfile  # noqa: E402
+from typing import Dict  # noqa: E402
 
-from benchmarks.common import emit
-from repro.core.fleet import (DEFAULT_PROFILES, FleetSpec, RegionSpec,
+from benchmarks.common import emit  # noqa: E402
+from repro.core.fleet import (DEFAULT_PROFILES, FleetSpec, RegionSpec,  # noqa: E402
                               build_fleet, run_fleet)
-from repro.data.workload import DEFAULT_TIERS, FunctionCallWorkload, \
-    build_catalog
+from repro.data.workload import (DEFAULT_TIERS, FunctionCallWorkload,  # noqa: E402
+                                 build_catalog)
 
 QOS_PR4_CARBON_G = 0.00273   # qos_fleet tiered pressure figure (PR 4)
 FORCED_DEVICES = 8

@@ -7,8 +7,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import timed, emit
-from repro.common.hardware import TPU_V5E, bytes_per_param
+from benchmarks.common import timed
+from repro.common.hardware import TPU_V5E
 from repro.quant import quantize
 from repro.kernels.quant_matmul import ops as qm_ops
 from repro.kernels.flash_attention import ops as fa_ops
@@ -42,7 +42,7 @@ def run():
           lambda: jax.block_until_ready(fa_ops.flash_attention(q, k, v)),
           derived_fn=lambda _: (
               f"flops={flops:.2e} v5e_t_us={flops/TPU_V5E.peak_flops*1e6:.2f} "
-              f"o_s_memory=no_s2_materialization"))
+              "o_s_memory=no_s2_materialization"))
     timed(f"kernels/flash_attention/window_{S}w128",
           lambda: jax.block_until_ready(
               fa_ops.flash_attention(q, k, v, window=128)),

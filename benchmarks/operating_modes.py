@@ -9,7 +9,7 @@ from __future__ import annotations
 
 from benchmarks.common import emit
 from repro.common.hardware import ORIN_AGX, TPU_V5E
-from repro.core import PAPER_MODELS, ORIN_MODES, TPU_MODES
+from repro.core import PAPER_MODELS
 from repro.core.power import PowerModel, modes_for
 
 

@@ -16,7 +16,6 @@ def load_cells(mesh="pod", tag=""):
     cells = []
     for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
         base = os.path.basename(path)[:-5]
-        parts = base.split("_")
         with open(path) as f:
             d = json.load(f)
         if d.get("mesh") != mesh:

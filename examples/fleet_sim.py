@@ -111,7 +111,11 @@ def main():
     wl = FunctionCallWorkload(catalog, seed=5)
     from repro.core import fleet as fleet_mod
     orig = fleet_mod.FleetRouter._score
-    fleet_mod.FleetRouter._score = lambda self, pod, i, tier=None: pod.served
+
+    def _served_only(self, pod, i, tier=None):
+        return pod.served
+
+    fleet_mod.FleetRouter._score = _served_only
     try:
         recs_rr = run_fleet(pods_rr, wl, n_steps=n_steps,
                             queries_per_hour=args.qph)
@@ -123,7 +127,7 @@ def main():
           f"({cf_rr/max(n_rr,1)*1000:.1f} mg/query)")
     if cf_rr > 0:
         print(f"carbon-aware saves {(1 - (cf_aware/max(n_aware,1)) / (cf_rr/max(n_rr,1))):.0%} "
-              f"carbon per query")
+              "carbon per query")
 
 
 if __name__ == "__main__":

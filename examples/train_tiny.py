@@ -7,8 +7,6 @@ scale — budget ~hours on CPU; it is the same code path).
     PYTHONPATH=src python examples/train_tiny.py --preset tiny --steps 200
 """
 import argparse
-import subprocess
-import sys
 
 PRESETS = {
     "tiny": dict(d_model=128, layers=4, vocab=2048, batch=8, seq=128),

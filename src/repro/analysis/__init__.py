@@ -1,0 +1,26 @@
+"""Custom invariant lint suite — see docs/static_analysis.md.
+
+Run with `python -m repro.analysis [paths...]`; library surface is
+`lint_paths` plus the `Rule`/`Violation`/`register` framework types.
+Importing the package registers the built-in CC001–CC006 rules.
+"""
+from repro.analysis.framework import (
+    REGISTRY,
+    FileContext,
+    Rule,
+    Violation,
+    known_codes,
+    lint_file,
+    lint_paths,
+    register,
+    render_human,
+    render_markdown,
+    rule_catalog,
+)
+import repro.analysis.rules  # noqa: F401  (registers the built-in rules)
+
+__all__ = [
+    "REGISTRY", "FileContext", "Rule", "Violation", "known_codes",
+    "lint_file", "lint_paths", "register", "render_human",
+    "render_markdown", "rule_catalog",
+]

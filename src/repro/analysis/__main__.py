@@ -1,0 +1,97 @@
+"""CLI: `python -m repro.analysis [paths...]`.
+
+Exit status 0 = clean, 1 = violations (or unparseable files). Default
+paths are `src benchmarks tests` under `--root` (default: cwd), matching
+the CI gate.
+
+  --json [PATH]     write the JSON report to PATH (default stdout, after
+                    the human output is suppressed)
+  --summary PATH    append a markdown violation table (CI step summary)
+  --update-schema   regenerate the CC003 protocol snapshot from
+                    serving/protocol.py, print the path, and exit
+  --list-rules      print the rule catalog and exit
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis import lint_paths, render_human, render_markdown, \
+    rule_catalog
+from repro.analysis.framework import report_to_json
+from repro.analysis.rules.protocol_freeze import SNAPSHOT, schema_for_snapshot
+
+DEFAULT_PATHS = ["src", "benchmarks", "tests"]
+
+
+def _update_schema(root: Path, schema_path: Path) -> int:
+    proto = root / "src" / "repro" / "serving" / "protocol.py"
+    if not proto.exists():
+        print(f"error: {proto} not found (run from the repo root or pass "
+              "--root)", file=sys.stderr)
+        return 2
+    schema = schema_for_snapshot(ast.parse(proto.read_text(encoding="utf-8")))
+    schema_path.parent.mkdir(parents=True, exist_ok=True)
+    schema_path.write_text(json.dumps(schema, indent=2, sort_keys=True) + "\n",
+                           encoding="utf-8")
+    n = sum(len(c["fields"]) for c in schema["classes"].values())
+    print(f"wrote {schema_path} ({len(schema['classes'])} classes, "
+          f"{n} fields, versions {schema['versions']})")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="custom invariant lint suite (CC001-CC006)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs to lint (default: {DEFAULT_PATHS})")
+    ap.add_argument("--root", type=Path, default=Path.cwd(),
+                    help="repo root for relative paths and rule scoping")
+    ap.add_argument("--json", nargs="?", const="-", default=None,
+                    metavar="PATH", help="JSON report to PATH ('-' = stdout)")
+    ap.add_argument("--summary", type=Path, default=None, metavar="PATH",
+                    help="append a markdown violation table to PATH")
+    ap.add_argument("--schema", type=Path, default=None,
+                    help="override the CC003 protocol schema snapshot path")
+    ap.add_argument("--update-schema", action="store_true",
+                    help="regenerate the CC003 snapshot and exit")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    root = args.root.resolve()
+    schema_path = (args.schema or SNAPSHOT).resolve()
+    if args.update_schema:
+        return _update_schema(root, schema_path)
+    if args.list_rules:
+        for code, desc in rule_catalog().items():
+            print(f"{code}  {desc}")
+        return 0
+
+    paths = [root / p for p in (args.paths or DEFAULT_PATHS)]
+    missing = [p for p in paths if not p.exists()]
+    if missing:
+        print(f"error: no such path(s): {', '.join(map(str, missing))}",
+              file=sys.stderr)
+        return 2
+    report = lint_paths(paths, root,
+                        options={"protocol_schema": schema_path})
+
+    if args.json == "-":
+        print(report_to_json(report))
+    else:
+        if args.json:
+            Path(args.json).write_text(report_to_json(report) + "\n",
+                                       encoding="utf-8")
+        print(render_human(report))
+    if args.summary:
+        with open(args.summary, "a", encoding="utf-8") as f:
+            f.write(render_markdown(report))
+    return 1 if report["violations"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

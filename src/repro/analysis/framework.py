@@ -1,0 +1,304 @@
+"""AST-based invariant lint framework (`python -m repro.analysis`).
+
+The repo's correctness story rests on invariants that the test suite can
+only probe dynamically — the soak suite's token-parity oracle assumes no
+wall clock leaks into the virtual-clock engine path, the wire protocol in
+`serving/protocol.py` is frozen, energy/carbon accounting must not mix
+seconds with joules. This framework checks those invariants *statically*,
+before a 400-event soak run ever executes.
+
+Pieces:
+
+  * `Rule` — subclass, set `code`/`name`/`description`, implement
+    `check(ctx)`; decorate with `@register`. Rules scope themselves by
+    repo-relative path via `applies(ctx)`.
+  * `FileContext` — one scanned file: source, parsed AST, resolved import
+    map (local name -> dotted origin, e.g. ``np`` -> ``numpy``), pragmas.
+  * pragma suppression — ``# cc-lint: disable=CC001 -- reason`` on the
+    offending line, or ``# cc-lint: disable-file=CC001 -- reason`` anywhere
+    for the whole file. A pragma without a ``-- reason`` trailer, or naming
+    an unknown rule code, is itself a violation (CC000): every suppression
+    must say *why* the invariant does not apply.
+  * `lint_paths` — walk files/dirs, run every applicable rule, apply
+    pragmas, return `Violation`s sorted by (path, line, col, code).
+
+Deliberately stdlib-only (ast + json): the CI lint job runs this without
+installing jax/numpy.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence
+
+FRAMEWORK_CODE = "CC000"      # pragma hygiene / unparseable files
+
+PRAGMA_RE = re.compile(
+    r"#\s*cc-lint:\s*(?P<kind>disable(?:-file)?)\s*=\s*"
+    r"(?P<codes>[A-Za-z0-9_, ]+?)\s*(?:--\s*(?P<reason>.*))?$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One finding: `code` is the rule id (CC001...), `path` repo-relative."""
+    code: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Pragma:
+    line: int                 # 1-based line the pragma sits on
+    file_level: bool
+    codes: tuple
+    reason: str
+
+
+class FileContext:
+    """Everything a rule needs about one file, parsed once."""
+
+    def __init__(self, path: Path, rel: str, source: str,
+                 options: Optional[Mapping[str, Any]] = None):
+        self.path = path
+        self.rel = rel                       # posix, repo-relative
+        self.source = source
+        self.lines = source.splitlines()
+        self.options: Mapping[str, Any] = options or {}
+        self.parse_error: Optional[SyntaxError] = None
+        try:
+            self.tree: Optional[ast.AST] = ast.parse(source)
+        except SyntaxError as e:             # reported as a CC000 violation
+            self.tree = None
+            self.parse_error = e
+        self.pragmas = _parse_pragmas(self.lines)
+        self.imports = _resolve_imports(self.tree) if self.tree else {}
+
+    def dotted(self, node: ast.AST) -> Optional[str]:
+        """Resolve an attribute/name chain to its dotted origin, following
+        module aliases: with ``import numpy as np``, `np.random.rand`
+        resolves to ``numpy.random.rand``; with ``from time import
+        perf_counter as pc``, `pc` resolves to ``time.perf_counter``."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        root = self.imports.get(node.id, node.id)
+        parts.append(root)
+        return ".".join(reversed(parts))
+
+
+def _parse_pragmas(lines: Sequence[str]) -> List[Pragma]:
+    out: List[Pragma] = []
+    for i, line in enumerate(lines, start=1):
+        if "cc-lint" not in line:
+            continue
+        m = PRAGMA_RE.search(line)
+        if m is None:
+            continue
+        codes = tuple(c.strip().upper() for c in m.group("codes").split(",")
+                      if c.strip())
+        out.append(Pragma(line=i, file_level=m.group("kind") == "disable-file",
+                          codes=codes, reason=(m.group("reason") or "").strip()))
+    return out
+
+
+def _resolve_imports(tree: ast.AST) -> Dict[str, str]:
+    """Top-level AND nested imports: local binding -> dotted origin."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = \
+                    a.name if a.asname else a.name.split(".")[0]
+                if a.asname:
+                    out[a.asname] = a.name
+        elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+            for a in node.names:
+                if a.name != "*":
+                    out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rule registry
+# ---------------------------------------------------------------------------
+
+
+class Rule:
+    """One lint rule. Subclass, set the class attrs, implement `check`."""
+
+    code: str = "CC999"
+    name: str = "unnamed"
+    description: str = ""
+
+    def applies(self, ctx: FileContext) -> bool:
+        return True
+
+    def check(self, ctx: FileContext) -> List[Violation]:
+        raise NotImplementedError
+
+    def violation(self, ctx: FileContext, node: ast.AST,
+                  message: str) -> Violation:
+        return Violation(code=self.code, path=ctx.rel,
+                         line=getattr(node, "lineno", 1),
+                         col=getattr(node, "col_offset", 0) + 1,
+                         message=message)
+
+
+REGISTRY: Dict[str, Rule] = {}
+
+
+def register(cls):
+    """Class decorator: instantiate and add to the registry by code."""
+    rule = cls()
+    if rule.code in REGISTRY:
+        raise ValueError(f"duplicate rule code {rule.code}")
+    REGISTRY[rule.code] = rule
+    return cls
+
+
+def known_codes() -> List[str]:
+    return [FRAMEWORK_CODE] + sorted(REGISTRY)
+
+
+def rule_catalog() -> Dict[str, str]:
+    cat = {FRAMEWORK_CODE: "pragma hygiene: suppressions need a reason and "
+                           "a known rule code; files must parse"}
+    for code in sorted(REGISTRY):
+        cat[code] = f"{REGISTRY[code].name}: {REGISTRY[code].description}"
+    return cat
+
+
+# ---------------------------------------------------------------------------
+# Running
+# ---------------------------------------------------------------------------
+
+
+def iter_python_files(paths: Iterable[Path]) -> List[Path]:
+    files: List[Path] = []
+    for p in paths:
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+    seen, out = set(), []
+    for f in files:
+        if f not in seen:
+            seen.add(f)
+            out.append(f)
+    return out
+
+
+def _pragma_violations(ctx: FileContext) -> List[Violation]:
+    """CC000: every pragma must carry a reason and name known codes."""
+    out: List[Violation] = []
+    valid = set(known_codes())
+    for p in ctx.pragmas:
+        if not p.reason:
+            out.append(Violation(
+                code=FRAMEWORK_CODE, path=ctx.rel, line=p.line, col=1,
+                message="suppression pragma without a reason — append "
+                        "'-- <why this invariant does not apply here>'"))
+        for c in p.codes:
+            if c not in valid:
+                out.append(Violation(
+                    code=FRAMEWORK_CODE, path=ctx.rel, line=p.line, col=1,
+                    message=f"pragma names unknown rule code {c!r} "
+                            f"(known: {', '.join(known_codes())})"))
+    return out
+
+
+def _suppressed(v: Violation, ctx: FileContext) -> bool:
+    if v.code == FRAMEWORK_CODE:
+        return False                      # pragma hygiene is not negotiable
+    for p in ctx.pragmas:
+        if v.code in p.codes and (p.file_level or p.line == v.line):
+            return True
+    return False
+
+
+def lint_file(path: Path, root: Path,
+              options: Optional[Mapping[str, Any]] = None) -> List[Violation]:
+    try:
+        rel = path.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        rel = path.as_posix()
+    ctx = FileContext(path, rel, path.read_text(encoding="utf-8"),
+                      options=options)
+    if ctx.parse_error is not None:
+        e = ctx.parse_error
+        return [Violation(code=FRAMEWORK_CODE, path=rel,
+                          line=e.lineno or 1, col=(e.offset or 0) + 1,
+                          message=f"file does not parse: {e.msg}")]
+    out = _pragma_violations(ctx)
+    for code in sorted(REGISTRY):
+        rule = REGISTRY[code]
+        if rule.applies(ctx):
+            out.extend(v for v in rule.check(ctx) if not _suppressed(v, ctx))
+    return out
+
+
+def lint_paths(paths: Sequence[Path], root: Path,
+               options: Optional[Mapping[str, Any]] = None
+               ) -> Dict[str, Any]:
+    """Lint every .py under `paths`; returns the report dict the JSON
+    output serializes (violations sorted, per-code counts, rule catalog)."""
+    files = iter_python_files(paths)
+    violations: List[Violation] = []
+    for f in files:
+        violations.extend(lint_file(f, root, options=options))
+    violations.sort(key=lambda v: (v.path, v.line, v.col, v.code))
+    counts: Dict[str, int] = {}
+    for v in violations:
+        counts[v.code] = counts.get(v.code, 0) + 1
+    return {
+        "version": 1,
+        "files_scanned": len(files),
+        "violations": [v.to_json() for v in violations],
+        "counts": counts,
+        "rules": rule_catalog(),
+    }
+
+
+def render_human(report: Mapping[str, Any]) -> str:
+    lines = [f"{v['path']}:{v['line']}:{v['col']}: {v['code']} {v['message']}"
+             for v in report["violations"]]
+    n = len(report["violations"])
+    summary = (f"{report['files_scanned']} files scanned, "
+               + (f"{n} violation{'s' if n != 1 else ''} "
+                  f"({', '.join(f'{c}: {k}' for c, k in sorted(report['counts'].items()))})"
+                  if n else "no violations"))
+    return "\n".join(lines + [summary])
+
+
+def render_markdown(report: Mapping[str, Any]) -> str:
+    """Step-summary table for CI."""
+    out = ["### Invariant lint (`python -m repro.analysis`)", ""]
+    vs = report["violations"]
+    if not vs:
+        out.append(f"No violations in {report['files_scanned']} files.")
+        return "\n".join(out) + "\n"
+    out += ["| file | line | code | message |", "|---|---|---|---|"]
+    for v in vs:
+        msg = v["message"].replace("|", "\\|")
+        out.append(f"| `{v['path']}` | {v['line']} | {v['code']} | {msg} |")
+    out.append("")
+    out.append(f"**{len(vs)} violation(s)** in {report['files_scanned']} files.")
+    return "\n".join(out) + "\n"
+
+
+def report_to_json(report: Mapping[str, Any]) -> str:
+    return json.dumps(report, indent=2, sort_keys=True)

@@ -1,0 +1,15 @@
+"""Rule modules — importing this package registers every rule.
+
+Add a rule by dropping a module here that defines a `Rule` subclass
+decorated with `@register`, then list it in the import below (explicit so
+a typo'd module name fails loudly, not silently skipping the rule) and
+document it in docs/static_analysis.md.
+"""
+from repro.analysis.rules import (   # noqa: F401  (imported for registration)
+    deprecation,
+    determinism,
+    protocol_freeze,
+    refcount,
+    tracer,
+    units,
+)

@@ -1,0 +1,48 @@
+"""CC006 — deprecation expiry: the blocking `run_query`/`handle_query`
+shims had a one-release window (PR 7); that window has passed.
+
+The shims themselves are deleted — this rule keeps them dead: any in-repo
+definition of, call to, or bare reference to `run_query`/`handle_query`
+is flagged so the blocking spellings cannot quietly come back. New code
+uses the session API (`begin_query`/`submit_query` + `settle`).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.framework import FileContext, Rule, Violation, register
+
+EXPIRED = {
+    "run_query": "begin_query(...) + settle([...])",
+    "handle_query": "submit_query(...) + settle([...])",
+}
+
+
+@register
+class DeprecationExpiryRule(Rule):
+    code = "CC006"
+    name = "deprecation-expiry"
+    description = ("run_query/handle_query passed their one-release "
+                   "deprecation window — use the session API")
+
+    def check(self, ctx: FileContext) -> List[Violation]:
+        out: List[Violation] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name in EXPIRED:
+                out.append(self.violation(
+                    ctx, node,
+                    f"definition of expired shim `{node.name}` — the "
+                    "one-release deprecation window has passed; the session "
+                    f"API ({EXPIRED[node.name]}) is the one contract"))
+            elif isinstance(node, (ast.Attribute, ast.Name)):
+                name = node.attr if isinstance(node, ast.Attribute) \
+                    else node.id
+                if name in EXPIRED and not isinstance(
+                        getattr(node, "ctx", None), (ast.Store, ast.Del)):
+                    out.append(self.violation(
+                        ctx, node,
+                        f"reference to expired shim `{name}` — use "
+                        f"{EXPIRED[name]}"))
+        return out

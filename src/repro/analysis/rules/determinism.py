@@ -1,0 +1,128 @@
+"""CC001 — determinism: no wall clock, no unseeded randomness, no
+set-order dependence in the virtual-clock engine path.
+
+The soak suite's token-parity oracle (tests/test_soak.py) and the
+multi-process worker parity mode both rest on the engine being a pure
+function of (seeded rng, virtual clock, request stream). Three leak
+classes break that silently:
+
+  * wall-clock reads (`time.time`, `perf_counter`, `datetime.now`, ...) —
+    real timing in benchmarks and launch scripts is legitimate and gets a
+    pragma; anything in `src/repro/{serving,core}` is a parity bug;
+  * unseeded randomness — module-level `random.*` / `np.random.*` global
+    state and `default_rng()` without a seed argument;
+  * iteration over sets (`for x in set(...)`, `list({...})`) in
+    `src/repro/{serving,core}` — str hashing is salted per process, so
+    set order differs between the fleet's worker processes.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.framework import FileContext, Rule, Violation, register
+
+WALL_CLOCK = {
+    "time.time", "time.time_ns", "time.perf_counter", "time.perf_counter_ns",
+    "time.monotonic", "time.monotonic_ns", "time.process_time",
+    "time.process_time_ns",
+}
+# suffix-matched: `datetime.datetime.now` and `from datetime import datetime;
+# datetime.now` both end with these
+WALL_CLOCK_SUFFIX = {
+    "datetime.now", "datetime.utcnow", "datetime.today", "date.today",
+}
+# numpy.random module-level calls that draw from (or reseed) GLOBAL state
+GLOBAL_NP_RANDOM = {
+    "rand", "randn", "randint", "random", "random_sample", "choice",
+    "shuffle", "permutation", "uniform", "normal", "standard_normal",
+    "seed", "sample", "ranf", "bytes", "exponential", "poisson", "binomial",
+}
+# stdlib random module-level calls (global Mersenne Twister)
+GLOBAL_PY_RANDOM = {
+    "random", "randint", "randrange", "choice", "choices", "shuffle",
+    "sample", "uniform", "gauss", "normalvariate", "expovariate",
+    "getrandbits", "betavariate", "triangular", "seed",
+}
+# seeded-generator constructors: fine WITH an argument, flagged without
+SEEDABLE = {"numpy.random.default_rng", "numpy.random.RandomState",
+            "numpy.random.SeedSequence", "random.Random"}
+
+SET_ORDER_SCOPE = ("src/repro/serving/", "src/repro/core/")
+SET_CONSUMERS = {"list", "tuple", "enumerate", "iter", "next"}
+
+
+def _is_set_expr(node: ast.AST, ctx: FileContext) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        return ctx.dotted(node.func) in ("set", "frozenset")
+    return False
+
+
+@register
+class DeterminismRule(Rule):
+    code = "CC001"
+    name = "determinism"
+    description = ("wall-clock reads, unseeded randomness, and set-iteration "
+                   "order dependence break the virtual-clock parity oracle")
+
+    def check(self, ctx: FileContext) -> List[Violation]:
+        out: List[Violation] = []
+        in_engine_path = ctx.rel.startswith(SET_ORDER_SCOPE)
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                out.extend(self._check_call(ctx, node))
+            if in_engine_path:
+                out.extend(self._check_set_order(ctx, node))
+        return out
+
+    def _check_call(self, ctx: FileContext, node: ast.Call) -> List[Violation]:
+        dotted = ctx.dotted(node.func)
+        if dotted is None:
+            return []
+        if dotted in WALL_CLOCK or \
+                any(dotted == s or dotted.endswith("." + s)
+                    for s in WALL_CLOCK_SUFFIX):
+            return [self.violation(
+                ctx, node,
+                f"wall-clock call `{dotted}()` — engine-path time must come "
+                "from the injected VirtualClock (real timing in benchmarks/"
+                "launch scripts: pragma with a reason)")]
+        if dotted in SEEDABLE and not node.args and not node.keywords:
+            return [self.violation(
+                ctx, node,
+                f"`{dotted}()` without a seed — results differ per process; "
+                "pass an explicit seed")]
+        parts = dotted.split(".")
+        if len(parts) == 3 and parts[0] == "numpy" and parts[1] == "random" \
+                and parts[2] in GLOBAL_NP_RANDOM:
+            return [self.violation(
+                ctx, node,
+                f"global-state `{dotted}()` — use a seeded "
+                "`np.random.default_rng(seed)` generator")]
+        if len(parts) == 2 and parts[0] == "random" \
+                and parts[1] in GLOBAL_PY_RANDOM:
+            return [self.violation(
+                ctx, node,
+                f"global-state `{dotted}()` — use a seeded "
+                "`random.Random(seed)` instance")]
+        return []
+
+    def _check_set_order(self, ctx: FileContext,
+                         node: ast.AST) -> List[Violation]:
+        msg = ("iteration over a set — str hashing is per-process salted, so "
+               "order differs across fleet workers; sort first "
+               "(`sorted(...)`) or use a dict/list")
+        if isinstance(node, (ast.For, ast.AsyncFor)) \
+                and _is_set_expr(node.iter, ctx):
+            return [self.violation(ctx, node.iter, msg)]
+        if isinstance(node, (ast.ListComp, ast.GeneratorExp, ast.DictComp,
+                             ast.SetComp)):
+            return [self.violation(ctx, g.iter, msg)
+                    for g in node.generators if _is_set_expr(g.iter, ctx)]
+        if isinstance(node, ast.Call) and node.args \
+                and ctx.dotted(node.func) in SET_CONSUMERS \
+                and _is_set_expr(node.args[0], ctx):
+            return [self.violation(ctx, node, msg)]
+        return []

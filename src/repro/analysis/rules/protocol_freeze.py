@@ -1,0 +1,179 @@
+"""CC003 — protocol freeze: the wire dataclasses in `serving/protocol.py`
+must match the checked-in schema snapshot.
+
+PR 7 froze the control protocol between fleets and worker processes —
+"frozen" meaning: removing a field, changing its annotated type, or
+changing its default (decoders fall back to defaults for missing keys, so
+defaults ARE wire semantics) breaks already-pickled payloads and old
+readers. Until now the freeze was convention; this rule makes it a diff
+against `src/repro/analysis/protocol_schema.json`.
+
+Evolution workflow: *adding* a field (or a whole class) is allowed, but
+requires bumping the governing version constant (`PROTOCOL_VERSION`, or
+`STATS_SCHEMA_VERSION` for `EngineStats`) AND regenerating the snapshot
+with `python -m repro.analysis --update-schema`. Removals/retypes always
+fail — deliberate breaks mean hand-editing the snapshot in the same
+commit, which the reviewer sees.
+"""
+from __future__ import annotations
+
+import ast
+import json
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+from repro.analysis.framework import FileContext, Rule, Violation, register
+
+PROTOCOL_REL = "src/repro/serving/protocol.py"
+SNAPSHOT = Path(__file__).resolve().parent.parent / "protocol_schema.json"
+
+# which version constant governs each wire class (default: PROTOCOL_VERSION)
+VERSION_CONST = {"EngineStats": "STATS_SCHEMA_VERSION"}
+DEFAULT_CONST = "PROTOCOL_VERSION"
+
+
+def extract_schema(tree: ast.AST) -> Dict[str, Any]:
+    """Pull the wire schema out of protocol.py's AST: every module-level
+    dataclass's field names / annotation strings / default reprs, plus the
+    version constants. Pure-syntactic (no import of the module)."""
+    versions: Dict[str, int] = {}
+    classes: Dict[str, Any] = {}
+    for node in tree.body if isinstance(tree, ast.Module) else []:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and node.targets[0].id.endswith("_VERSION") \
+                and isinstance(node.value, ast.Constant):
+            versions[node.targets[0].id] = int(node.value.value)
+        elif isinstance(node, ast.ClassDef) and _is_dataclass(node):
+            fields: Dict[str, Any] = {}
+            for stmt in node.body:
+                if isinstance(stmt, ast.AnnAssign) \
+                        and isinstance(stmt.target, ast.Name):
+                    fields[stmt.target.id] = {
+                        "type": ast.unparse(stmt.annotation),
+                        "default": (ast.unparse(stmt.value)
+                                    if stmt.value is not None else None),
+                        "line": stmt.lineno,
+                    }
+            classes[node.name] = {
+                "version_const": VERSION_CONST.get(node.name, DEFAULT_CONST),
+                "fields": fields,
+                "line": node.lineno,
+            }
+    return {"versions": versions, "classes": classes}
+
+
+def schema_for_snapshot(tree: ast.AST) -> Dict[str, Any]:
+    """The persisted form: extraction minus line numbers."""
+    schema = extract_schema(tree)
+    for cls in schema["classes"].values():
+        cls.pop("line", None)
+        for f in cls["fields"].values():
+            f.pop("line", None)
+    schema["_note"] = ("Frozen wire-protocol snapshot for CC003. Regenerate "
+                      "with `python -m repro.analysis --update-schema` after "
+                      "bumping the governing version constant.")
+    return schema
+
+
+def _is_dataclass(node: ast.ClassDef) -> bool:
+    for dec in node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = ast.unparse(target)
+        if name in ("dataclass", "dataclasses.dataclass"):
+            return True
+    return False
+
+
+@register
+class ProtocolFreezeRule(Rule):
+    code = "CC003"
+    name = "protocol-freeze"
+    description = ("wire dataclasses in serving/protocol.py must match the "
+                   "checked-in schema snapshot; additions need a version "
+                   "bump + --update-schema, removals/retypes always fail")
+
+    def applies(self, ctx: FileContext) -> bool:
+        return ctx.rel.endswith("serving/protocol.py")
+
+    def check(self, ctx: FileContext) -> List[Violation]:
+        snap_path = Path(ctx.options.get("protocol_schema", SNAPSHOT))
+        if not snap_path.exists():
+            return [self.violation(
+                ctx, ctx.tree,
+                f"no schema snapshot at {snap_path} — run "
+                "`python -m repro.analysis --update-schema`")]
+        snap = json.loads(snap_path.read_text(encoding="utf-8"))
+        cur = extract_schema(ctx.tree)
+        out: List[Violation] = []
+
+        def vio(line: Optional[int], msg: str) -> Violation:
+            return Violation(code=self.code, path=ctx.rel,
+                             line=line or 1, col=1, message=msg)
+
+        bumped = set()
+        for const, old in snap.get("versions", {}).items():
+            new = cur["versions"].get(const)
+            if new is None:
+                out.append(vio(1, f"version constant {const} removed"))
+            elif new < old:
+                out.append(vio(1, f"{const} lowered {old} -> {new} — wire "
+                                  "versions only move forward"))
+            elif new > old:
+                bumped.add(const)
+                out.append(vio(
+                    1, f"{const} bumped {old} -> {new} but the snapshot was "
+                       "not regenerated — run `python -m repro.analysis "
+                       "--update-schema`"))
+
+        for cname, scls in snap.get("classes", {}).items():
+            ccls = cur["classes"].get(cname)
+            if ccls is None:
+                out.append(vio(1, f"frozen wire class {cname} removed — "
+                                  "old readers cannot decode; hand-edit the "
+                                  "snapshot only for a deliberate break"))
+                continue
+            const = scls.get("version_const", DEFAULT_CONST)
+            for fname, sf in scls["fields"].items():
+                cf = ccls["fields"].get(fname)
+                if cf is None:
+                    out.append(vio(
+                        ccls["line"],
+                        f"{cname}.{fname} removed from the frozen protocol "
+                        "— decoders fall back to defaults for missing keys, "
+                        "so removal silently changes old-payload semantics"))
+                    continue
+                if cf["type"] != sf["type"]:
+                    out.append(vio(
+                        cf["line"],
+                        f"{cname}.{fname} retyped "
+                        f"{sf['type']!r} -> {cf['type']!r} — frozen"))
+                if cf["default"] != sf["default"]:
+                    out.append(vio(
+                        cf["line"],
+                        f"{cname}.{fname} default changed "
+                        f"{sf['default']!r} -> {cf['default']!r} — defaults "
+                        "are wire semantics (missing-key fallback)"))
+            for fname, cf in ccls["fields"].items():
+                if fname not in scls["fields"]:
+                    if const in bumped:
+                        out.append(vio(
+                            cf["line"],
+                            f"{cname}.{fname} added — version bumped, now "
+                            "regenerate the snapshot: `python -m "
+                            "repro.analysis --update-schema`"))
+                    else:
+                        out.append(vio(
+                            cf["line"],
+                            f"{cname}.{fname} added without bumping {const} "
+                            "— bump it and run `python -m repro.analysis "
+                            "--update-schema`"))
+
+        for cname, ccls in cur["classes"].items():
+            if cname not in snap.get("classes", {}):
+                out.append(vio(
+                    ccls["line"],
+                    f"new wire class {cname} not in the snapshot — bump "
+                    f"{ccls['version_const']} and run `python -m "
+                    "repro.analysis --update-schema`"))
+        return out

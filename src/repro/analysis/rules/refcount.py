@@ -1,0 +1,83 @@
+"""CC004 — block-pool refcount discipline.
+
+`BlockPool.refcount` and its free list (`_free`) are the ground truth the
+soak suite's reconciliation (serving/invariants.py) audits: every block
+reference must be explainable as a slot hold or a prefix-cache hold. That
+only works if *all* mutation goes through the pool API
+(`alloc`/`incref`/`decref`) inside `serving/block_pool.py` — a stray
+`pool.refcount[bid] += 1` or `pool._free.append(bid)` elsewhere corrupts
+the audit trail without failing anything until a 400-event soak run.
+
+Reads are fine everywhere (invariants.py reconciles against them); this
+rule flags writes: direct/subscript/augmented assignment to `refcount` or
+`_free`, `del` on them, and mutating method calls
+(`append`/`pop`/`clear`/...) with them as the receiver.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.framework import FileContext, Rule, Violation, register
+
+OWNER_FILE = "src/repro/serving/block_pool.py"
+GUARDED = {"refcount", "_free"}
+MUTATORS = {"append", "pop", "remove", "clear", "extend", "insert", "sort",
+            "reverse", "fill", "setdefault", "update"}
+
+
+def _guarded_attr(node: ast.AST) -> Optional[str]:
+    """`x.refcount` / `x._free`, possibly behind a subscript chain."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    if isinstance(node, ast.Attribute) and node.attr in GUARDED:
+        return node.attr
+    return None
+
+
+@register
+class RefcountDisciplineRule(Rule):
+    code = "CC004"
+    name = "refcount-discipline"
+    description = ("block-pool refcount/free-list state may only be mutated "
+                   "inside serving/block_pool.py; everything else goes "
+                   "through the pool API (alloc/incref/decref)")
+
+    def applies(self, ctx: FileContext) -> bool:
+        return ctx.rel != OWNER_FILE
+
+    def check(self, ctx: FileContext) -> List[Violation]:
+        out: List[Violation] = []
+
+        def flag(node: ast.AST, attr: str, how: str):
+            out.append(self.violation(
+                ctx, node,
+                f"{how} `{attr}` outside serving/block_pool.py — mutate "
+                "pool state only through the pool API "
+                "(alloc/incref/decref); stray writes corrupt the soak "
+                "suite's refcount reconciliation"))
+
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.Assign, ast.AnnAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for t in targets:
+                    attr = _guarded_attr(t)
+                    if attr:
+                        flag(t, attr, "assignment to")
+            elif isinstance(node, ast.AugAssign):
+                attr = _guarded_attr(node.target)
+                if attr:
+                    flag(node.target, attr, "augmented assignment to")
+            elif isinstance(node, ast.Delete):
+                for t in node.targets:
+                    attr = _guarded_attr(t)
+                    if attr:
+                        flag(t, attr, "del on")
+            elif isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in MUTATORS:
+                attr = _guarded_attr(node.func.value)
+                if attr:
+                    flag(node, attr, f"mutating call `.{node.func.attr}()` on")
+        return out

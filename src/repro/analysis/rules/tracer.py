@@ -1,0 +1,99 @@
+"""CC002 — tracer-safety in jit-reachable code.
+
+Scope: `src/repro/kernels/`, `src/repro/models/`, and
+`src/repro/serving/engine.py` — the modules whose functions end up inside
+`jax.jit` traces (directly or via the engine's cached executables).
+
+Three hazards:
+
+  * `float()` / `int()` / `bool()` over an expression rooted in `jnp` —
+    under a trace this is a ConcretizationTypeError; outside a trace it is
+    an implicit device sync that serializes the dispatch pipeline;
+  * `.item()` on anything — same implicit sync, and the usual way a
+    scalar sneaks off-device mid-step (host code should go through an
+    explicit `np.asarray` at the step boundary instead);
+  * Python `if`/`while` branching on a `jnp.*` expression — either a
+    trace error or, with concrete inputs, a silent per-value recompile of
+    the jitted step (`jnp.where` / `lax.cond` are the traced spellings).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.framework import FileContext, Rule, Violation, register
+
+SCOPE_DIRS = ("src/repro/kernels/", "src/repro/models/")
+SCOPE_FILES = ("src/repro/serving/engine.py",)
+
+JNP_ROOTS = ("jax.numpy", "jax.lax", "jax.nn")
+
+
+def _jnp_rooted(node: ast.AST, ctx: FileContext) -> Optional[str]:
+    """Dotted name of the first `jnp.*`/`lax.*` call or attribute inside
+    `node`'s subtree, if any."""
+    for sub in ast.walk(node):
+        if isinstance(sub, (ast.Attribute, ast.Name)):
+            dotted = ctx.dotted(sub)
+            if dotted and (dotted.startswith(JNP_ROOTS)
+                           or dotted == "jax.numpy"):
+                return dotted
+    return None
+
+
+@register
+class TracerSafetyRule(Rule):
+    code = "CC002"
+    name = "tracer-safety"
+    description = ("host conversions (`float`/`int`/`bool`/`.item()`) and "
+                   "Python branches on jnp expressions inside jit-reachable "
+                   "code are sync/recompile hazards")
+
+    def applies(self, ctx: FileContext) -> bool:
+        return ctx.rel.startswith(SCOPE_DIRS) or ctx.rel in SCOPE_FILES
+
+    def check(self, ctx: FileContext) -> List[Violation]:
+        out: List[Violation] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                v = self._check_call(ctx, node)
+                if v:
+                    out.append(v)
+            elif isinstance(node, (ast.If, ast.While)):
+                hit = _jnp_rooted(node.test, ctx)
+                if hit:
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    out.append(self.violation(
+                        ctx, node.test,
+                        f"Python `{kind}` branches on `{hit}` — a trace "
+                        "error under jit, a per-value recompile outside; "
+                        "use `jnp.where`/`lax.cond`"))
+            elif isinstance(node, ast.Assert):
+                hit = _jnp_rooted(node.test, ctx)
+                if hit:
+                    out.append(self.violation(
+                        ctx, node.test,
+                        f"`assert` concretizes `{hit}` — hoist the check to "
+                        "the host boundary or use "
+                        "`checkify`/`debug.check`"))
+        return out
+
+    def _check_call(self, ctx: FileContext,
+                    node: ast.Call) -> Optional[Violation]:
+        dotted = ctx.dotted(node.func)
+        if dotted in ("float", "int", "bool") and len(node.args) == 1:
+            hit = _jnp_rooted(node.args[0], ctx)
+            if hit:
+                return self.violation(
+                    ctx, node,
+                    f"`{dotted}()` over a `{hit}` expression — implicit "
+                    "device sync (ConcretizationTypeError under jit); keep "
+                    "it as an array or sync explicitly via `np.asarray` at "
+                    "the step boundary")
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "item" \
+                and not node.args and not node.keywords:
+            return self.violation(
+                ctx, node,
+                "`.item()` — implicit device sync in jit-reachable code; "
+                "sync explicitly via `np.asarray` at the step boundary")
+        return None

@@ -1,0 +1,171 @@
+"""CC005 — suffix-based dimensional analysis.
+
+The energy/carbon accounting that reproduces the paper's mg-per-query
+numbers flows through untyped floats; the repo's convention is unit
+suffixes: `_s` (seconds), `_ms`/`_us`/`_ns`, `_j` (joules), `_w` (watts),
+`_g`/`_mg` (grams / milligrams CO2), `_tps` (tokens per second). This
+rule turns the convention into checking:
+
+  * `+` / `-` / comparisons between two suffixed identifiers must agree
+    in BOTH dimension and scale (`lat_s + en_j` and `dt_s + dt_ms` are
+    both bugs);
+  * assigning a `*` / `/` result to a suffixed name must be dimensionally
+    consistent (`e_j = p_w * dt_s` is fine — W x s = J; `p_w = e_j * dt_s`
+    is flagged). Scale is NOT checked on assignments, so explicit
+    conversions (`c_mg = 1000 * c_g`) stay legal.
+
+Identifiers without a recognized suffix are unknowns and never flagged —
+the rule only fires when every participating name declares its unit.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Tuple
+
+from repro.analysis.framework import FileContext, Rule, Violation, register
+
+# dims: (time, energy, mass, tokens); scale distinguishes e.g. mg from g
+UNITS = {
+    "s":   ((1, 0, 0, 0), ""),
+    "ms":  ((1, 0, 0, 0), "milli"),
+    "us":  ((1, 0, 0, 0), "micro"),
+    "ns":  ((1, 0, 0, 0), "nano"),
+    "j":   ((0, 1, 0, 0), ""),
+    "w":   ((-1, 1, 0, 0), ""),
+    "g":   ((0, 0, 1, 0), ""),
+    "mg":  ((0, 0, 1, 0), "milli"),
+    "tps": ((-1, 0, 0, 1), ""),
+}
+DIMLESS = (0, 0, 0, 0)
+
+Unit = Tuple[Tuple[int, int, int, int], str, bool]   # dims, scale, has_suffix
+
+
+def _suffix_unit(name: str) -> Optional[Unit]:
+    if "_" not in name:
+        return None
+    u = UNITS.get(name.rsplit("_", 1)[1])
+    return (u[0], u[1], True) if u else None
+
+
+def _name_of(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _dim_str(dims: Tuple[int, ...]) -> str:
+    names = ("s", "J", "g", "tok")
+    num = "*".join(n if e == 1 else f"{n}^{e}"
+                   for n, e in zip(names, dims) if e > 0)
+    den = "*".join(n if e == -1 else f"{n}^{-e}"
+                   for n, e in zip(names, dims) if e < 0)
+    if not num and not den:
+        return "dimensionless"
+    return f"{num or '1'}/{den}" if den else num
+
+
+def unit_of(node: ast.AST) -> Optional[Unit]:
+    """Shallow unit inference; None = unknown (never flagged)."""
+    name = _name_of(node)
+    if name is not None:
+        return _suffix_unit(name)
+    if isinstance(node, ast.Constant) \
+            and isinstance(node.value, (int, float)) \
+            and not isinstance(node.value, bool):
+        return (DIMLESS, "", False)        # bare numerics are dimensionless
+    if isinstance(node, ast.UnaryOp) \
+            and isinstance(node.op, (ast.USub, ast.UAdd)):
+        return unit_of(node.operand)
+    if isinstance(node, ast.BinOp):
+        left, right = unit_of(node.left), unit_of(node.right)
+        if left is None or right is None:
+            return None
+        if isinstance(node.op, (ast.Add, ast.Sub)):
+            return left if left[0] == right[0] else None
+        if isinstance(node.op, (ast.Mult, ast.Div)):
+            sign = 1 if isinstance(node.op, ast.Mult) else -1
+            dims = tuple(a + sign * b for a, b in zip(left[0], right[0]))
+            scale = left[1] if left[1] == right[1] else "mixed"
+            return (dims, scale, left[2] or right[2])
+    return None
+
+
+@register
+class UnitsRule(Rule):
+    code = "CC005"
+    name = "units"
+    description = ("suffix-declared units (_s/_j/_w/_mg/_tps/...) must "
+                   "agree across +/-/comparisons and across */÷ assignments")
+
+    def check(self, ctx: FileContext) -> List[Violation]:
+        out: List[Violation] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.BinOp) \
+                    and isinstance(node.op, (ast.Add, ast.Sub)):
+                out.extend(self._check_addsub(ctx, node))
+            elif isinstance(node, ast.Compare):
+                out.extend(self._check_compare(ctx, node))
+            elif isinstance(node, ast.Assign):
+                for t in node.targets:
+                    out.extend(self._check_assign(ctx, t, node.value))
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                out.extend(self._check_assign(ctx, node.target, node.value))
+            elif isinstance(node, ast.AugAssign) \
+                    and isinstance(node.op, (ast.Add, ast.Sub)):
+                tgt, val = unit_of(node.target), unit_of(node.value)
+                if tgt and val and tgt[2] and val[2] \
+                        and (tgt[0], tgt[1]) != (val[0], val[1]):
+                    out.append(self.violation(
+                        ctx, node,
+                        f"`{ast.unparse(node.target)} "
+                        f"{'+=' if isinstance(node.op, ast.Add) else '-='} "
+                        f"{ast.unparse(node.value)}` mixes units "
+                        f"({_dim_str(tgt[0])} vs {_dim_str(val[0])})"))
+        return out
+
+    def _check_addsub(self, ctx: FileContext,
+                      node: ast.BinOp) -> List[Violation]:
+        left, right = unit_of(node.left), unit_of(node.right)
+        if left and right and left[2] and right[2] \
+                and (left[0], left[1]) != (right[0], right[1]):
+            op = "+" if isinstance(node.op, ast.Add) else "-"
+            what = ("scales" if left[0] == right[0] else "dimensions")
+            return [self.violation(
+                ctx, node,
+                f"`{ast.unparse(node.left)} {op} {ast.unparse(node.right)}` "
+                f"mixes {what} ({_dim_str(left[0])}[{left[1] or 'base'}] vs "
+                f"{_dim_str(right[0])}[{right[1] or 'base'}])")]
+        return []
+
+    def _check_compare(self, ctx: FileContext,
+                       node: ast.Compare) -> List[Violation]:
+        out: List[Violation] = []
+        operands = [node.left] + list(node.comparators)
+        for a, b in zip(operands, operands[1:]):
+            ua, ub = unit_of(a), unit_of(b)
+            if ua and ub and ua[2] and ub[2] \
+                    and (ua[0], ua[1]) != (ub[0], ub[1]):
+                out.append(self.violation(
+                    ctx, node,
+                    f"comparison `{ast.unparse(a)}` vs `{ast.unparse(b)}` "
+                    f"mixes units ({_dim_str(ua[0])}[{ua[1] or 'base'}] vs "
+                    f"{_dim_str(ub[0])}[{ub[1] or 'base'}])"))
+        return out
+
+    def _check_assign(self, ctx: FileContext, target: ast.AST,
+                      value: ast.AST) -> List[Violation]:
+        if not (isinstance(value, ast.BinOp)
+                and isinstance(value.op, (ast.Mult, ast.Div))):
+            return []
+        tgt = unit_of(target)
+        val = unit_of(value)
+        if tgt and val and tgt[2] and val[2] and tgt[0] != val[0]:
+            return [self.violation(
+                ctx, target,
+                f"`{ast.unparse(target)} = {ast.unparse(value)}`: result is "
+                f"{_dim_str(val[0])} but the target suffix declares "
+                f"{_dim_str(tgt[0])}")]
+        return []

@@ -36,7 +36,7 @@ import jax
 import ml_dtypes
 import numpy as np
 
-from repro.sharding.param import ParamDef, param_shardings
+from repro.sharding.param import param_shardings
 
 _MANIFEST = "manifest.json"
 

@@ -8,7 +8,7 @@ hillclimb iterates on without touching model definitions.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 # ---------------------------------------------------------------------------
 # Model

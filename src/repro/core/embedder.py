@@ -144,7 +144,7 @@ class LexicalCrossEncoder:
         self.tok = tokenizer
         df: dict = {}
         for text in corpus:
-            for w in set(self.tok.words(text)):
+            for w in sorted(set(self.tok.words(text))):
                 df[w] = df.get(w, 0) + 1
         n = max(len(corpus), 1)
         self.idf = {w: float(np.log((n + 1) / (c + 0.5))) for w, c in df.items()}

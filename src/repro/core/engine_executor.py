@@ -34,7 +34,6 @@ carbon accounting).
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Dict, List, Optional
 
 import jax
@@ -221,22 +220,6 @@ class EngineExecutor:
             self.client.settle([s.handle for s in open_s])
             self._attribute_steps()
             open_s = [s for s in open_s if not self._finish_attempt(s)]
-
-    def run_query(self, *, n_tools_in_prompt: int, n_calls: int,
-                  selection_correct: bool, variant: str,
-                  mode: OperatingMode) -> QueryExecution:
-        """DEPRECATED blocking shim (one release): the session API
-        (`begin_query` + `settle`) is the one executor contract."""
-        warnings.warn(
-            "Executor.run_query is deprecated; use begin_query(...) + "
-            "settle([...]) — the async session API is the one contract",
-            DeprecationWarning, stacklevel=2)
-        s = self.begin_query(n_tools_in_prompt=n_tools_in_prompt,
-                             n_calls=n_calls,
-                             selection_correct=selection_correct,
-                             variant=variant, mode=mode)
-        self.settle([s])
-        return s.execution
 
     def variant_switch_cost(self, variant: str, mode: OperatingMode):
         """(latency, energy) to load the `variant` weights; the engine is

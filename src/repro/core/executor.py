@@ -23,14 +23,13 @@ engine, whose decode slots batch across users) receives a whole arrival
 batch before any result is demanded. `SimExecutor` resolves sessions eagerly
 at `begin_query`, which keeps its random-stream consumption — and therefore
 every `run_week(backend="sim")` result — bit-identical to the old blocking
-contract. The blocking `run_query` shim is deprecated (one release): it
-warns and forwards to begin+settle.
+contract. The blocking shims from the PR 3 migration are gone: their
+one-release deprecation window closed, and the CC006 lint rule
+(`python -m repro.analysis`) keeps them from coming back.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
-import warnings
 from typing import List, Optional, Protocol, runtime_checkable
 
 import numpy as np
@@ -101,17 +100,21 @@ class Executor(Protocol):
         """How many sessions may usefully overlap (1 = blocking backend)."""
         ...
 
-    def reference_tps(self, mode: OperatingMode) -> float: ...
+    def reference_tps(self, mode: OperatingMode) -> float:
+        ...
 
     def begin_query(self, *, n_tools_in_prompt: int, n_calls: int,
                     selection_correct: bool, variant: str,
                     mode: OperatingMode, priority: int = 0,
                     deadline_s: Optional[float] = None,
-                    tier: str = "default") -> QuerySession: ...
+                    tier: str = "default") -> QuerySession:
+        ...
 
-    def settle(self, sessions: List[QuerySession]) -> None: ...
+    def settle(self, sessions: List[QuerySession]) -> None:
+        ...
 
-    def variant_switch_cost(self, variant: str, mode: OperatingMode): ...
+    def variant_switch_cost(self, variant: str, mode: OperatingMode):
+        ...
 
 
 @dataclasses.dataclass
@@ -161,8 +164,8 @@ def attempt_loop(rng, p_success: float, n_calls: int,
     for _ in range(2):
         ok = rng.random() < p_success
         calls = n_calls if ok else max(1, n_calls // 2)
-        l, e, d, dt, w = attempt(calls)
-        lat += l
+        la, e, d, dt, w = attempt(calls)
+        lat += la
         en += e
         tok += d
         dec_t += dt
@@ -218,19 +221,6 @@ class SimExecutor:
              + tok * pm.decode_time_per_token(
                  prof.active_bytes("q8"), prof.kv_bytes_per_token, mode))
         return tok / t
-
-    def run_query(self, *, n_tools_in_prompt: int, n_calls: int,
-                  selection_correct: bool, variant: str,
-                  mode: OperatingMode) -> QueryExecution:
-        """DEPRECATED blocking shim (one release): the session API
-        (`begin_query` + `settle`) is the one executor contract."""
-        warnings.warn(
-            "Executor.run_query is deprecated; use begin_query(...) + "
-            "settle([...]) — the async session API is the one contract",
-            DeprecationWarning, stacklevel=2)
-        return self._execute(
-            n_tools_in_prompt=n_tools_in_prompt, n_calls=n_calls,
-            selection_correct=selection_correct, variant=variant, mode=mode)
 
     def _execute(self, *, n_tools_in_prompt: int, n_calls: int,
                  selection_correct: bool, variant: str,

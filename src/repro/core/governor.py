@@ -10,7 +10,7 @@ Pure logic: no time, no hardware — fully property-testable.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Optional, Sequence
 
 from repro.core.power import OperatingMode
 

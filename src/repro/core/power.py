@@ -18,9 +18,9 @@ TPS/power model (used by the simulator — this container cannot measure watts):
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List
 
-from repro.common.hardware import HardwareSpec, ORIN_AGX, TPU_V5E, bytes_per_param
+from repro.common.hardware import HardwareSpec, bytes_per_param
 
 
 @dataclasses.dataclass(frozen=True)

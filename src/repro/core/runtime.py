@@ -14,21 +14,21 @@ in arrival order. Backends that can overlap work (`max_concurrency > 1`, i.e.
 the engine) receive a whole arrival step's worth of sessions before settling,
 so concurrent users share decode steps; the analytic backend settles each
 session immediately, which keeps `run_week(backend="sim")` results
-bit-identical to the old blocking `handle_query` contract (itself deprecated,
-retained one release as a warning shim over submit+settle).
+bit-identical to the old blocking contract (whose shim served its
+one-release deprecation window and is now deleted; CC006 in
+`python -m repro.analysis` keeps it dead).
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.carbon import CarbonAccountant, carbon_footprint, forecast_trace
-from repro.core.executor import QueryExecution, QuerySession, SimExecutor
+from repro.core.carbon import carbon_footprint, forecast_trace
+from repro.core.executor import QuerySession, SimExecutor
 from repro.core.governor import CarbonGovernor, GovernorState
-from repro.core.power import OperatingMode, modes_for
+from repro.core.power import OperatingMode
 from repro.core.switching import VariantSwitcher
 from repro.core.tool_select import ToolSelector
 from repro.data.workload import FunctionCallWorkload, Query
@@ -259,18 +259,6 @@ class CarbonCallRuntime:
                 variant=pq.variant, mode_idx=pq.mode_idx, n_tools=pq.n_tools,
                 succeeded=ex.succeeded, tier=pq.session.tier))
         return records
-
-    def handle_query(self, t: float, query: Query, ci: float,
-                     gov_state: GovernorState) -> QueryRecord:
-        """DEPRECATED blocking shim (one release): submit + settle of a
-        single query. The session API (`submit_query` + `settle`) is the
-        one runtime contract — batch arrivals and settle them together."""
-        warnings.warn(
-            "CarbonCallRuntime.handle_query is deprecated; use "
-            "submit_query(...) + settle([...]) — the async session API is "
-            "the one contract", DeprecationWarning, stacklevel=2)
-        return self.settle([self.submit_query(t, query, ci, gov_state)])[0]
-
 
 def run_week(runtime: CarbonCallRuntime, workload: FunctionCallWorkload,
              ci: np.ndarray, *, step_minutes: int = 10,

@@ -15,9 +15,8 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -8,7 +8,6 @@ with the training-free BoW backbone.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax

@@ -16,7 +16,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def synthetic_lm_batch(seed: int, step: int, batch: int, seq: int, vocab: int):

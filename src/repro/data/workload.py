@@ -24,7 +24,6 @@ pre-tier results stay bit-identical.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import math
 import random
 from typing import Dict, List, Optional, Sequence, Tuple

@@ -86,8 +86,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     @pl.when(ik == nk - 1)
     def _done():
-        l = jnp.maximum(l_ref[:, :1], 1e-37)
-        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        lsum = jnp.maximum(l_ref[:, :1], 1e-37)
+        o_ref[0, 0] = (acc_ref[...] / lsum).astype(o_ref.dtype)
 
 
 def flash_attention_bnh(q, k, v, *, causal=True, window=0, cap=0.0,

@@ -76,8 +76,8 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 
     @pl.when(j == nb - 1)
     def _done():
-        l = jnp.maximum(l_ref[:, :1], 1e-37)
-        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        lsum = jnp.maximum(l_ref[:, :1], 1e-37)
+        o_ref[0, 0] = (acc_ref[...] / lsum).astype(o_ref.dtype)
 
 
 def paged_attention_bkgh(q, k_pool, v_pool, block_tables, lengths, *,

@@ -17,7 +17,6 @@ VMEM per step (bt=1024, d<=512, m<=32): tools 1024xd bf16 (1 MiB at d=512)
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

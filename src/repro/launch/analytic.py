@@ -20,7 +20,6 @@ Conventions:
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict
 
 from repro.common.hardware import bytes_per_param

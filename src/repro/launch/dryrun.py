@@ -20,28 +20,27 @@ Usage:
   python -m repro.launch.dryrun --arch qwen2-72b --shape decode_32k \
       --quant q8 --kv-dtype int8          # hillclimb variants
 """
-import argparse
-import dataclasses
-import json
-import time
-import traceback
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
 
-import jax
-import jax.numpy as jnp
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
 
-from repro.common.registry import get_arch, list_archs
-from repro.config import (RuntimeConfig, TrainConfig, SHAPES_BY_NAME,
+from repro.common.registry import get_arch, list_archs  # noqa: E402
+from repro.config import (RuntimeConfig, TrainConfig, SHAPES_BY_NAME,  # noqa: E402
                           applicable_shapes)
-from repro.launch.analytic import analytic_summary
-from repro.launch.hlo_analysis import (Roofline, model_flops_for,
+from repro.launch.analytic import analytic_summary  # noqa: E402
+from repro.launch.hlo_analysis import (Roofline, model_flops_for,  # noqa: E402
                                        parse_collectives)
-from repro.launch.mesh import make_production_mesh
-from repro.launch.specs import batch_specs, cache_specs, param_specs
-from repro.models import get_model
-from repro.sharding.param import ParamDef, abstract_params
-from repro.sharding.rules import activate_mesh
-from repro.train.optimizer import AdamWState
-from repro.train.train_step import TrainState, make_train_step
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import batch_specs, cache_specs, param_specs  # noqa: E402
+from repro.models import get_model  # noqa: E402
+from repro.sharding.param import ParamDef, abstract_params  # noqa: E402
+from repro.sharding.rules import activate_mesh  # noqa: E402
+from repro.train.optimizer import AdamWState  # noqa: E402
+from repro.train.train_step import TrainState, make_train_step  # noqa: E402
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "experiments", "dryrun")
@@ -105,13 +104,13 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
     shape = SHAPES_BY_NAME[shape_name]
 
     rules = DP_RULES if profile == "dp" else DEFAULT_RULES
-    t0 = time.time()
+    t0 = time.time()  # cc-lint: disable=CC001 -- real lowering/compile wall time is the report
     with activate_rules(rules):
         lowered = build_lowered(arch, shape_name, mesh, rcfg, quant)
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.time() - t0  # cc-lint: disable=CC001 -- real lowering/compile wall time is the report
+    t0 = time.time()  # cc-lint: disable=CC001 -- real lowering/compile wall time is the report
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.time() - t0  # cc-lint: disable=CC001 -- real lowering/compile wall time is the report
 
     cost = compiled.cost_analysis() or {}
     if isinstance(cost, list):

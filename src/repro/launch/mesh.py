@@ -30,7 +30,7 @@ def make_production_mesh(*, multi_pod: bool = False, shape=None, axes=None):
         raise RuntimeError(
             f"mesh {shape} needs {n} devices, have {len(devices)} — run under "
             f"XLA_FLAGS=--xla_force_host_platform_device_count={n} (dryrun.py "
-            f"does this automatically)")
+            "does this automatically)")
     import numpy as np
     return jax.sharding.Mesh(np.array(devices).reshape(shape), axes)
 

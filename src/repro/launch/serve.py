@@ -16,7 +16,6 @@ import argparse
 import dataclasses
 
 import jax
-import numpy as np
 
 from repro.common.hardware import ORIN_AGX
 from repro.common.registry import get_arch

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.config import ModelConfig, RuntimeConfig, ShapeConfig
 from repro.models import get_model
 from repro.quant import quant_spec
-from repro.sharding.param import ParamDef, abstract_params
+from repro.sharding.param import abstract_params
 from repro.sharding.rules import logical_sharding
 
 

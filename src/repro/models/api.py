@@ -7,10 +7,7 @@ talks to this wrapper.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
 
-import jax
-import jax.numpy as jnp
 
 from repro.config import ModelConfig, RuntimeConfig
 

@@ -12,7 +12,6 @@ original embedding); LoRA adapters on the shared block are omitted.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -177,7 +176,6 @@ def decode_step(params, cache, tokens, lengths, cfg: ModelConfig,
                 rcfg: RuntimeConfig, positions=None):
     from repro.models.transformer import embed_tokens, unembed
     x = embed_tokens(params, {"tokens": tokens}, cfg)
-    Bb = x.shape[0]
     cos, sin = L.rope_cos_sin(lengths[:, None], cfg.resolved_head_dim,
                               cfg.rope_theta)
     groups, pgm, trailing = _layout(cfg)

@@ -11,8 +11,7 @@ with two small all-reduces (flash-decode pattern).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -155,7 +154,7 @@ def chunked_attention(q, k, v, *, causal=True, window=0, cap=0.0, chunk=512,
     vs = v.reshape(B, n_chunks, chunk, N, H)
 
     def body(carry, inp):
-        m, l, acc = carry
+        m, lsum, acc = carry
         kc, vc, start = inp                                  # (B,chunk,N,H)
         logits = jnp.einsum("bnqh,bsnh->bnqs", qr, kc.astype(jnp.float32))
         logits = softcap(logits, cap)
@@ -164,7 +163,7 @@ def chunked_attention(q, k, v, *, causal=True, window=0, cap=0.0, chunk=512,
         m_new = jnp.maximum(m, logits.max(axis=-1))
         p = jnp.exp(logits - m_new[..., None])
         alpha = jnp.exp(m - m_new)
-        l_new = l * alpha + p.sum(axis=-1)
+        l_new = lsum * alpha + p.sum(axis=-1)
         acc_new = acc * alpha[..., None] + jnp.einsum(
             "bnqs,bsnh->bnqh", p, vc.astype(jnp.float32))
         return (m_new, l_new, acc_new), None
@@ -173,10 +172,10 @@ def chunked_attention(q, k, v, *, causal=True, window=0, cap=0.0, chunk=512,
     l0 = jnp.zeros((B, N, Sq), jnp.float32)
     acc0 = jnp.zeros((B, N, Sq, H), jnp.float32)
     starts = jnp.arange(n_chunks) * chunk
-    (m, l, acc), _ = jax.lax.scan(
+    (m, lsum, acc), _ = jax.lax.scan(
         body, (m0, l0, acc0),
         (ks.swapaxes(0, 1), vs.swapaxes(0, 1), starts))
-    out = acc / jnp.maximum(l, 1e-37)[..., None]
+    out = acc / jnp.maximum(lsum, 1e-37)[..., None]
     out = out.swapaxes(1, 2)                                  # (B,Sq,N,H)
     return out.astype(q.dtype)
 

@@ -10,7 +10,6 @@ The reference here is pure jnp and doubles as the oracle for kernels/ssd.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

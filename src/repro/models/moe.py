@@ -18,8 +18,6 @@ which is exactly the FSDP weight all-gather GSPMD would emit.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +27,7 @@ from repro.config import ModelConfig
 from repro.models.blocks import act, mlp_spec
 from repro.quant import dense, QTensor, dequantize
 from repro.sharding.param import ParamDef
-from repro.sharding.rules import current_mesh, constrain
+from repro.sharding.rules import current_mesh
 
 
 def moe_spec(cfg: ModelConfig, lead=(), lead_log=()):

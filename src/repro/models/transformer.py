@@ -15,7 +15,6 @@ Design notes:
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

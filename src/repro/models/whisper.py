@@ -181,7 +181,6 @@ def decode_step(params, cache, tokens, lengths, cfg: ModelConfig,
                 rcfg: RuntimeConfig, positions=None):
     from repro.models.transformer import unembed
     x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
-    Bb = x.shape[0]
     # per-row position: gather one sinusoid row per sequence
     pos_table = L.sinusoidal_positions(cache["self"]["k"].shape[2], cfg.d_model)
     x = x + jnp.take(pos_table, lengths, axis=0)[:, None, :].astype(x.dtype)

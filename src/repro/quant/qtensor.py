@@ -12,7 +12,6 @@ fused Pallas dequant-matmul kernel (RuntimeConfig.use_pallas).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -165,7 +164,7 @@ def _eligible(d: ParamDef) -> bool:
         return False
     if d.logical[-2] == "vocab":           # (vocab, embed) lookup table
         return False
-    if any(l in ("conv", "state") for l in d.logical if l):
+    if any(ax in ("conv", "state") for ax in d.logical if ax):
         return False
     if d.init in ("zeros", "ones"):        # biases, norm scales
         return False

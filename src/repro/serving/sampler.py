@@ -12,9 +12,9 @@ def sample_tokens(logits, key, *, temperature: float = 0.0, top_k: int = 0):
     """logits: (B, V) -> (B,) int32."""
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    l = logits / temperature
+    z = logits / temperature
     if top_k > 0:
-        vals, _ = jax.lax.top_k(l, top_k)
+        vals, _ = jax.lax.top_k(z, top_k)
         cut = vals[:, -1][:, None]
-        l = jnp.where(l < cut, -1e30, l)
-    return jax.random.categorical(key, l, axis=-1).astype(jnp.int32)
+        z = jnp.where(z < cut, -1e30, z)
+    return jax.random.categorical(key, z, axis=-1).astype(jnp.int32)

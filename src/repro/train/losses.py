@@ -8,7 +8,6 @@ peak memory is O(T x chunk) for both passes.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -32,8 +32,11 @@ class AdamWState:
 
 
 def adamw_init(params) -> AdamWState:
-    f32 = lambda t: jax.tree.map(lambda p: p.astype(jnp.float32), t)
-    zeros = lambda t: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), t)
+    def f32(t):
+        return jax.tree.map(lambda p: p.astype(jnp.float32), t)
+
+    def zeros(t):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), t)
     return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(params),
                       nu=zeros(params), master=f32(params))
 
@@ -47,8 +50,8 @@ def lr_schedule(step, tcfg: TrainConfig):
 
 
 def global_norm(tree):
-    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
-              for l in jax.tree.leaves(tree)]
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
     return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
 
 

@@ -5,10 +5,9 @@ jit it with the shardings from launch/dryrun or launch/train.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict
+from typing import Any
 
 import jax
-import jax.numpy as jnp
 
 from repro.config import ModelConfig, RuntimeConfig, TrainConfig
 from repro.models import get_model

@@ -1,0 +1,403 @@
+"""Tests for the invariant lint suite (`repro.analysis`).
+
+Fixture snippets trip every rule CC001–CC006 (plus the CC000 pragma
+hygiene layer), pragmas suppress at line and file scope, the CC003 schema
+check fails on a synthetic field removal from the REAL protocol.py, and
+the `python -m repro.analysis` entry point wires paths/JSON/exit codes.
+"""
+import json
+import shutil
+import textwrap
+from pathlib import Path
+
+from repro.analysis import lint_paths
+from repro.analysis.__main__ import main as analysis_main
+from repro.analysis.framework import known_codes
+
+REPO = Path(__file__).resolve().parent.parent
+PROTOCOL = REPO / "src" / "repro" / "serving" / "protocol.py"
+
+
+def run_lint(tmp_path: Path, rel: str, source: str, options=None):
+    """Write `source` at `rel` under a scratch root and lint it; returns
+    the violations list (dicts). Fixture snippets spell pragmas with the
+    `@pragma` placeholder so THIS file's own lines never look like real
+    suppressions to the (line-based) pragma scanner."""
+    f = tmp_path / rel
+    f.parent.mkdir(parents=True, exist_ok=True)
+    f.write_text(textwrap.dedent(source).replace("@pragma", "cc-lint"),
+                 encoding="utf-8")
+    report = lint_paths([f], tmp_path, options=options)
+    return report["violations"]
+
+
+def codes(violations):
+    return [v["code"] for v in violations]
+
+
+# ---------------------------------------------------------------------------
+# CC001 determinism
+# ---------------------------------------------------------------------------
+
+
+def test_cc001_wall_clock(tmp_path):
+    vs = run_lint(tmp_path, "src/repro/serving/clocky.py", """\
+        import time
+        from time import perf_counter as pc
+
+        def bad():
+            return time.time() + pc()
+        """)
+    assert codes(vs) == ["CC001", "CC001"]
+    assert "time.time" in vs[0]["message"]
+    assert "time.perf_counter" in vs[1]["message"]
+
+
+def test_cc001_unseeded_randomness(tmp_path):
+    vs = run_lint(tmp_path, "src/repro/core/randy.py", """\
+        import random
+        import numpy as np
+
+        def bad():
+            a = np.random.default_rng()        # unseeded generator
+            b = np.random.rand(3)              # global numpy state
+            c = random.random()                # global stdlib state
+            return a, b, c
+
+        def good(seed):
+            return np.random.default_rng(seed).random()
+        """)
+    assert codes(vs) == ["CC001", "CC001", "CC001"]
+
+
+def test_cc001_set_iteration_scoped_to_engine_path(tmp_path):
+    src = """\
+        def bad(xs):
+            out = []
+            for x in set(xs):
+                out.append(x)
+            return out + [y for y in {1, 2, 3}] + list(frozenset(xs))
+        """
+    engine_path = run_lint(tmp_path, "src/repro/serving/sety.py", src)
+    assert codes(engine_path) == ["CC001", "CC001", "CC001"]
+    # outside src/repro/{serving,core} set order is not parity-critical
+    assert run_lint(tmp_path, "benchmarks/sety.py", src) == []
+
+
+def test_cc001_sorted_set_is_fine(tmp_path):
+    assert run_lint(tmp_path, "src/repro/core/ok.py", """\
+        def good(xs):
+            return [x for x in sorted(set(xs))]
+        """) == []
+
+
+# ---------------------------------------------------------------------------
+# CC002 tracer-safety
+# ---------------------------------------------------------------------------
+
+
+def test_cc002_host_conversions_and_branches(tmp_path):
+    src = """\
+        import jax.numpy as jnp
+
+        def bad(x):
+            v = float(jnp.sum(x))          # implicit sync
+            s = x.item()                   # implicit sync
+            if jnp.any(x > 0):             # branch on traced value
+                v += 1.0
+            return v, s
+        """
+    vs = run_lint(tmp_path, "src/repro/kernels/k.py", src)
+    assert codes(vs) == ["CC002", "CC002", "CC002"]
+    # the same code outside jit-reachable scope is host-side and legal
+    assert run_lint(tmp_path, "src/repro/core/host.py", src) == []
+
+
+def test_cc002_scope_includes_engine_file_only(tmp_path):
+    src = """\
+        import jax.numpy as jnp
+
+        def bad(x):
+            return int(jnp.argmax(x))
+        """
+    assert codes(run_lint(tmp_path, "src/repro/serving/engine.py", src)) \
+        == ["CC002"]
+    assert run_lint(tmp_path, "src/repro/serving/scheduler.py", src) == []
+
+
+def test_cc002_plain_float_is_fine(tmp_path):
+    assert run_lint(tmp_path, "src/repro/models/m.py", """\
+        def good(x):
+            return float(x) + int(len([1]))
+        """) == []
+
+
+# ---------------------------------------------------------------------------
+# CC003 protocol freeze
+# ---------------------------------------------------------------------------
+
+
+def _protocol_tree(tmp_path: Path, mutate) -> list:
+    """Copy the REAL protocol.py into a scratch tree, apply `mutate` to its
+    text, lint against the real checked-in snapshot."""
+    dst = tmp_path / "src" / "repro" / "serving" / "protocol.py"
+    dst.parent.mkdir(parents=True, exist_ok=True)
+    dst.write_text(mutate(PROTOCOL.read_text(encoding="utf-8")),
+                   encoding="utf-8")
+    return lint_paths([dst], tmp_path)["violations"]
+
+
+def test_cc003_clean_on_faithful_copy(tmp_path):
+    assert _protocol_tree(tmp_path, lambda s: s) == []
+
+
+def test_cc003_field_removal_fails(tmp_path):
+    vs = _protocol_tree(
+        tmp_path, lambda s: s.replace("    swap_count: int = 0\n", ""))
+    assert codes(vs) == ["CC003"]
+    assert "EngineStats.swap_count removed" in vs[0]["message"]
+
+
+def test_cc003_retype_and_default_change_fail(tmp_path):
+    vs = _protocol_tree(
+        tmp_path, lambda s: s.replace("max_batch: int = 4",
+                                      "max_batch: float = 8"))
+    msgs = " | ".join(v["message"] for v in vs)
+    assert codes(vs) == ["CC003", "CC003"]
+    assert "retyped" in msgs and "default changed" in msgs
+
+
+def test_cc003_addition_requires_version_bump(tmp_path):
+    vs = _protocol_tree(
+        tmp_path,
+        lambda s: s.replace("    swap_count: int = 0\n",
+                            "    swap_count: int = 0\n"
+                            "    shiny_new_field: int = 7\n"))
+    assert codes(vs) == ["CC003"]
+    assert "without bumping STATS_SCHEMA_VERSION" in vs[0]["message"]
+
+
+def test_cc003_bump_without_regeneration_flagged(tmp_path):
+    vs = _protocol_tree(
+        tmp_path,
+        lambda s: s.replace("STATS_SCHEMA_VERSION = 1",
+                            "STATS_SCHEMA_VERSION = 2"))
+    assert codes(vs) == ["CC003"]
+    assert "--update-schema" in vs[0]["message"]
+
+
+def test_cc003_missing_snapshot_points_at_update(tmp_path):
+    dst = tmp_path / "src" / "repro" / "serving" / "protocol.py"
+    dst.parent.mkdir(parents=True, exist_ok=True)
+    shutil.copyfile(PROTOCOL, dst)
+    vs = lint_paths([dst], tmp_path,
+                    options={"protocol_schema": tmp_path / "nope.json"})
+    assert codes(vs["violations"]) == ["CC003"]
+    assert "--update-schema" in vs["violations"][0]["message"]
+
+
+# ---------------------------------------------------------------------------
+# CC004 refcount discipline
+# ---------------------------------------------------------------------------
+
+
+def test_cc004_mutations_flagged_outside_pool(tmp_path):
+    src = """\
+        def corrupt(pool, bid):
+            pool.refcount[bid] += 1
+            pool.refcount = None
+            pool._free.append(bid)
+            del pool.refcount[bid]
+            return pool.refcount[bid]      # reads are fine
+        """
+    vs = run_lint(tmp_path, "src/repro/serving/elsewhere.py", src)
+    assert codes(vs) == ["CC004"] * 4
+    # the pool module itself owns this state
+    assert run_lint(tmp_path, "src/repro/serving/block_pool.py", src) == []
+
+
+def test_cc004_pool_api_calls_are_fine(tmp_path):
+    assert run_lint(tmp_path, "src/repro/serving/user.py", """\
+        def borrow(pool, bid):
+            pool.incref(bid)
+            return pool.decref(bid)
+        """) == []
+
+
+# ---------------------------------------------------------------------------
+# CC005 units
+# ---------------------------------------------------------------------------
+
+
+def test_cc005_mixed_addition_and_compare(tmp_path):
+    vs = run_lint(tmp_path, "src/repro/core/u.py", """\
+        def bad(lat_s, en_j, dt_ms, p_w):
+            x = lat_s + en_j               # s + J
+            y = lat_s - dt_ms              # scale mismatch
+            if lat_s > en_j:               # comparison across dims
+                x += 1
+            return x, y
+        """)
+    assert codes(vs) == ["CC005"] * 3
+    assert "mixes dimensions" in vs[0]["message"]
+    assert "mixes scales" in vs[1]["message"]
+
+
+def test_cc005_product_assignment(tmp_path):
+    vs = run_lint(tmp_path, "src/repro/core/u2.py", """\
+        def bad(p_w, dt_s, en_j):
+            e_j = p_w * dt_s               # W*s = J: fine
+            t_s = en_j / p_w               # J/W = s: fine
+            bad_w = en_j * dt_s            # J*s is not W
+            return e_j, t_s, bad_w
+        """)
+    assert codes(vs) == ["CC005"]
+    assert "bad_w" in vs[0]["message"]
+
+
+def test_cc005_unknown_suffixes_never_fire(tmp_path):
+    assert run_lint(tmp_path, "src/repro/core/u3.py", """\
+        def good(n_calls, queue_wait_s, factor):
+            total_s = queue_wait_s + queue_wait_s
+            scaled = factor * n_calls
+            c_mg = 1000 * 2.0              # constants are dimensionless
+            return total_s, scaled, c_mg
+        """) == []
+
+
+# ---------------------------------------------------------------------------
+# CC006 deprecation expiry
+# ---------------------------------------------------------------------------
+
+
+def test_cc006_expired_shims(tmp_path):
+    vs = run_lint(tmp_path, "src/repro/core/old.py", """\
+        def run_query(self, **kw):
+            pass
+
+        def caller(ex, rt):
+            return ex.run_query(n_calls=1), rt.handle_query(0, None, 0, None)
+        """)
+    assert codes(vs) == ["CC006"] * 3
+    assert "session API" in vs[0]["message"]
+
+
+# ---------------------------------------------------------------------------
+# pragmas + CC000 hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_line_pragma_suppresses_only_its_line(tmp_path):
+    vs = run_lint(tmp_path, "src/repro/core/p.py", """\
+        import time
+
+        def timed():
+            t0 = time.time()  # @pragma: disable=CC001 -- operator-facing wall timing
+            t1 = time.time()
+            return t1 - t0
+        """)
+    assert codes(vs) == ["CC001"]
+    assert vs[0]["line"] == 5
+
+
+def test_file_pragma_suppresses_whole_file(tmp_path):
+    assert run_lint(tmp_path, "src/repro/core/pf.py", """\
+        # @pragma: disable-file=CC001 -- wall-clock benchmark module
+        import time
+
+        def a():
+            return time.time()
+
+        def b():
+            return time.time()
+        """) == []
+
+
+def test_bare_pragma_is_cc000(tmp_path):
+    vs = run_lint(tmp_path, "src/repro/core/bare.py", """\
+        import time
+
+        def t():
+            return time.time()  # @pragma: disable=CC001
+        """)
+    assert codes(vs) == ["CC000"]
+    assert "without a reason" in vs[0]["message"]
+
+
+def test_unknown_code_in_pragma_is_cc000(tmp_path):
+    vs = run_lint(tmp_path, "src/repro/core/unk.py", """\
+        x = 1  # @pragma: disable=CC742 -- no such rule
+        """)
+    assert codes(vs) == ["CC000"]
+    assert "CC742" in vs[0]["message"]
+
+
+def test_syntax_error_is_cc000(tmp_path):
+    vs = run_lint(tmp_path, "src/repro/core/boom.py", "def broken(:\n")
+    assert codes(vs) == ["CC000"]
+    assert "does not parse" in vs[0]["message"]
+
+
+# ---------------------------------------------------------------------------
+# runner / CLI
+# ---------------------------------------------------------------------------
+
+
+def test_report_shape_and_sorting(tmp_path):
+    (tmp_path / "src").mkdir()
+    (tmp_path / "src" / "a.py").write_text(
+        "import time\nx = time.time()\ny = time.time()\n", encoding="utf-8")
+    report = lint_paths([tmp_path / "src"], tmp_path)
+    assert report["version"] == 1
+    assert report["files_scanned"] == 1
+    assert report["counts"] == {"CC001": 2}
+    lines = [v["line"] for v in report["violations"]]
+    assert lines == sorted(lines)
+    assert set(report["rules"]) == set(known_codes())
+
+
+def test_main_exit_codes_and_json(tmp_path, capsys):
+    src = tmp_path / "src"
+    src.mkdir()
+    (src / "clean.py").write_text("x = 1\n", encoding="utf-8")
+    out_json = tmp_path / "report.json"
+    assert analysis_main([str(src), "--root", str(tmp_path),
+                          "--json", str(out_json)]) == 0
+    assert json.loads(out_json.read_text())["violations"] == []
+
+    (src / "dirty.py").write_text("import time\nt = time.time()\n",
+                                  encoding="utf-8")
+    summary = tmp_path / "summary.md"
+    assert analysis_main([str(src), "--root", str(tmp_path),
+                          "--json", str(out_json),
+                          "--summary", str(summary)]) == 1
+    report = json.loads(out_json.read_text())
+    assert report["counts"] == {"CC001": 1}
+    assert "CC001" in summary.read_text()
+    assert analysis_main(["no/such/dir", "--root", str(tmp_path)]) == 2
+    capsys.readouterr()                     # swallow the human output
+
+
+def test_update_schema_roundtrip(tmp_path, capsys):
+    """--update-schema against a scratch root writes a snapshot that then
+    lints clean, and the default repo snapshot is in sync with the real
+    protocol.py."""
+    proto_dir = tmp_path / "src" / "repro" / "serving"
+    proto_dir.mkdir(parents=True)
+    shutil.copyfile(PROTOCOL, proto_dir / "protocol.py")
+    snap = tmp_path / "schema.json"
+    assert analysis_main(["--root", str(tmp_path), "--update-schema",
+                          "--schema", str(snap)]) == 0
+    assert snap.exists()
+    vs = lint_paths([proto_dir / "protocol.py"], tmp_path,
+                    options={"protocol_schema": snap})["violations"]
+    assert vs == []
+    capsys.readouterr()
+
+
+def test_repo_tree_is_clean():
+    """The acceptance gate: the shipped tree lints clean (every violation
+    fixed or pragma'd with a reason)."""
+    report = lint_paths([REPO / "src", REPO / "benchmarks", REPO / "tests"],
+                        REPO)
+    assert report["violations"] == [], [v for v in report["violations"]]

@@ -4,10 +4,19 @@ import numpy as np
 import pytest
 
 from repro.common.hardware import ORIN_AGX
-from repro.core import (
-    CarbonGovernor, GovernorState, VariantSwitcher, ORIN_MODES, ci_trace,
-    forecast_trace, carbon_footprint, SimExecutor, PAPER_MODELS,
-    CarbonCallRuntime, run_week, POLICIES, ToolSelector, WEEKS)
+from repro.core import (CarbonGovernor,
+                        VariantSwitcher,
+                        ORIN_MODES,
+                        ci_trace,
+                        forecast_trace,
+                        carbon_footprint,
+                        SimExecutor,
+                        PAPER_MODELS,
+                        CarbonCallRuntime,
+                        run_week,
+                        POLICIES,
+                        ToolSelector,
+                        WEEKS)
 from repro.core.power import PowerModel
 from repro.data.workload import build_catalog, FunctionCallWorkload
 

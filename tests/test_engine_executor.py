@@ -51,7 +51,8 @@ def test_q4_decode_at_least_q8_tps_on_both_backends(engine_ex):
     for ex in (SimExecutor(PROF, ORIN_AGX, seed=0), engine_ex):
         q8 = _run(ex, variant="q8")
         q4 = _run(ex, variant="q4")
-        dec_tps = lambda r: r.decode_tokens / r.decode_time_s
+        def dec_tps(r):
+            return r.decode_tokens / r.decode_time_s
         assert dec_tps(q4) >= dec_tps(q8)
 
 
@@ -72,15 +73,13 @@ def test_sessions_emit_real_tokens(engine_ex):
     assert qe.tps > 0 and qe.energy_j > 0
 
 
-def test_run_query_shim_warns_but_works(engine_ex):
-    """The retired blocking contract survives one release as a warning
-    alias over begin_query + settle, on both backends."""
+def test_blocking_shims_are_gone(engine_ex):
+    """The blocking contract's one-release deprecation window has closed:
+    the shims are deleted on both backends (CC006 in `repro.analysis`
+    guards the callers; this guards the definitions)."""
     for ex in (SimExecutor(PROF, ORIN_AGX, seed=0), engine_ex):
-        with pytest.warns(DeprecationWarning, match="run_query is deprecated"):
-            qe = ex.run_query(n_tools_in_prompt=1, n_calls=1,
-                              selection_correct=True, variant="q8",
-                              mode=ORIN_MODES[0])
-        assert qe.succeeded and qe.decode_tokens > 0
+        assert not hasattr(ex, "run_query")
+        assert ex.begin_query is not None
 
 
 def test_live_swap_follows_requested_variant(engine_ex):
@@ -138,9 +137,10 @@ def test_prefill_stall_attributed_to_residents():
     step on the shared engine clock. Now the step_log's `resident_rids`
     closes the gap: B pays an energy share and accrues the dt as stall_s."""
     ex = EngineExecutor(PROF, ORIN_AGX, seed=0, max_batch=2)
-    mk = lambda tools, calls: ex.begin_query(
-        n_tools_in_prompt=tools, n_calls=calls, selection_correct=True,
-        variant="q8", mode=ORIN_MODES[0])
+    def mk(tools, calls):
+        return ex.begin_query(
+            n_tools_in_prompt=tools, n_calls=calls, selection_correct=True,
+            variant="q8", mode=ORIN_MODES[0])
     s1, s2, s3 = mk(1, 1), mk(2, 2), mk(3, 1)   # rids 0, 1, 2
     ex.settle([s1, s2, s3])
     # s1 (12 new tokens) finishes before s2 (24); its freed slot admits s3

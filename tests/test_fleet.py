@@ -45,7 +45,11 @@ def test_carbon_aware_beats_round_robin(setup):
     pods_rr = _pods(4, selector, catalog, weeks)
     import repro.core.fleet as fleet_mod
     orig = fleet_mod.FleetRouter._score
-    fleet_mod.FleetRouter._score = lambda self, pod, i, tier=None: pod.served
+
+    def _served_only(self, pod, i, tier=None):
+        return pod.served
+
+    fleet_mod.FleetRouter._score = _served_only
     try:
         recs_rr = run_fleet(pods_rr, FunctionCallWorkload(catalog, seed=5),
                             n_steps=144, queries_per_hour=30)

@@ -1,0 +1,148 @@
+"""Direct unit coverage for `serving/invariants.check_invariants`.
+
+The soak suite only ever shows the checker *clean* engines — if a
+reconciliation had a hole (a check that can never fire, a message tied to
+the wrong counter), the soak's green runs would never notice. These tests
+corrupt a genuinely drained engine one invariant at a time and assert the
+SPECIFIC violation string, then restore the corruption and assert the
+checker goes clean again (so every test sees the same engine and the
+destructive `flush=True` baseline check runs last).
+"""
+import jax
+import pytest
+
+from repro.config import ModelConfig, RuntimeConfig
+from repro.models import get_model
+from repro.quant import quantize_tree
+from repro.serving import Request, ServingEngine, VirtualClock
+from repro.serving.invariants import check_invariants
+from repro.serving.scheduler import CANCELLED, DONE, EXPIRED
+from repro.sharding.param import init_params
+
+CFG = ModelConfig(name="inv-tiny", family="transformer", num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                  vocab_size=256)
+# block-aligned shared prefix so the prefix cache holds real references
+# at drain time (the refcount reconciliation needs cache holdings)
+PREFIX = [5] * 16
+
+
+@pytest.fixture(scope="module")
+def drained():
+    """One paged engine driven to a drained state: 3 requests with a shared
+    prefix (one cancelled mid-flight), prefix-cache entries alive."""
+    model = get_model(CFG)
+    params = init_params(model.param_spec(), jax.random.PRNGKey(0))
+    eng = ServingEngine(CFG, quantize_tree(params, model.param_spec(), "q8"),
+                        RuntimeConfig(), max_batch=2, max_seq=64,
+                        kv_layout="paged", block_size=8, num_blocks=24,
+                        clock=VirtualClock())
+    eng.variant_name = "q8"
+    reqs = []
+    for i in range(3):
+        req = Request(rid=eng.next_rid(), prompt=PREFIX + [10 + i, 11 + i],
+                      max_new_tokens=4, eos_id=-1, temperature=0.0,
+                      tier="standard")
+        eng.submit(req)
+        reqs.append(req)
+    cancel_victim = reqs[1]
+    for _ in range(2):
+        eng.step()
+    eng.cancel(cancel_victim)
+    eng.run_until_drained()
+    assert all(r.status in (DONE, CANCELLED) for r in reqs)
+    return eng, reqs
+
+
+def _clean(eng, reqs):
+    errs = check_invariants(eng, reqs, flush=False)
+    assert errs == [], errs
+
+
+def test_drained_engine_is_clean(drained):
+    _clean(*drained)
+
+
+def test_miscounted_tokens(drained):
+    eng, reqs = drained
+    eng.tokens_emitted += 1
+    errs = check_invariants(eng, reqs, flush=False)
+    assert "tokens_emitted != step_log token sum" in errs
+    eng.tokens_emitted -= 1
+    _clean(eng, reqs)
+
+
+def test_leaked_refcount(drained):
+    eng, reqs = drained
+    bid = next(b for e in eng.prefix_cache.entries.values()
+               for b in e.blocks)
+    # corrupt the pool's ground truth directly — the point is to verify the
+    # checker catches exactly the class of bug the pool API prevents
+    eng.block_pool.refcount[bid] += 1  # cc-lint: disable=CC004 -- deliberate corruption to exercise the reconciliation
+    errs = check_invariants(eng, reqs, flush=False)
+    assert any(err.startswith(f"block {bid}: refcount") for err in errs), errs
+    eng.block_pool.refcount[bid] -= 1  # cc-lint: disable=CC004 -- undo the deliberate corruption above
+    _clean(eng, reqs)
+
+
+def test_surviving_parked_chain(drained):
+    eng, reqs = drained
+    reqs[0].chunk_blocks = [1]
+    errs = check_invariants(eng, reqs, flush=False)
+    assert "parked partial prefill survived the drain" in errs
+    reqs[0].chunk_blocks = []
+    _clean(eng, reqs)
+
+
+def test_requeue_preemption_mismatch(drained):
+    eng, reqs = drained
+    eng.scheduler.requeues += 1
+    errs = check_invariants(eng, reqs, flush=False)
+    assert "requeues != preemptions" in errs
+    eng.scheduler.requeues -= 1
+    _clean(eng, reqs)
+
+
+def test_terminal_status_flip(drained):
+    eng, reqs = drained
+    done = next(r for r in reqs if r.status == DONE)
+    done.status = CANCELLED
+    errs = check_invariants(eng, reqs, flush=False)
+    assert "cancelled counter != CANCELLED requests" in errs
+    assert any(err.startswith("tier 'done' counters") for err in errs), errs
+    done.status = DONE
+    _clean(eng, reqs)
+
+
+def test_expired_request_holding_resume_state(drained):
+    eng, reqs = drained
+    done = next(r for r in reqs if r.status == DONE)
+    done.status = EXPIRED
+    done.resume_row = done.output[:1]
+    errs = check_invariants(eng, reqs, flush=False)
+    assert f"expired rid {done.rid} still holds resume state" in errs
+    # the flip also trips the status/tier reconciliations — both layers see it
+    assert "expired counter != EXPIRED requests" in errs
+    done.status = DONE
+    done.resume_row = None
+    _clean(eng, reqs)
+
+
+def test_output_appearance_mismatch(drained):
+    eng, reqs = drained
+    done = next(r for r in reqs if r.status == DONE)
+    done.output.append(99)
+    errs = check_invariants(eng, reqs, flush=False)
+    assert f"rid {done.rid} output != logged appearances" in errs
+    done.output.pop()
+    _clean(eng, reqs)
+
+
+def test_zz_flush_baseline_runs_last(drained):
+    """Destructive: flush=True clears the prefix cache and verifies the
+    pool returns to its empty baseline. Named to sort last in the file —
+    every earlier test needs the cache holdings intact."""
+    eng, reqs = drained
+    errs = check_invariants(eng, reqs, flush=True)
+    assert errs == [], errs
+    assert eng.block_pool.num_free == eng.block_pool.num_blocks - 1

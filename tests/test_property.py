@@ -3,19 +3,19 @@ import pytest
 
 pytest.importorskip("hypothesis")   # optional dev dep (requirements-dev.txt)
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from hypothesis import given, settings, strategies as st
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import CarbonGovernor, ORIN_MODES, carbon_footprint
-from repro.core.switching import VariantSwitcher
-from repro.quant import quantize, dequantize
-from repro.serving import Request, Scheduler
-from repro.serving.scheduler import EXPIRED, WAITING
-from repro.sharding.rules import resolve_spec
-from repro.train.compression import compress_roundtrip
-from jax.sharding import Mesh
+from repro.core import CarbonGovernor, ORIN_MODES, carbon_footprint  # noqa: E402
+from repro.core.switching import VariantSwitcher  # noqa: E402
+from repro.quant import quantize, dequantize  # noqa: E402
+from repro.serving import Request, Scheduler  # noqa: E402
+from repro.serving.scheduler import EXPIRED, WAITING  # noqa: E402
+from repro.sharding.rules import resolve_spec  # noqa: E402
+from repro.train.compression import compress_roundtrip  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
 
 MESH = None
 

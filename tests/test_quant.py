@@ -69,8 +69,8 @@ def test_bytes_reduction():
     spec = model.param_spec()
     params = init_params(spec, jax.random.PRNGKey(0))
     def nbytes(tree):
-        return sum(l.nbytes() if isinstance(l, QTensor) else l.nbytes
-                   for l in jax.tree.leaves(
+        return sum(q.nbytes() if isinstance(q, QTensor) else q.nbytes
+                   for q in jax.tree.leaves(
                        tree, is_leaf=lambda x: isinstance(x, QTensor)))
     b16 = nbytes(params)
     b8 = nbytes(quantize_tree(params, spec, "q8"))

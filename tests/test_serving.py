@@ -1,13 +1,12 @@
 """Serving engine: continuous batching, slot reuse, variant hot-swap,
 quantized serving correctness."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.config import ModelConfig, RuntimeConfig
 from repro.models import get_model
-from repro.quant import quantize_tree, dequantize, QTensor
+from repro.quant import quantize_tree, QTensor
 from repro.serving import ServingEngine, Request, VirtualClock
 from repro.sharding.param import init_params
 
@@ -61,8 +60,8 @@ def test_quantized_serving_close_to_bf16(params):
     model = get_model(CFG)
     spec = model.param_spec()
     q8 = quantize_tree(params, spec, "q8")
-    assert any(isinstance(l, QTensor)
-               for l in jax.tree.leaves(q8, is_leaf=lambda x: isinstance(x, QTensor)))
+    assert any(isinstance(q, QTensor)
+               for q in jax.tree.leaves(q8, is_leaf=lambda x: isinstance(x, QTensor)))
     outs = {}
     for name, p in [("bf16", params), ("q8", q8)]:
         eng = ServingEngine(CFG, p, RCFG, max_batch=1, max_seq=64)
@@ -75,7 +74,6 @@ def test_quantized_serving_close_to_bf16(params):
 def test_int8_kv_cache_decode_close(params):
     """int8 KV cache (beyond-paper serving lever, §Perf iter3): greedy decode
     stays close to the bf16-cache path."""
-    model = get_model(CFG)
     outs = {}
     for name, rc in [("bf16", RCFG),
                      ("int8", RuntimeConfig(kv_cache_dtype="int8"))]:

@@ -3,10 +3,8 @@ determinism, gradient compression integration."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.config import ModelConfig, RuntimeConfig, TrainConfig
-from repro.configs.reduced import smoke_batch
 from repro.data.pipeline import TokenPipeline, synthetic_lm_batch
 from repro.models import get_model
 from repro.sharding.param import init_params
