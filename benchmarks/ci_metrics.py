@@ -100,6 +100,21 @@ _SCHEMAS: Dict[str, List[Tuple[str, str, Callable]]] = {
         ("acceptance_pass", INFO,
          lambda d: _get(d, "acceptance", "pass")),
     ],
+    "spec_decode": [
+        # gated: spec decode must beat plain Q8 on throughput AND carbon
+        ("decode_tps", HIGHER,
+         lambda d: _get(d, "acceptance", "decode_tps")),
+        ("carbon_mg_per_query", LOWER,
+         lambda d: _get(d, "acceptance", "carbon_mg_per_query")),
+        ("decode_tps_ratio_vs_q8", HIGHER,
+         lambda d: _get(d, "acceptance", "decode_tps_ratio_vs_q8")),
+        ("accept_rate", INFO,
+         lambda d: _get(d, "acceptance", "accept_rate")),
+        ("token_parity", INFO,
+         lambda d: _get(d, "acceptance", "token_parity")),
+        ("acceptance_pass", INFO,
+         lambda d: _get(d, "acceptance", "pass")),
+    ],
     "fleet_workers": [
         # gated: aggregate VIRTUAL decode TPS across worker processes —
         # machine-stable (virtual clock), unlike the wall-time speedup
@@ -109,6 +124,10 @@ _SCHEMAS: Dict[str, List[Tuple[str, str, Callable]]] = {
          lambda d: _get(d, "workers", "carbon_g_per_query")),
         ("wall_speedup", INFO,
          lambda d: _get(d, "acceptance", "wall_speedup")),
+        # 1.0 = the wall-speedup gate did NOT bind on this host (see the
+        # artifact's acceptance.speedup_gate_skip_reason for why)
+        ("speedup_gate_skipped", INFO,
+         lambda d: _get(d, "acceptance", "speedup_gate_skipped")),
         ("n_workers", INFO, lambda d: _get(d, "workers", "n_workers")),
         ("acceptance_pass", INFO,
          lambda d: _get(d, "acceptance", "pass")),

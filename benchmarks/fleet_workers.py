@@ -197,11 +197,23 @@ def run(n_workers: int = 4, n_queries: int = 24, *,
     token_parity = w["decode_tokens"] == ip["decode_tokens"]
     # the wall-speedup criterion only binds where process parallelism CAN
     # win: >= 4 cores and >= 4 workers (the acceptance host)
+    speedup_binding = multicore and n_workers >= 4
+    if speedup_binding:
+        speedup_skip_reason = ""
+    elif not multicore:
+        speedup_skip_reason = (f"host has {os.cpu_count() or 1} cores "
+                               "(< 4); wall speedup not gated")
+    else:
+        speedup_skip_reason = (f"only {n_workers} workers (< 4); "
+                               "wall speedup not gated")
     speedup_ok = (speedup >= WALL_SPEEDUP_TARGET
-                  if (multicore and n_workers >= 4) else True)
+                  if speedup_binding else True)
     acceptance = {
         "wall_speedup": speedup,
         "wall_speedup_target": WALL_SPEEDUP_TARGET,
+        "speedup_gate_binding": speedup_binding,
+        "speedup_gate_skipped": not speedup_binding,
+        "speedup_gate_skip_reason": speedup_skip_reason,
         "multicore_host": multicore,
         "cpu_count": os.cpu_count() or 1,
         "token_parity": token_parity,
@@ -212,11 +224,15 @@ def run(n_workers: int = 4, n_queries: int = 24, *,
     }
     if not quiet:
         emit("fleet_workers/speedup", speedup,
-             f"target>={WALL_SPEEDUP_TARGET} (binding={multicore}) "
+             f"target>={WALL_SPEEDUP_TARGET} (binding={speedup_binding}) "
              f"parity={token_parity} "
              f"CF/query={w['carbon_g_per_query'] * 1000:.2f}mg "
              f"(ceiling {FLEET_SCALE_CARBON_G * 1000:.2f}mg) "
              f"pass={acceptance['pass']}")
+        if not speedup_binding:
+            # a silently-passing gate looks like a passing gate; say so
+            emit("fleet_workers/speedup_gate_skipped", 1.0,
+                 speedup_skip_reason)
     return {"workers": w, "inprocess": ip, "acceptance": acceptance}
 
 

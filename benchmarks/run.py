@@ -12,6 +12,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
                          the priority-0 baseline) + deadline-aware routing
   chunked_prefill      — chunked prefill vs monolithic admission: interactive
                          p95 under a heavy-batch mix, decode-TPS parity gate
+  spec_decode          — Q4-draft/Q8-verify speculative decoding vs both
+                         plain engines: decode TPS + carbon/query across
+                         draft lengths, byte-parity with plain Q8
   fleet_scale          — sharded multi-host fleet scale-out: aggregate
                          decode TPS 4 vs 16 pods, regional carbon shedding,
                          data-parallel sharded pods (8 forced host devices)
@@ -47,7 +50,7 @@ def main() -> None:
     from benchmarks import (chunked_prefill, engine_week, fleet_engine,
                             fleet_scale, fleet_workers, kernels_bench,
                             operating_modes, paged_engine, qos_fleet,
-                            roofline_table, tool_selection,
+                            roofline_table, spec_decode, tool_selection,
                             variant_utilization, week_eval)
 
     if args.json_dir is not None:
@@ -58,6 +61,7 @@ def main() -> None:
             "qos_fleet": qos_fleet.json_summary,
             "fleet_scale": fleet_scale.json_summary,
             "chunked_prefill": chunked_prefill.json_summary,
+            "spec_decode": spec_decode.json_summary,
             "fleet_workers": fleet_workers.json_summary,
         }
         if args.only and args.only not in json_suites:
@@ -88,6 +92,7 @@ def main() -> None:
         "fleet_scale": fleet_scale.run,
         "fleet_workers": fleet_workers.run,
         "chunked_prefill": chunked_prefill.run,
+        "spec_decode": spec_decode.run,
         "roofline": roofline_table.run,
     }
     for name, fn in suites.items():

@@ -1,0 +1,148 @@
+"""Speculative decoding on the Q8/Q4 variant ladder vs both plain engines.
+
+Three engine-backed runs execute an identical query mix on identical virtual
+clocks: plain Q8 (the quality baseline), plain Q4 (the cheap-but-lossy swap
+CarbonCall already had), and spec-decode engines across draft lengths
+(k = 1, 2, 4 — the acceptance regimes the governor's carbon ladder walks).
+The spec engine drafts k tokens per step under the Q4 executable cache and
+verifies them in one batched Q8 forward, so its streams are byte-identical
+to plain Q8 (asserted here) while its virtual-clock decode throughput and
+energy come from the roofline power model: drafts priced at the Q4 power
+point, verifies at Q8.
+
+Acceptance (the CI gate): at the default draft length, spec decode TPS must
+reach >= 1.2x plain Q8 AND carbon mg/query must not exceed plain Q8 — i.e.
+the ladder buys latency AND energy with zero quality loss, unlike the plain
+Q4 row which pays quality for its savings.
+
+    PYTHONPATH=src:. python benchmarks/spec_decode.py [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, Optional
+
+from benchmarks.common import emit
+from repro.common.hardware import ORIN_AGX
+from repro.core import EngineExecutor, ORIN_MODES, PAPER_MODELS
+from repro.core.carbon import carbon_footprint
+from repro.serving import EngineConfig, SpecDecodeConfig
+
+CI_G_PER_KWH = 400.0     # fixed CI so carbon/query tracks energy/query
+MAX_BATCH = 4
+QUERIES = 12
+K_SWEEP = (1, 2, 4)
+K_DEFAULT = 2            # the gated operating point
+TPS_TARGET = 1.2         # spec decode TPS >= 1.2x plain Q8
+MODE = ORIN_MODES[0]
+
+
+def _run(variant: str, spec: Optional[SpecDecodeConfig]) -> Dict:
+    ex = EngineExecutor(
+        PAPER_MODELS["qwen2-7b"], ORIN_AGX, seed=0,
+        config=EngineConfig(max_batch=MAX_BATCH, spec_decode=spec))
+    kw = dict(n_tools_in_prompt=3, n_calls=2, selection_correct=True,
+              variant=variant, mode=MODE)
+    opened = [ex.begin_query(**kw) for _ in range(QUERIES)]
+    ex.settle(opened)
+    eng = ex.engine
+    decode_tps = eng.recent_tps(window=len(eng.step_log))
+    carbon_mg = 1000.0 * sum(
+        carbon_footprint(s.execution.energy_j, CI_G_PER_KWH)
+        for s in opened) / QUERIES
+    stats = eng.stats()
+    return {
+        "decode_tps": decode_tps,
+        "carbon_mg_per_query": carbon_mg,
+        "spec_steps": stats.spec_steps,
+        "draft_tokens": stats.draft_tokens,
+        "accepted_tokens": stats.accepted_tokens,
+        "accept_rate": stats.accept_rate,
+        "outputs": [s.execution.decode_tokens for s in opened],
+    }
+
+
+def _streams(variant: str, spec: Optional[SpecDecodeConfig]):
+    """Terminal token streams for the parity assertion (fresh executor so
+    rng draws align across runs)."""
+    ex = EngineExecutor(
+        PAPER_MODELS["qwen2-7b"], ORIN_AGX, seed=0,
+        config=EngineConfig(max_batch=MAX_BATCH, spec_decode=spec))
+    kw = dict(n_tools_in_prompt=3, n_calls=2, selection_correct=True,
+              variant=variant, mode=MODE)
+    opened = [ex.begin_query(**kw) for _ in range(QUERIES)]
+    handles = []
+    for s in opened:
+        ex._start_attempt(s)
+        handles.append(s.handle)
+    ex.client.settle(handles)
+    return [list(h.request.output) for h in handles]
+
+
+def run(quiet: bool = False) -> Dict:
+    out: Dict = {
+        "q8": _run("q8", None),
+        "q4": _run("q4", None),
+    }
+    for k in K_SWEEP:
+        out[f"spec_k{k}"] = _run(
+            "q8", SpecDecodeConfig(draft_variant="q4", k=k))
+    # byte parity: the spec engine's streams ARE plain Q8's streams
+    base = _streams("q8", None)
+    spec_streams = _streams(
+        "q8", SpecDecodeConfig(draft_variant="q4", k=K_DEFAULT))
+    assert base == spec_streams, \
+        "spec-decode streams diverged from plain Q8 at temperature 0"
+
+    q8, q4 = out["q8"], out["q4"]
+    sp = out[f"spec_k{K_DEFAULT}"]
+    tps_ratio = sp["decode_tps"] / max(q8["decode_tps"], 1e-9)
+    out["acceptance"] = {
+        "decode_tps": sp["decode_tps"],
+        "baseline_q8_tps": q8["decode_tps"],
+        "baseline_q4_tps": q4["decode_tps"],
+        "decode_tps_ratio_vs_q8": tps_ratio,
+        "carbon_mg_per_query": sp["carbon_mg_per_query"],
+        "baseline_q8_carbon_mg": q8["carbon_mg_per_query"],
+        "baseline_q4_carbon_mg": q4["carbon_mg_per_query"],
+        "accept_rate": sp["accept_rate"],
+        "token_parity": True,                  # asserted above
+        "tps_target": TPS_TARGET,
+        "pass": bool(tps_ratio >= TPS_TARGET
+                     and sp["carbon_mg_per_query"]
+                     <= q8["carbon_mg_per_query"]),
+    }
+    if not quiet:
+        a = out["acceptance"]
+        for k in K_SWEEP:
+            r = out[f"spec_k{k}"]
+            emit(f"spec_decode/k{k}/decode_tps", r["decode_tps"],
+                 f"accept={r['accept_rate']:.3f} "
+                 f"CF/query={r['carbon_mg_per_query']:.2f}mg")
+        emit("spec_decode/decode_tps", a["decode_tps"],
+             f"q8={a['baseline_q8_tps']:.1f} q4={a['baseline_q4_tps']:.1f} "
+             f"ratio={a['decode_tps_ratio_vs_q8']:.2f}x")
+        emit("spec_decode/carbon_mg_per_query", a["carbon_mg_per_query"],
+             f"q8={a['baseline_q8_carbon_mg']:.2f}mg "
+             f"q4={a['baseline_q4_carbon_mg']:.2f}mg pass={a['pass']}")
+    return out
+
+
+def json_summary() -> Dict:
+    return run(quiet=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="write results JSON (CI perf-trajectory artifact)")
+    args = ap.parse_args()
+    out = run()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -46,6 +46,7 @@ from repro.configs.reduced import reduce_config
 from repro.core.executor import (
     EVAL_PROMPT, QUERY_TOKENS, QueryExecution, QuerySession, SELECT_S,
     TOKENS_PER_TOOL, TOOL_EXEC_S, ModelProfile, success_probability)
+from repro.core.governor import CarbonGovernor
 from repro.core.power import OperatingMode, PowerModel, modes_for
 from repro.models import get_model
 from repro.quant import quantize_tree
@@ -131,6 +132,18 @@ class EngineExecutor:
                                     step_cost_fn=self._step_cost)
         self.engine.variant_name = boot
         self.config = self.engine.config
+        self._modes = modes_for(hw)
+        sd = self.config.spec_decode
+        if sd is not None:
+            # wire the pre-quantized draft tree into the engine; the verify
+            # variant is whatever is resident, so the ladder stays coherent
+            # across hot swaps (draft == resident disables spec in-engine)
+            if sd.draft_variant not in self.variants:
+                raise ValueError(
+                    f"spec_decode.draft_variant {sd.draft_variant!r} is not "
+                    f"in variants {tuple(self.variants)}")
+            self.engine.set_draft_params(self.variants[sd.draft_variant],
+                                         sd.draft_variant)
         self.client = self.engine.client()
         self._log_pos = 0              # step_log watermark for attribution
         self._rid_sessions: Dict[int, EngineSession] = {}
@@ -162,6 +175,18 @@ class EngineExecutor:
         multi-row admissions)."""
         pm, prof, mode = self.power_model, self.profile, self._mode
         shards = max(1, getattr(self.engine, "data_shards", 1))
+        if kind == "spec_draft":
+            # k batched draft rounds at the DRAFT variant's weight bytes —
+            # the Q4 power point is exactly why drafting is cheap; `tokens`
+            # is the drafted total (k * rows), so rounds = tokens / rows
+            rounds = max(1, -(-tokens // max(active, 1)))
+            return rounds * pm.decode_time_per_token(
+                prof.active_bytes(self.engine.draft_variant),
+                prof.kv_bytes_per_token * max(-(-active // shards), 1), mode)
+        if kind == "spec_verify":
+            # one batched multi-position forward at the resident (verify)
+            # variant — compute-bound like prefill over the window tokens
+            return pm.prefill_time(max(tokens, 1), prof.n_active * 2, mode)
         if kind != "decode":     # "prefill" or a chunked "prefill_chunk"
             if tokens <= 0:
                 return 0.0       # full prefix-cache hit: prefill was skipped
@@ -199,6 +224,19 @@ class EngineExecutor:
         if variant != self.engine.variant_name:
             # live hot-swap: the switcher's decision lands on the engine
             self.engine.swap_params(self.variants[variant], variant)
+        sd = self.config.spec_decode
+        if sd is not None and sd.k_ladder:
+            # carbon-modulated draft length: the governor's operating mode
+            # already encodes carbon intensity (high CI -> lower mode
+            # index), so map the mode's position on the ladder onto a draft
+            # k — constrained modes draft longer to amortize verify cost
+            try:
+                idx = self._modes.index(mode)
+            except ValueError:
+                idx = 0
+            self.engine.set_draft_k(
+                CarbonGovernor.k_for_mode(idx, len(self._modes),
+                                          sd.k_ladder))
         return EngineSession(
             n_tools=n_tools_in_prompt, n_calls=n_calls,
             p_success=success_probability(selection_correct, variant),
@@ -268,22 +306,25 @@ class EngineExecutor:
             rids = entry.get("rids") or []
             owners = [self._rid_sessions[r] for r in rids
                       if r in self._rid_sessions]
+            # spec_verify steps ARE decode steps for attribution: every
+            # owner emitted tokens, nobody was stalled by them
+            decode_like = entry["kind"] in ("decode", "spec_verify")
             stalled = []
-            if entry["kind"] != "decode":
+            if not decode_like:
                 stalled = [self._rid_sessions[r]
                            for r in entry.get("resident_rids") or []
                            if r in self._rid_sessions and r not in rids]
             payers = owners + stalled
             if not payers:
                 continue
-            util = 0.70 if entry["kind"] == "decode" else 0.95
+            util = 0.70 if decode_like else 0.95
             e_share = (entry["dt"] * pm.power(self._mode, util=util)
                        / len(payers))
             for s in payers:
                 s.energy_j += e_share
             for s in stalled:
                 s.stall_t += entry["dt"]
-            if entry["kind"] == "decode":
+            if decode_like:
                 for s in owners:
                     s.decode_t += entry["dt"]
         self._log_pos = len(self.engine.step_log)

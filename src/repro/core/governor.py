@@ -65,3 +65,27 @@ class CarbonGovernor:
 
     def mode(self, state: GovernorState) -> OperatingMode:
         return self.modes[state.mode_idx]
+
+    @staticmethod
+    def k_for_mode(mode_idx: int, n_modes: int,
+                   k_ladder: Sequence[int]) -> int:
+        """Map an operating-mode index onto a speculative draft length.
+
+        High carbon intensity maps to high mode_idx (low power), which maps
+        to the *longer* end of the ladder: when the power budget tightens,
+        longer Q4 drafts amortize more of the expensive Q8 verify forwards
+        per emitted token. mode_idx 0 (clean grid, full power) takes
+        k_ladder[0] — typically 0 or 1, since cheap energy removes the
+        incentive to speculate. An empty ladder means "not governed" (the
+        engine keeps its configured k)."""
+        if not k_ladder:
+            return 0
+        frac = mode_idx / max(n_modes - 1, 1)
+        frac = min(max(frac, 0.0), 1.0)
+        return int(k_ladder[min(int(frac * len(k_ladder)),
+                                len(k_ladder) - 1)])
+
+    def draft_k(self, state: GovernorState, k_ladder: Sequence[int]) -> int:
+        """Ladder lookup for the governor's current state (see
+        `k_for_mode`)."""
+        return self.k_for_mode(state.mode_idx, len(self.modes), k_ladder)

@@ -79,6 +79,14 @@ class Model:
                                       prefix_lens, self.cfg, rcfg,
                                       need_logits=need_logits)
 
+    def verify_paged(self, params, batch, prefix_k, prefix_v, prefix_lens,
+                     rcfg: RuntimeConfig):
+        """Speculative-decode verify over per-row k+1 candidate windows.
+        batch["positions"] is (B, W) — each row continues from its own
+        length. -> (logits (B,W,V), window (k,v) (L,B,W,K,H))."""
+        return self.mod.verify_paged(params, batch, prefix_k, prefix_v,
+                                     prefix_lens, self.cfg, rcfg)
+
     def decode_step_paged(self, params, pool, tokens, lengths, block_tables,
                           rcfg: RuntimeConfig, *, seq_cap: int):
         """-> (logits (B,V), pool')."""

@@ -203,7 +203,10 @@ def prefix_attention(q, k_pre, v_pre, k_suf, v_suf, prefix_lens, q_positions,
     from the block pool into `k_pre`/`v_pre`), so only the suffix runs through
     the model and attends over [prefix, suffix] jointly.
 
-      q, k_suf, v_suf: (B, S, N|K, H) at absolute positions `q_positions` (S,)
+      q, k_suf, v_suf: (B, S, N|K, H) at absolute positions `q_positions` —
+                       (S,) uniform across rows, or (B, S) per-row (the
+                       speculative-decode verify window, where every row
+                       continues from its own length)
       k_pre, v_pre:    (B, P, K, H) at absolute positions 0..P-1, valid where
                        the position is < prefix_lens[b]
       prefix_lens:     (B,) cached tokens per row (0 = no cached prefix)
@@ -223,14 +226,19 @@ def prefix_attention(q, k_pre, v_pre, k_suf, v_suf, prefix_lens, q_positions,
     logits = jnp.einsum("bqnh,bsnh->bnqs", qf, k.astype(jnp.float32)) \
         / jnp.sqrt(H).astype(jnp.float32)
     logits = softcap(logits, cap)
-    q_pos = q_positions                                       # (S,)
-    k_pos = jnp.concatenate([jnp.arange(P), q_positions])     # (P+S,)
-    d = q_pos[:, None] - k_pos[None, :]                       # (S, P+S)
+    q_pos = q_positions                                       # (S,) or (B,S)
+    if q_pos.ndim == 1:
+        q_pos = jnp.broadcast_to(q_pos[None, :], (B, S))
+    # suffix keys sit at the row's own query positions, so with per-row
+    # q_positions the key-position grid is per-row too
+    k_pos = jnp.concatenate(
+        [jnp.broadcast_to(jnp.arange(P)[None, :], (B, P)), q_pos],
+        axis=1)                                               # (B, P+S)
+    d = q_pos[:, :, None] - k_pos[:, None, :]                 # (B, S, P+S)
     ok = d >= 0                                               # causal
     if window > 0:
         ok &= d < window
-    ok = jnp.broadcast_to(ok[None], (B, S, P + S))
-    in_prefix = (k_pos[None, None, :] < prefix_lens[:, None, None])
+    in_prefix = (k_pos[:, None, :] < prefix_lens[:, None, None])
     is_pre = jnp.concatenate([jnp.ones((P,), bool), jnp.zeros((S,), bool)])
     # prefix keys count only below the row's cached length; suffix keys only
     # at or above it (their positions overlap the prefix region in pad slots)

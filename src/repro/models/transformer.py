@@ -320,17 +320,21 @@ def prefill(params, cache, batch, cfg: ModelConfig, rcfg: RuntimeConfig):
 
 def _prefill_window(params, batch, prefix_k, prefix_v, prefix_lens,
                     cfg: ModelConfig, rcfg: RuntimeConfig, *,
-                    need_logits: bool):
-    """Shared body for `prefill_paged` / `prefill_chunk`: run a left-padded
-    token window over a cached (gathered) prefix, returning the window's KV
-    stacks and — only when `need_logits` — the last-position logits. Middle
-    chunks of a chunked prefill skip the unembed matmul entirely."""
+                    need_logits: bool, all_logits: bool = False):
+    """Shared body for `prefill_paged` / `prefill_chunk` / `verify_paged`:
+    run a token window over a cached (gathered) prefix, returning the
+    window's KV stacks and — only when `need_logits` — the last-position
+    logits ((B, S, V) every-position logits with `all_logits`, the
+    speculative-decode verify shape). Middle chunks of a chunked prefill
+    skip the unembed matmul entirely. `batch["positions"]` is (S,) uniform
+    across rows or (B, S) per-row absolute positions."""
     assert _pattern(cfg) == 1, "paged prefill: local/global patterns unsupported"
     assert not cfg.use_mrope, "paged prefill: M-RoPE unsupported"
     x = embed_tokens(params, batch, cfg)
     Bb, S, _ = x.shape
     q_pos = batch["positions"]
-    cos, sin = rope_for(cfg, q_pos[None, :], Bb, S)
+    cos, sin = rope_for(cfg, q_pos if q_pos.ndim == 2 else q_pos[None, :],
+                        Bb, S)
 
     def body(x, xs):
         p_i, k_pre, v_pre = xs
@@ -360,6 +364,8 @@ def _prefill_window(params, batch, prefix_k, prefix_v, prefix_lens,
     if not need_logits:
         return None, (k_suf, v_suf)
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if all_logits:
+        return unembed(params, x, cfg, rcfg), (k_suf, v_suf)
     logits = unembed(params, x[:, -1:, :], cfg, rcfg)[:, 0]
     return logits, (k_suf, v_suf)
 
@@ -398,6 +404,26 @@ def prefill_chunk(params, batch, prefix_k, prefix_v, prefix_lens,
     for the unembed."""
     return _prefill_window(params, batch, prefix_k, prefix_v, prefix_lens,
                            cfg, rcfg, need_logits=need_logits)
+
+
+def verify_paged(params, batch, prefix_k, prefix_v, prefix_lens,
+                 cfg: ModelConfig, rcfg: RuntimeConfig):
+    """Speculative-decode verify: one batched forward over each row's k+1
+    candidate window (the last accepted token plus k Q4 drafts), continuing
+    from the row's canonical cached prefix.
+
+    batch["tokens"]: (B, W) candidate windows; batch["positions"]: (B, W)
+    per-row absolute positions arange(len_b, len_b + W) — rows continue from
+    their own lengths, unlike admission prefill's uniform positions.
+    prefix_k/v / prefix_lens: as in `prefill_paged` (gathered canonical KV,
+    valid below prefix_lens[b]).
+
+    Returns (logits (B, W, V) at every window position, window (k, v) stacks
+    each (L, B, W, K, H)). Greedy argmax over logits[:, j] is exactly what
+    plain Q8 decode would emit after accepting window[:, :j+1], which is the
+    temperature-0 acceptance rule's correctness argument."""
+    return _prefill_window(params, batch, prefix_k, prefix_v, prefix_lens,
+                           cfg, rcfg, need_logits=True, all_logits=True)
 
 
 def decode_step_paged(params, pool, tokens, lengths, block_tables,

@@ -4,7 +4,8 @@ from repro.serving.engine import (EngineClient, Request, ServingEngine,
 from repro.serving.invariants import check_invariants
 from repro.serving.protocol import (PROTOCOL_VERSION, STATS_SCHEMA_VERSION,
                                     EngineConfig, EngineStats, ProtocolError,
-                                    QuerySpec, RequestResult, WorkerSpec,
+                                    QuerySpec, RequestResult,
+                                    SpecDecodeConfig, WorkerSpec,
                                     session_request_from_wire,
                                     session_request_to_wire)
 from repro.serving.sampler import sample_tokens
@@ -21,5 +22,5 @@ __all__ = ["BlockPool", "PrefixCache", "PrefixEntry", "ServingEngine",
            # control protocol (serializable engine surface)
            "PROTOCOL_VERSION", "STATS_SCHEMA_VERSION", "EngineConfig",
            "EngineStats", "ProtocolError", "QuerySpec", "RequestResult",
-           "WorkerSpec", "session_request_from_wire",
+           "SpecDecodeConfig", "WorkerSpec", "session_request_from_wire",
            "session_request_to_wire", "check_invariants"]

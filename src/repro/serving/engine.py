@@ -93,7 +93,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 from repro.config import ModelConfig, RuntimeConfig
 from repro.models import get_model
 from repro.serving.block_pool import BlockPool, PrefixCache
-from repro.serving.protocol import EngineConfig, EngineStats
+from repro.serving.protocol import EngineConfig, EngineStats, SpecDecodeConfig
 from repro.serving.sampler import sample_tokens
 from repro.serving.scheduler import (
     CANCELLED, DONE, EngineStallError, PoolExhaustedError, RequestHandle,
@@ -296,6 +296,16 @@ class _EngineExec:
                                         prefix_lens, self.rcfg,
                                         need_logits=need_logits)
 
+    def verify_impl(self, params, pool, batch, prefix_bids, prefix_lens):
+        """Speculative-decode verify: gather each row's canonical prefix
+        (including a partially filled last block — `prefix_lens` masks the
+        tail) and run one batched forward over the k+1 candidate window
+        positions. Reads the pool, never writes it: the engine commits the
+        returned window KV for the accepted positions only."""
+        k_pre, v_pre = self._gather_prefix(pool, prefix_bids)
+        return self.model.verify_paged(params, batch, k_pre, v_pre,
+                                       prefix_lens, self.rcfg)
+
     def scatter_impl(self, pool, entry, dst, src_b, src_s):
         """Write entry[key][:, src_b[i], src_s[i]] into flat pool position
         dst[i] (= block_id * block_size + offset) for every i, per leaf."""
@@ -327,6 +337,7 @@ class ServingEngine:
                  block_size: Optional[int] = None,
                  num_blocks: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
+                 spec_decode: Optional[SpecDecodeConfig] = None,
                  mesh=None,
                  clock: Callable[[], float] = time.monotonic,
                  step_cost_fn: Optional[Callable[[str, int, int], float]] = None):
@@ -341,7 +352,8 @@ class ServingEngine:
                                   ("kv_layout", kv_layout),
                                   ("block_size", block_size),
                                   ("num_blocks", num_blocks),
-                                  ("prefill_chunk", prefill_chunk))
+                                  ("prefill_chunk", prefill_chunk),
+                                  ("spec_decode", spec_decode))
                 if v is not None}
         if prompt_buckets is not None:
             over["prompt_buckets"] = tuple(prompt_buckets)
@@ -456,6 +468,27 @@ class ServingEngine:
                 # chunk_lens keying unchanged
                 prefill_chunk = -(-prefill_chunk // block_size) * block_size
         self.prefill_chunk = prefill_chunk
+        # speculative decoding over the variant ladder: a cheap draft
+        # variant proposes k tokens per step, the resident variant verifies
+        # them in one batched forward. Draft KV lives in leased scratch
+        # blocks — the canonical per-slot block tables only ever hold
+        # verify-variant KV. Draft params arrive via `set_draft_params`
+        # (the executor wires its pre-quantized variant tree in); until
+        # then — and whenever k == 0 — steps take the plain decode path.
+        sd = self.config.spec_decode
+        if sd is not None:
+            if self.kv_layout != "paged":
+                raise ValueError(
+                    "spec_decode requires the paged KV layout: draft KV is "
+                    "staged in leased pool blocks")
+            if sd.k < 0 or any(x < 0 for x in sd.k_ladder):
+                raise ValueError("spec_decode: draft lengths must be >= 0")
+        self.spec_k = sd.k if sd is not None else 0
+        self.draft_params = None
+        self.draft_variant = sd.draft_variant if sd is not None else ""
+        self.draft_tokens = 0            # drafted this engine's lifetime
+        self.accepted_tokens = 0         # drafts that entered an output
+        self._spec_leases: List[List[int]] = [[] for _ in range(max_batch)]
         self._prefer_prefill = True      # alternation flag: prefill <-> decode
         self._chunk_slots: set = set()   # dense: slots reserved by parked chunks
         self.slots: List[Optional[Request]] = [None] * max_batch
@@ -491,6 +524,7 @@ class ServingEngine:
         # The per-engine dicts front the process-wide _SHARED_EXECS cache so
         # same-shape fleet pods compile once.
         self._decode_fns: Dict[str, Any] = {}
+        self._verify_fns: Dict[str, Any] = {}
         self._prefill_fns: Dict[str, Any] = {}
         self._prefill_prefix_fns: Dict[str, Any] = {}
         self._prefill_chunk_fns: Dict[str, Any] = {}
@@ -525,8 +559,13 @@ class ServingEngine:
             fn = _SHARED_EXECS[key] = build()
         return fn
 
-    def _decode_fn(self):
-        fn = self._decode_fns.get(self.variant_name)
+    def _decode_fn(self, variant: Optional[str] = None):
+        """Jitted decode step for `variant` (default: the resident variant).
+        Speculative drafting passes the draft variant explicitly — the
+        per-variant cache already exists for hot swaps, so draft executables
+        ride the same mechanism."""
+        variant = variant or self.variant_name
+        fn = self._decode_fns.get(variant)
         if fn is None:
             impl = (self._exec.decode_paged_impl if self.kv_layout == "paged"
                     else self._exec.decode_impl)
@@ -534,8 +573,17 @@ class ServingEngine:
             def build():
                 return jax.jit(self._exec.mesh_wrap(impl),
                                donate_argnums=(1,))
-            fn = self._shared_exec("decode", build, self.variant_name)
-            self._decode_fns[self.variant_name] = fn
+            fn = self._shared_exec("decode", build, variant)
+            self._decode_fns[variant] = fn
+        return fn
+
+    def _verify_fn(self):
+        fn = self._verify_fns.get(self.variant_name)
+        if fn is None:
+            fn = self._shared_exec(
+                "verify", lambda: jax.jit(self._exec.verify_impl),
+                self.variant_name)
+            self._verify_fns[self.variant_name] = fn
         return fn
 
     def _prefill_fn(self):
@@ -592,6 +640,31 @@ class ServingEngine:
         for req in self.scheduler.waiting:
             if req.chunk_row is not None:
                 self._release_chunk(req)
+        # a swap landing mid-draft (tests drive the lease helpers directly;
+        # step() itself is atomic) abandons the in-flight draft: scratch
+        # leases go back to the pool, the next step re-drafts under
+        # whatever the ladder now pairs
+        if self.kv_layout == "paged":
+            for i in range(self.max_batch):
+                self._spec_release_leases(i)
+
+    def set_draft_params(self, params, variant_name: str):
+        """Install the draft variant's weight tree (normally the executor's
+        pre-quantized Q4 tree). Spec steps stay disabled until this is set,
+        and fall back to plain decode whenever the draft and resident
+        variants coincide (e.g. after a governor swap *to* Q4)."""
+        if self.config.spec_decode is None:
+            raise ValueError(
+                "set_draft_params: engine was built without spec_decode")
+        self.draft_params = params
+        self.draft_variant = variant_name
+
+    def set_draft_k(self, k: int):
+        """Set the draft length (the governor's carbon-modulated knob);
+        k = 0 degrades to plain decode."""
+        if k < 0:
+            raise ValueError(f"set_draft_k: k must be >= 0, got {k}")
+        self.spec_k = int(k)
 
     def submit(self, req: Request) -> RequestHandle:
         """Queue a request; returns an async handle (poll/result/cancel)."""
@@ -674,6 +747,7 @@ class ServingEngine:
             self._release_chunk(req)
         completed: List[Request] = []
         work: Optional[Dict] = None
+        spec: Optional[Dict] = None
         if self.prefill_chunk is None or self._prefer_prefill \
                 or not self.active:
             work = self._prefill_work()
@@ -698,9 +772,17 @@ class ServingEngine:
             self._prefer_prefill = False
         elif self.active:
             charged = cached = 0
-            tokens_this_step, rids = self._decode_active(completed)
+            # speculative step when armed; None falls back to plain decode
+            # (pool pressure, a row too near max_seq) — spec is purely
+            # opportunistic, never preempts, and degrades to today's path
+            spec = self._spec_step(completed) if self._spec_ready() else None
+            if spec is not None:
+                tokens_this_step, rids = spec["tokens"], spec["rids"]
+                kind = "spec_verify"
+            else:
+                tokens_this_step, rids = self._decode_active(completed)
+                kind = "decode"
             occupancy = max(len(rids), 1)        # before completions free slots
-            kind = "decode"
             self._prefer_prefill = True
         else:
             if self.scheduler.has_waiting():
@@ -719,8 +801,18 @@ class ServingEngine:
             # is charged its full re-prefilled sequence (preemption is not
             # free, which is exactly why the scheduler only uses it under
             # real pool pressure)
-            cost_tokens = charged if kind != "decode" else tokens_this_step
-            cost = float(self.step_cost_fn(kind, cost_tokens, occupancy))
+            if kind == "spec_verify":
+                # acceptance-aware pricing: the k draft rounds are charged
+                # at the draft variant's power point, the single batched
+                # verify at the resident variant's (see
+                # EngineExecutor._step_cost)
+                cost = (float(self.step_cost_fn(
+                            "spec_draft", spec["drafted"], occupancy))
+                        + float(self.step_cost_fn(
+                            "spec_verify", spec["verified"], occupancy)))
+            else:
+                cost_tokens = charged if kind != "decode" else tokens_this_step
+                cost = float(self.step_cost_fn(kind, cost_tokens, occupancy))
             if cost > 0.0:
                 self.clock.advance(cost)
         for req in completed:                # completion is at end of step
@@ -728,13 +820,21 @@ class ServingEngine:
             self.scheduler.note_done(req, req.done_time)
         dt = max(self.clock() - t0, 1e-9)
         self.tokens_emitted += tokens_this_step
-        self.step_log.append({
+        rec = {
             "kind": kind, "tokens": tokens_this_step, "dt": dt,
             "tps": tokens_this_step / dt, "variant": self.variant_name,
             "active": occupancy, "prompt_tokens": charged,
             "cached_tokens": cached, "rids": rids,
             "resident_rids": resident_rids,
-        })
+        }
+        if spec is not None:
+            # spec rows emit per-rid token *counts* — consumers that assume
+            # one token per rid per decode row (invariants, soak oracles)
+            # expand `emitted` instead
+            rec["drafted"] = spec["drafted"]
+            rec["accepted"] = spec["accepted"]
+            rec["emitted"] = spec["emitted"]
+        self.step_log.append(rec)
         return completed
 
     def run_until_drained(self, max_steps: int = 100000) -> List[Request]:
@@ -1489,11 +1589,222 @@ class ServingEngine:
                 self.slot_blocks[i][blk] = new
                 self.cow_count += 1
 
+    # -- speculative decoding ------------------------------------------------
+
+    def _spec_ready(self) -> bool:
+        """Whether this step may draft: spec configured, draft weights
+        installed, k > 0, the ladder actually has two rungs resident (a
+        governor swap *to* the draft variant collapses to plain decode),
+        and every resident stream is greedy — temperature-0 acceptance is
+        what makes spec byte-identical to plain decode."""
+        if (self.config.spec_decode is None or self.kv_layout != "paged"
+                or self.spec_k <= 0 or self.draft_params is None
+                or self.draft_variant == self.variant_name):
+            return False
+        return all(r is None or r.temperature <= 0.0 for r in self.slots)
+
+    def _spec_reserve(self, n: int) -> bool:
+        """Ensure >= n free blocks using prefix-cache eviction only — spec
+        steps are opportunistic: they never preempt a slot or drop a parked
+        chunk, they just fall back to plain decode."""
+        while self.block_pool.num_free < n:
+            if not self.prefix_cache.evict_lru():
+                return False
+        return True
+
+    def _spec_acquire_leases(self, i: int, L: int, k: int) -> List[int]:
+        """Lease scratch blocks covering draft positions [L, L+k-1] for slot
+        `i`. When L sits mid-block the first lease starts as a copy of the
+        canonical partial block, so drafts read real prefix KV below L; the
+        canonical block itself is never written by the draft path."""
+        bs = self.block_size
+        blocks = [self.block_pool.alloc()
+                  for _ in range(L // bs, (L + k - 1) // bs + 1)]
+        assert all(b is not None for b in blocks), \
+            "spec lease alloc failed despite reservation"
+        self._spec_leases[i] = blocks
+        if L % bs:
+            src = int(self.block_tables[i, L // bs])
+            if src:                      # always true for a live slot
+                self.pool = self._copy_block_fn(self.pool, blocks[0], src)
+        return blocks
+
+    def _spec_release_leases(self, i: int):
+        """Return slot `i`'s draft scratch blocks to the pool (rejected-draft
+        reconciliation; also the cancel/expiry/hot-swap abandon path)."""
+        for bid in self._spec_leases[i]:
+            self.block_pool.decref(bid)
+        self._spec_leases[i] = []
+
+    def _spec_step(self, completed: List[Request]) -> Optional[Dict]:
+        """One speculative decode step over the resident slots: k greedy
+        draft tokens under the draft variant (KV staged in leased scratch
+        blocks), one batched verify forward under the resident variant over
+        each row's k+1 candidate window, then accept the longest agreeing
+        prefix plus the verify token — at temperature 0 that stream is
+        byte-identical to plain decode, draft quality only moves the
+        acceptance rate. Returns the step record, or None to fall back to a
+        plain decode step (pool pressure, or a row within k+1 of max_seq:
+        context-edge saturation stays the plain path's semantics).
+
+        Block accounting is exact: worst-case need is counted and reserved
+        before anything is allocated, leases are released in full right
+        after the accepted window KV is scattered into the canonical chain,
+        and the canonical tables advance by each row's accepted length via
+        the same alloc/CoW rules as `_prepare_decode_blocks`."""
+        bs, k = self.block_size, self.spec_k
+        live = [(i, r) for i, r in enumerate(self.slots) if r is not None]
+        need = 0
+        for i, _ in live:
+            L = int(self.lengths[i])
+            if L + k + 1 > self.max_seq:
+                return None
+            # leases span blocks L//bs .. (L+k-1)//bs; the canonical chain
+            # may need one block per boundary crossed by writes at [L, L+k]
+            # plus an alloc/CoW for the write block itself
+            need += (L + k - 1) // bs - L // bs + 1
+            need += (L + k) // bs - L // bs
+            bid = int(self.block_tables[i, L // bs])
+            if bid == 0 or self.block_pool.is_shared(bid):
+                need += 1
+        if not self._spec_reserve(need):
+            return None
+
+        # -- draft: k greedy rounds under the draft variant ------------------
+        last0 = np.zeros((self.max_batch, 1), np.int32)
+        for i, r in live:
+            last0[i, 0] = r.output[-1] if r.output else (
+                r.prompt[-1] if r.prompt else 0)
+        draft_tables = self.block_tables.copy()
+        for i, _ in live:
+            L = int(self.lengths[i])
+            for j, bid in enumerate(self._spec_acquire_leases(i, L, k)):
+                draft_tables[i, L // bs + j] = bid
+        draft_lengths = self.lengths.copy()
+        draft_toks = np.zeros((self.max_batch, k), np.int32)
+        cur = last0.copy()
+        dfn = self._decode_fn(self.draft_variant)
+        tables_j = jnp.asarray(draft_tables)
+        for j in range(k):
+            logits, self.pool = dfn(self.draft_params, self.pool,
+                                    jnp.asarray(cur),
+                                    jnp.asarray(draft_lengths), tables_j)
+            # raw argmax == sample_tokens at temperature 0, without
+            # splitting self.key — parity with the plain path's key
+            # evolution is irrelevant under greedy decoding (enforced by
+            # _spec_ready)
+            nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            for i, _ in live:
+                draft_toks[i, j] = nxt[i]
+                cur[i, 0] = nxt[i]
+                draft_lengths[i] += 1
+
+        # -- verify: one batched forward over the k+1 windows ----------------
+        W = k + 1
+        nbp = _pow2(max(-(-int(self.lengths[i]) // bs) for i, _ in live),
+                    self.blocks_per_slot)
+        toks = np.zeros((self.max_batch, W), np.int32)
+        poss = np.zeros((self.max_batch, W), np.int32)
+        bids = np.zeros((self.max_batch, nbp), np.int32)
+        plens = np.zeros((self.max_batch,), np.int32)
+        for i, _ in live:
+            L = int(self.lengths[i])
+            toks[i, 0] = last0[i, 0]
+            toks[i, 1:] = draft_toks[i]
+            poss[i] = np.arange(L, L + W)
+            nb = -(-L // bs)
+            bids[i, :nb] = self.block_tables[i, :nb]
+            plens[i] = L
+        batch = self._prefill_batch(toks)
+        batch["positions"] = jnp.asarray(poss)
+        logits, (k_win, v_win) = self._verify_fn()(
+            self.params, self.pool, batch, jnp.asarray(bids),
+            jnp.asarray(plens))
+        greedy = np.asarray(jnp.argmax(logits, axis=-1), np.int32)  # (B, W)
+
+        # -- accept, commit canonical KV, reconcile leases -------------------
+        drafted = k * len(live)
+        accepted = 0
+        outs: List[List[int]] = []
+        dst: List[int] = []
+        src_b: List[int] = []
+        src_s: List[int] = []
+        for i, r in live:
+            L = int(self.lengths[i])
+            a = 0
+            while a < k and draft_toks[i, a] == greedy[i, a]:
+                a += 1
+            toks_out: List[int] = []
+            for j in range(a + 1):
+                t = int(greedy[i, j])
+                toks_out.append(t)
+                if (t == r.eos_id
+                        or len(r.output) + len(toks_out)
+                        >= r.max_new_tokens):
+                    break
+            e = len(toks_out)
+            accepted += min(e, a)        # the e-th token is the free verify
+            outs.append(toks_out)
+            # window position m holds the token whose KV belongs at L+m:
+            # m=0 is the pre-step last token, m>=1 the accepted drafts. The
+            # last emitted token's KV is NOT written — exactly the plain
+            # decode invariant, so preemption-resume reconstruction and
+            # lengths bookkeeping stay unchanged.
+            for p in range(L, L + e):
+                blk = p // bs
+                bid = int(self.block_tables[i, blk])
+                if bid == 0:
+                    new = self.block_pool.alloc()
+                    assert new is not None, "spec commit alloc underflowed"
+                    self.block_tables[i, blk] = new
+                    self.slot_blocks[i].append(new)
+                    bid = new
+                elif self.block_pool.is_shared(bid):
+                    new = self.block_pool.alloc()
+                    assert new is not None, "spec CoW alloc underflowed"
+                    self.pool = self._copy_block_fn(self.pool, new, bid)
+                    self.block_pool.decref(bid)
+                    self.block_tables[i, blk] = new
+                    self.slot_blocks[i][blk] = new
+                    self.cow_count += 1
+                    bid = new
+                dst.append(bid * bs + p % bs)
+                src_b.append(i)
+                src_s.append(p - L)
+        self.pool = self._scatter_kv_fn(
+            self.pool, k_win, v_win, *self._scatter_idx(dst, src_b, src_s))
+        for i, _ in live:
+            self._spec_release_leases(i)
+
+        emitted_total = 0
+        rids: List[int] = []
+        emitted: Dict[int, int] = {}
+        for (i, r), toks_out in zip(live, outs):
+            self.lengths[i] = min(int(self.lengths[i]) + len(toks_out),
+                                  self.max_seq)
+            for t in toks_out:
+                self._emit(r, i, t)
+            emitted_total += len(toks_out)
+            rids.append(r.rid)
+            emitted[r.rid] = len(toks_out)
+            if (toks_out[-1] == r.eos_id
+                    or len(r.output) >= r.max_new_tokens):
+                completed.append(r)      # done_time stamped at end of step
+                r.status = DONE
+                self._free_slot(i)
+        self.draft_tokens += drafted
+        self.accepted_tokens += accepted
+        self.scheduler.note_spec_step()
+        return {"tokens": emitted_total, "rids": rids, "drafted": drafted,
+                "verified": W * len(live), "accepted": accepted,
+                "emitted": emitted}
+
     def _free_slot(self, i: int):
         self.slots[i] = None
         self._slot_row[i] = None
         self._slot_emit0[i] = 0
         if self.kv_layout == "paged":
+            self._spec_release_leases(i)
             for bid in self.slot_blocks[i]:
                 self.block_pool.decref(bid)
             self.slot_blocks[i] = []
@@ -1515,7 +1826,8 @@ class ServingEngine:
     # -- telemetry ----------------------------------------------------------
 
     def recent_tps(self, window: int = 50) -> float:
-        log = [s for s in self.step_log[-window:] if s["kind"] == "decode"]
+        log = [s for s in self.step_log[-window:]
+               if s["kind"] in ("decode", "spec_verify")]
         if not log:
             return 0.0
         return sum(s["tokens"] for s in log) / max(sum(s["dt"] for s in log), 1e-9)

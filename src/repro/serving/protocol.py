@@ -34,8 +34,8 @@ from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 from repro.serving.scheduler import SessionRequest
 
-PROTOCOL_VERSION = 1        # control messages, WorkerSpec, request payloads
-STATS_SCHEMA_VERSION = 1    # EngineStats telemetry schema
+PROTOCOL_VERSION = 2        # control messages, WorkerSpec, request payloads
+STATS_SCHEMA_VERSION = 2    # EngineStats telemetry schema
 
 
 class ProtocolError(ValueError):
@@ -63,6 +63,38 @@ def _fields_from_wire(cls, wire: Mapping) -> Dict[str, Any]:
 
 
 @dataclasses.dataclass(frozen=True)
+class SpecDecodeConfig:
+    """Speculative decoding over the quantized variant ladder.
+
+    `draft_variant` names the cheap variant that drafts `k` tokens per
+    decode step; the engine's resident variant verifies all k+1 candidate
+    positions in one batched forward. At temperature 0 the accepted stream
+    is byte-identical to plain decode under the verify variant — draft
+    quality only moves the acceptance rate, never the tokens. `k=0`
+    degrades to plain decode. `k_ladder`, when non-empty, lets the
+    executor's governor map carbon intensity onto a draft length (mode
+    index → ladder entry; high CI picks longer drafts), overriding `k`
+    per query."""
+    draft_variant: str = "q4"
+    k: int = 2
+    k_ladder: Tuple[int, ...] = ()
+
+    def to_wire(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["k_ladder"] = list(self.k_ladder)
+        d["v"] = PROTOCOL_VERSION
+        return d
+
+    @classmethod
+    def from_wire(cls, wire: Mapping) -> "SpecDecodeConfig":
+        _check_version(wire, "v", PROTOCOL_VERSION, "SpecDecodeConfig")
+        kw = _fields_from_wire(cls, wire)
+        if "k_ladder" in kw:
+            kw["k_ladder"] = tuple(kw["k_ladder"])
+        return cls(**kw)
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """Serializable engine sizing — the whole `ServingEngine` construction
     surface minus live objects (params, clock, mesh, step_cost_fn).
@@ -82,6 +114,7 @@ class EngineConfig:
     prefill_chunk: Optional[int] = None  # None = monolithic prefill
     data_shards: int = 1                 # >1 = data-parallel sharded engine
     variants: Tuple[str, ...] = ("q8", "q4")
+    spec_decode: Optional[SpecDecodeConfig] = None  # None = plain decode
 
     def replace(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)
@@ -90,6 +123,8 @@ class EngineConfig:
         d = dataclasses.asdict(self)
         d["prompt_buckets"] = list(self.prompt_buckets)
         d["variants"] = list(self.variants)
+        if self.spec_decode is not None:
+            d["spec_decode"] = self.spec_decode.to_wire()
         d["v"] = PROTOCOL_VERSION
         return d
 
@@ -101,6 +136,8 @@ class EngineConfig:
             kw["prompt_buckets"] = tuple(kw["prompt_buckets"])
         if "variants" in kw:
             kw["variants"] = tuple(kw["variants"])
+        if kw.get("spec_decode") is not None:
+            kw["spec_decode"] = SpecDecodeConfig.from_wire(kw["spec_decode"])
         return cls(**kw)
 
 
@@ -134,6 +171,10 @@ class EngineStats:
     swap_count: int = 0
     tokens_emitted: int = 0
     decode_tps: float = 0.0
+    spec_steps: int = 0
+    draft_tokens: int = 0
+    accepted_tokens: int = 0
+    accept_rate: float = 0.0
     tiers: Dict[str, Dict[str, float]] = dataclasses.field(default_factory=dict)
     prefix_cache: Dict[str, int] = dataclasses.field(default_factory=dict)
 
@@ -156,6 +197,11 @@ class EngineStats:
             tokens_emitted=int(engine.tokens_emitted),
             decode_tps=float(engine.recent_tps(
                 window=max(len(engine.step_log), 1))),
+            spec_steps=int(sched.get("spec_steps", 0)),
+            draft_tokens=int(getattr(engine, "draft_tokens", 0)),
+            accepted_tokens=int(getattr(engine, "accepted_tokens", 0)),
+            accept_rate=(int(getattr(engine, "accepted_tokens", 0))
+                         / max(int(getattr(engine, "draft_tokens", 0)), 1)),
             tiers=sched["tiers"],
             prefix_cache=dict(engine.prefix_cache_stats()))
 
@@ -195,6 +241,11 @@ class EngineStats:
             swap_count=sum(s.swap_count for s in stats),
             tokens_emitted=sum(s.tokens_emitted for s in stats),
             decode_tps=sum(s.decode_tps for s in stats),
+            spec_steps=sum(s.spec_steps for s in stats),
+            draft_tokens=sum(s.draft_tokens for s in stats),
+            accepted_tokens=sum(s.accepted_tokens for s in stats),
+            accept_rate=(sum(s.accepted_tokens for s in stats)
+                         / max(sum(s.draft_tokens for s in stats), 1)),
             tiers=tiers, prefix_cache=cache)
 
     def to_wire(self) -> Dict[str, Any]:

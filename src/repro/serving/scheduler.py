@@ -183,6 +183,7 @@ class Scheduler:
         self.queue_wait_s = 0.0
         self.chunk_steps = 0        # non-final chunked-prefill steps run
         self.chunk_drops = 0        # partial prefills released un-admitted
+        self.spec_steps = 0         # speculative draft+verify decode steps
         self._tiers: Dict[str, Dict] = {}
 
     # -- per-tier telemetry --------------------------------------------------
@@ -222,6 +223,11 @@ class Scheduler:
         """Count a partial prefill released before admission (cancel, expiry,
         hot swap, or pool pressure dropping a parked chain)."""
         self.chunk_drops += 1
+
+    def note_spec_step(self):
+        """Count one speculative decode step (k drafts + one batched verify
+        — a single scheduler unit, like a plain decode step)."""
+        self.spec_steps += 1
 
     # -- queue ---------------------------------------------------------------
 
@@ -337,6 +343,7 @@ class Scheduler:
                 "cancelled": self.cancelled,
                 "chunk_steps": self.chunk_steps,
                 "chunk_drops": self.chunk_drops,
+                "spec_steps": self.spec_steps,
                 "queue_wait_s": round(self.queue_wait_s, 6),
                 "waiting": len(self._queue),
                 "tiers": self.tier_stats()}

@@ -35,7 +35,15 @@ def _write_bench(dirpath, *, tps=70.0, carbon=0.0028, day_tps=12.0):
     (dirpath / "fleet_workers.json").write_text(json.dumps({
         "workers": {"n_workers": 4, "agg_decode_tps": 2 * tps,
                     "carbon_g_per_query": carbon},
-        "acceptance": {"wall_speedup": 1.6, "pass": True},
+        "acceptance": {"wall_speedup": 1.6, "speedup_gate_skipped": True,
+                       "pass": True},
+    }))
+    (dirpath / "spec_decode.json").write_text(json.dumps({
+        "acceptance": {"decode_tps": 1.7 * tps,
+                       "carbon_mg_per_query": 1000 * carbon * 0.9,
+                       "decode_tps_ratio_vs_q8": 1.7,
+                       "accept_rate": 0.79, "token_parity": True,
+                       "pass": True},
     }))
 
 
@@ -56,7 +64,16 @@ def test_collect_extracts_tagged_metrics(tmp_path):
     assert m["fleet_workers/agg_decode_tps"].direction == HIGHER
     assert m["fleet_workers/carbon_g_per_query"].direction == LOWER
     assert m["fleet_workers/wall_speedup"].direction == INFO
+    assert m["fleet_workers/speedup_gate_skipped"].value == 1.0
+    assert m["fleet_workers/speedup_gate_skipped"].direction == INFO
     assert m["fleet_workers/acceptance_pass"].value == 1.0
+    # spec_decode suite: TPS + carbon gate vs plain Q8, rest is info
+    assert m["spec_decode/decode_tps"].direction == HIGHER
+    assert m["spec_decode/carbon_mg_per_query"].direction == LOWER
+    assert m["spec_decode/decode_tps_ratio_vs_q8"].direction == HIGHER
+    assert m["spec_decode/accept_rate"].direction == INFO
+    assert m["spec_decode/token_parity"].value == 1.0
+    assert m["spec_decode/acceptance_pass"].value == 1.0
     # missing dir / empty dir -> empty mapping, never raises
     assert collect(str(tmp_path / "nope")) == {}
 

@@ -2,11 +2,13 @@
 
 A seeded event-sequence generator drives hundreds of engine steps of mixed
 admission / cancellation / preemption (via a deliberately tight block pool) /
-deadline expiry / Q8<->Q4 hot swaps against THREE engines at once — one
+deadline expiry / Q8<->Q4 hot swaps against FOUR engines at once — one
 paged, one dense, one paged with chunked prefill (`prefill_chunk=16`, so the
-32-token prompt buckets always split into >= 2 windows) — fed identical
-request streams on identical virtual clocks. After draining, it asserts the
-invariants that must survive any interleaving:
+32-token prompt buckets always split into >= 2 windows), and one paged with
+speculative decoding (Q4 drafts, k=2, verified under the resident variant —
+temperature-0 acceptance makes its streams byte-identical to plain decode)
+— fed identical request streams on identical virtual clocks. After
+draining, it asserts the invariants that must survive any interleaving:
 
   * paged-vs-dense and paged-vs-chunked token parity for every request that
     completed in both engines under the same per-token weight variants
@@ -48,7 +50,8 @@ import pytest
 from repro.config import ModelConfig, RuntimeConfig
 from repro.models import get_model
 from repro.quant import quantize_tree
-from repro.serving import Request, ServingEngine, VirtualClock
+from repro.serving import (Request, ServingEngine, SpecDecodeConfig,
+                           VirtualClock)
 from repro.serving.scheduler import CANCELLED, DONE, EXPIRED, TERMINAL
 from repro.sharding.param import init_params
 
@@ -78,14 +81,18 @@ def variants():
 
 
 def _engine(variants, layout: str) -> ServingEngine:
-    kv = "paged" if layout == "chunked" else layout
+    kv = "paged" if layout in ("chunked", "spec") else layout
     kw = {"num_blocks": NUM_BLOCKS} if kv == "paged" else {}
     if layout == "chunked":
         kw["prefill_chunk"] = 16
+    if layout == "spec":
+        kw["spec_decode"] = SpecDecodeConfig(draft_variant="q4", k=2)
     eng = ServingEngine(CFG, variants["q8"], RCFG, max_batch=MAX_BATCH,
                         max_seq=MAX_SEQ, kv_layout=kv,
                         block_size=BLOCK_SIZE, clock=VirtualClock(), **kw)
     eng.variant_name = "q8"
+    if layout == "spec":
+        eng.set_draft_params(variants["q4"], "q4")
     return eng
 
 
@@ -96,7 +103,8 @@ class SoakDriver:
         self.rng = np.random.default_rng(seed)
         self.engines = {"paged": _engine(variants, "paged"),
                         "dense": _engine(variants, "dense"),
-                        "chunked": _engine(variants, "chunked")}
+                        "chunked": _engine(variants, "chunked"),
+                        "spec": _engine(variants, "spec")}
         self.variants = variants
         self.variant = "q8"
         self.pairs = []          # [{layout: Request}] in submission order
@@ -167,10 +175,22 @@ def _check_engine(eng: ServingEngine, reqs):
         if s["kind"] == "decode":
             for r in s["rids"]:
                 dec_count[r] += 1
+        elif s["kind"] == "spec_verify":
+            # spec rows carry a per-rid emitted-token COUNT (the accepted
+            # draft prefix plus the free verify token)
+            for r, n in s["emitted"].items():
+                dec_count[r] += n
         elif s["tokens"] > 0:            # fresh admissions emit one token;
             for r in s["rids"]:          # resume re-prefills emit none
                 fresh_count[r] += 1
     stats = eng.scheduler_stats()
+    # every speculative step is one scheduler unit, and every draft scratch
+    # lease was reconciled back to the pool by drain time
+    assert stats.get("spec_steps", 0) == sum(
+        1 for s in log if s["kind"] == "spec_verify")
+    assert eng.draft_tokens == sum(s.get("drafted", 0) for s in log)
+    assert eng.accepted_tokens == sum(s.get("accepted", 0) for s in log)
+    assert all(not lease for lease in eng._spec_leases)
     # every admission (fresh or resume) appears as a logged prefill row —
     # non-final chunk windows are logged as "prefill_chunk" and admit nobody
     assert stats["admitted"] == sum(
@@ -218,7 +238,10 @@ def _variant_history(eng: ServingEngine):
     under (one entry per fresh-admission token + one per decode token)."""
     hist = collections.defaultdict(list)
     for s in eng.step_log:
-        if s["kind"] == "decode" or s["tokens"] > 0:
+        if s["kind"] == "spec_verify":
+            for r, n in s["emitted"].items():
+                hist[r].extend([s["variant"]] * n)
+        elif s["kind"] == "decode" or s["tokens"] > 0:
             for r in s["rids"]:
                 hist[r].append(s["variant"])
     return hist
@@ -236,7 +259,10 @@ def _unsafe_resumes(eng: ServingEngine):
     emitted = collections.defaultdict(list)
     unsafe = set()
     for s in eng.step_log:
-        if s["kind"] == "decode" or s["tokens"] > 0:
+        if s["kind"] == "spec_verify":
+            for r, n in s["emitted"].items():
+                emitted[r].extend([s["variant"]] * n)
+        elif s["kind"] == "decode" or s["tokens"] > 0:
             for r in s["rids"]:
                 emitted[r].append(s["variant"])
         elif s["kind"] == "prefill":
@@ -264,7 +290,7 @@ def _soak(variants, seed: int, n_events: int) -> dict:
         # preemptions, chunk windows) around a hot swap legitimately
         # diverges otherwise, as does a resume that re-prefilled under
         # swapped weights
-        for other in ("dense", "chunked"):
+        for other in ("dense", "chunked", "spec"):
             if p["paged"].rid in unsafe["paged"] \
                     or p[other].rid in unsafe[other]:
                 continue
@@ -275,8 +301,11 @@ def _soak(variants, seed: int, n_events: int) -> dict:
         "pairs": len(driver.pairs),
         "both_done": compared["dense"],
         "chunked_done": compared["chunked"],
+        "spec_done": compared["spec"],
         "chunk_steps":
             driver.engines["chunked"].scheduler_stats()["chunk_steps"],
+        "spec_steps":
+            driver.engines["spec"].scheduler_stats()["spec_steps"],
         "preemptions":
             driver.engines["paged"].scheduler_stats()["preemptions"],
         "expired": driver.engines["paged"].scheduler_stats()["expired"],
@@ -289,7 +318,9 @@ def test_soak_quick(variants, seed):
     assert out["pairs"] >= 10
     assert out["both_done"] >= 3      # parity assertions actually ran
     assert out["chunked_done"] >= 3   # ...including chunked-vs-paged
+    assert out["spec_done"] >= 3      # ...and spec-decode-vs-paged
     assert out["chunk_steps"] >= 1    # the chunked path actually exercised
+    assert out["spec_steps"] >= 1     # the speculative path too
 
 
 @pytest.mark.slow
@@ -301,7 +332,9 @@ def test_soak_nightly(variants):
     # across the seed set every hard path must have fired
     assert totals["both_done"] >= 50
     assert totals["chunked_done"] >= 50
+    assert totals["spec_done"] >= 50
     assert totals["chunk_steps"] >= 10
+    assert totals["spec_steps"] >= 10
     assert totals["preemptions"] >= 1
     assert totals["expired"] >= 1
 

@@ -1,0 +1,228 @@
+"""Speculative decoding over the variant ladder (Q4 drafts, Q8 verify).
+
+Covers what the soak suite's stream-parity oracle cannot isolate:
+
+  * temperature-0 byte parity against a plain engine, with acceptance
+    actually exercised (accept_rate > 0) and exact refcount reconciliation;
+  * k=0 — and a missing draft tree, and a non-greedy resident — degrade to
+    plain decode (no spec_verify rows, identical streams);
+  * mid-draft cancel/expiry and a hot swap mid-draft release the scratch
+    leases (the abandon paths around an in-flight draft);
+  * construction-time validation (paged-only, non-negative k) and the
+    protocol surface: SpecDecodeConfig / EngineConfig / EngineStats wire
+    roundtrips with the new counters, and the governor's CI -> k ladder.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig, RuntimeConfig
+from repro.core.governor import CarbonGovernor
+from repro.models import get_model
+from repro.quant import quantize_tree
+from repro.serving import (EngineConfig, EngineStats, Request, ServingEngine,
+                           SpecDecodeConfig, VirtualClock, check_invariants)
+from repro.sharding.param import init_params
+
+CFG = ModelConfig(name="spec-tiny", family="transformer", num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                  vocab_size=256)
+RCFG = RuntimeConfig()
+BLOCK_SIZE = 8
+
+
+@pytest.fixture(scope="module")
+def variants():
+    model = get_model(CFG)
+    spec = model.param_spec()
+    params = init_params(spec, jax.random.PRNGKey(0))
+    return {"q8": quantize_tree(params, spec, "q8"),
+            "q4": quantize_tree(params, spec, "q4")}
+
+
+def _engine(variants, *, spec=None, num_blocks=24, **kw):
+    eng = ServingEngine(CFG, variants["q8"], RCFG, max_batch=3, max_seq=64,
+                        prompt_buckets=(16, 32), kv_layout="paged",
+                        block_size=BLOCK_SIZE, num_blocks=num_blocks,
+                        clock=VirtualClock(), spec_decode=spec, **kw)
+    eng.variant_name = "q8"
+    if spec is not None:
+        eng.set_draft_params(variants["q4"], "q4")
+    return eng
+
+
+def _prompts(seed=0, n=5):
+    rng = np.random.default_rng(seed)
+    return [[int(t) for t in 2 + rng.integers(0, 250, size=ln)]
+            for ln in rng.integers(5, 22, size=n)]
+
+
+def _drain(eng, prompts, **req_kw):
+    reqs = [Request(rid=eng.next_rid(), prompt=list(p), max_new_tokens=12,
+                    eos_id=1, **req_kw) for p in prompts]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    return reqs
+
+
+def test_parity_and_reconciliation(variants):
+    prompts = _prompts()
+    plain = _engine(variants)
+    spec = _engine(variants, spec=SpecDecodeConfig(draft_variant="q4", k=2))
+    reqs_p = _drain(plain, prompts)
+    reqs_s = _drain(spec, prompts)
+    for rp, rs in zip(reqs_p, reqs_s):
+        assert rp.output == rs.output
+    assert spec.scheduler.spec_steps > 0
+    assert spec.draft_tokens > 0
+    assert 0 < spec.accepted_tokens <= spec.draft_tokens
+    assert check_invariants(spec, reqs_s) == []
+
+
+def test_k0_degrades_to_plain(variants):
+    prompts = _prompts(seed=1)
+    plain = _engine(variants)
+    spec = _engine(variants, spec=SpecDecodeConfig(draft_variant="q4", k=0))
+    reqs_p = _drain(plain, prompts)
+    reqs_s = _drain(spec, prompts)
+    for rp, rs in zip(reqs_p, reqs_s):
+        assert rp.output == rs.output
+    assert spec.scheduler.spec_steps == 0
+    assert not any(s["kind"] == "spec_verify" for s in spec.step_log)
+    # step-for-step identical to a plain engine, not just stream-identical
+    assert [s["kind"] for s in spec.step_log] \
+        == [s["kind"] for s in plain.step_log]
+
+
+def test_missing_draft_params_stays_plain(variants):
+    eng = ServingEngine(CFG, variants["q8"], RCFG, max_batch=2, max_seq=64,
+                        kv_layout="paged", block_size=BLOCK_SIZE,
+                        num_blocks=24, clock=VirtualClock(),
+                        spec_decode=SpecDecodeConfig(draft_variant="q4", k=2))
+    eng.variant_name = "q8"
+    _drain(eng, _prompts(seed=2, n=2))
+    assert eng.scheduler.spec_steps == 0
+
+
+def test_nongreedy_resident_disables_spec(variants):
+    spec = _engine(variants, spec=SpecDecodeConfig(draft_variant="q4", k=2))
+    _drain(spec, _prompts(seed=3, n=3), temperature=0.8)
+    assert spec.scheduler.spec_steps == 0
+
+
+def test_swap_to_draft_variant_disables_spec(variants):
+    spec = _engine(variants, spec=SpecDecodeConfig(draft_variant="q4", k=2))
+    spec.swap_params(variants["q4"], "q4")
+    _drain(spec, _prompts(seed=4, n=3))
+    assert spec.scheduler.spec_steps == 0
+    spec.swap_params(variants["q8"], "q8")
+    _drain(spec, _prompts(seed=5, n=3))
+    assert spec.scheduler.spec_steps > 0
+
+
+def _admit_one(eng, prompt):
+    req = Request(rid=eng.next_rid(), prompt=list(prompt),
+                  max_new_tokens=30, eos_id=-1)
+    eng.submit(req)
+    eng.step()                           # admission prefill
+    slot = eng.slots.index(req)
+    return req, slot
+
+
+def test_mid_draft_cancel_releases_leases(variants):
+    eng = _engine(variants, spec=SpecDecodeConfig(draft_variant="q4", k=3))
+    req, slot = _admit_one(eng, _prompts(seed=6, n=1)[0])
+    free0 = eng.block_pool.num_free
+    L = int(eng.lengths[slot])
+    leases = eng._spec_acquire_leases(slot, L, 3)
+    assert leases and eng.block_pool.num_free == free0 - len(leases)
+    # cancel lands mid-draft: _free_slot must reconcile the leases too
+    eng.cancel(req)
+    assert eng._spec_leases[slot] == []
+    assert eng.block_pool.num_free == free0 + len(eng.prefix_cache.entries) \
+        or eng.block_pool.num_free >= free0
+    eng.prefix_cache.clear()
+    assert eng.block_pool.num_free == eng.block_pool.num_blocks - 1
+    assert (eng.block_pool.refcount == 0).all()
+
+
+def test_mid_draft_expiry_releases_leases(variants):
+    eng = _engine(variants, spec=SpecDecodeConfig(draft_variant="q4", k=2))
+    req, slot = _admit_one(eng, _prompts(seed=7, n=1)[0])
+    L = int(eng.lengths[slot])
+    eng._spec_acquire_leases(slot, L, 2)
+    eng._free_slot(slot)                 # the expiry/preemption path
+    req.status = "cancelled"
+    eng.scheduler.note_cancelled(req)
+    assert eng._spec_leases[slot] == []
+    eng.prefix_cache.clear()
+    assert eng.block_pool.num_free == eng.block_pool.num_blocks - 1
+    assert (eng.block_pool.refcount == 0).all()
+
+
+def test_hot_swap_mid_draft_releases_leases(variants):
+    eng = _engine(variants, spec=SpecDecodeConfig(draft_variant="q4", k=2))
+    req, slot = _admit_one(eng, _prompts(seed=8, n=1)[0])
+    free0 = eng.block_pool.num_free
+    L = int(eng.lengths[slot])
+    leases = eng._spec_acquire_leases(slot, L, 2)
+    assert eng.block_pool.num_free == free0 - len(leases)
+    eng.swap_params(variants["q4"], "q4")
+    assert eng._spec_leases[slot] == []
+    assert eng.block_pool.num_free == free0
+    eng.cancel(req)
+
+
+def test_construction_validation(variants):
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(CFG, variants["q8"], RCFG, max_batch=2, max_seq=64,
+                      kv_layout="dense", clock=VirtualClock(),
+                      spec_decode=SpecDecodeConfig(draft_variant="q4", k=2))
+    with pytest.raises(ValueError, match=">= 0"):
+        _engine(variants, spec=SpecDecodeConfig(draft_variant="q4", k=-1))
+    eng = _engine(variants)
+    with pytest.raises(ValueError, match="without spec_decode"):
+        eng.set_draft_params(variants["q4"], "q4")
+    spec = _engine(variants, spec=SpecDecodeConfig(draft_variant="q4", k=2))
+    with pytest.raises(ValueError, match=">= 0"):
+        spec.set_draft_k(-1)
+
+
+def test_protocol_roundtrip():
+    sd = SpecDecodeConfig(draft_variant="q4", k=3, k_ladder=(0, 1, 2, 4))
+    assert SpecDecodeConfig.from_wire(sd.to_wire()) == sd
+    cfg = EngineConfig(max_batch=2, spec_decode=sd)
+    back = EngineConfig.from_wire(cfg.to_wire())
+    assert back.spec_decode == sd
+    assert EngineConfig.from_wire(EngineConfig().to_wire()).spec_decode is None
+
+
+def test_stats_counters_and_merge(variants):
+    spec = _engine(variants, spec=SpecDecodeConfig(draft_variant="q4", k=2))
+    _drain(spec, _prompts(seed=9))
+    st = spec.stats()
+    assert st.spec_steps == spec.scheduler.spec_steps > 0
+    assert st.draft_tokens == spec.draft_tokens
+    assert st.accepted_tokens == spec.accepted_tokens
+    assert st.accept_rate == pytest.approx(
+        spec.accepted_tokens / max(spec.draft_tokens, 1))
+    back = EngineStats.from_wire(st.to_wire())
+    assert back.spec_steps == st.spec_steps
+    assert back.accept_rate == st.accept_rate
+    merged = EngineStats.merge([st, st])
+    assert merged.draft_tokens == 2 * st.draft_tokens
+    assert merged.accepted_tokens == 2 * st.accepted_tokens
+    assert merged.accept_rate == pytest.approx(st.accept_rate)
+
+
+def test_governor_k_ladder():
+    ladder = (0, 1, 2, 4)
+    # mode 0 = clean grid / full power -> shortest drafts; the most
+    # constrained mode -> longest
+    assert CarbonGovernor.k_for_mode(0, 5, ladder) == 0
+    assert CarbonGovernor.k_for_mode(4, 5, ladder) == 4
+    ks = [CarbonGovernor.k_for_mode(i, 5, ladder) for i in range(5)]
+    assert ks == sorted(ks)
+    assert CarbonGovernor.k_for_mode(2, 5, ()) == 0
+    assert CarbonGovernor.k_for_mode(0, 1, ladder) == ladder[0]
