@@ -65,6 +65,31 @@ _SCHEMAS: Dict[str, List[Tuple[str, str, Callable]]] = {
          lambda d: _get(d, "prefix", "saved_frac")),
         ("decode_tps_paged@4", HIGHER,
          lambda d: _get(d, "decode_tps", "paged", "4")),
+        ("int8_decode_tps", HIGHER,
+         lambda d: _get(d, "int8_kv", "int8", "decode_tps")),
+        ("int8_carbon_mg_per_query", LOWER,
+         lambda d: _get(d, "int8_kv", "int8", "carbon_mg_per_query")),
+        ("int8_capacity_ratio", INFO,
+         lambda d: _get(d, "int8_kv", "capacity_ratio")),
+        ("int8_kv_bytes_per_token", INFO,
+         lambda d: _get(d, "int8_kv", "int8", "kv_bytes_per_token")),
+        ("int8_kernel_fallbacks", INFO,
+         lambda d: _get(d, "int8_kv", "int8", "kernel_fallbacks")),
+    ],
+    # deterministic kernel roofline/parity numbers (interpret-mode wall time
+    # never enters the artifact): the bytes ratio and parity errors are
+    # exact on CPU, so the gate holds them flat across commits
+    "kernels": [
+        ("paged_int8_bytes_ratio", HIGHER,
+         lambda d: _get(d, "paged_attention", "bytes_ratio")),
+        ("paged_parity_err_f32", LOWER,
+         lambda d: _get(d, "paged_attention", "parity_max_err_f32")),
+        ("paged_parity_err_int8", LOWER,
+         lambda d: _get(d, "paged_attention", "parity_max_err_int8")),
+        ("paged_int8_bytes_per_token", INFO,
+         lambda d: _get(d, "paged_attention", "int8", "kv_bytes_per_token")),
+        ("paged_num_splits", INFO,
+         lambda d: _get(d, "paged_attention", "num_splits")),
     ],
     "fleet_engine": [
         ("decode_tps@4", HIGHER,

@@ -7,13 +7,97 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from benchmarks.common import timed
 from repro.common.hardware import TPU_V5E
 from repro.quant import quantize
 from repro.kernels.quant_matmul import ops as qm_ops
 from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.paged_attention import ops as pa_ops, ref as pa_ref
 from repro.kernels.ssd import ops as ssd_ops
 from repro.kernels.topk_sim import ops as tk_ops
+
+
+def paged_attention_bench(quiet: bool = False):
+    """Fused-dequant paged decode attention, bf16 vs int8 pools.
+
+    The timed body is `paged_decode_attention` itself — the Pallas kernel
+    (split-K flash decode, scales fused in-VMEM for int8), NOT the
+    `paged_attention_ref` gather fallback — so the roofline deriveds and the
+    parity errors below describe the path production dispatch takes under
+    `use_pallas`. Roofline: per cached token a decode step reads K+V once, so
+    bf16 moves 2*K*H*2 bytes/token while int8 moves 2*K*(H + 4) (payload +
+    fp32 scale stripe) — a 2H/(H+4) HBM-traffic ratio that also equals the
+    pool-capacity ratio the engine auto-sizer realizes."""
+    B, N, K, H, bs, nb = 4, 8, 2, 64, 16, 16    # nb 16 -> split-K engaged
+    num_blocks = nb * B + 2
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, 1, N, H), jnp.float32)
+    kf = jax.random.normal(ks[1], (num_blocks, bs, K, H), jnp.float32)
+    vf = jax.random.normal(ks[2], (num_blocks, bs, K, H), jnp.float32)
+    bt = np.zeros((B, nb), np.int32)
+    lens = np.zeros((B,), np.int32)
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(np.arange(1, num_blocks))
+    for b in range(B):
+        lens[b] = int(rng.integers(bs, nb * bs))
+        used = -(-int(lens[b]) // bs)
+        bt[b, :used] = perm[b * nb:b * nb + used]
+    bt, lens = jnp.asarray(bt), jnp.asarray(lens)
+
+    def q8(x):
+        s = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-8) / 127.0
+        return jnp.round(x / s[..., None]).astype(jnp.int8), \
+            s.astype(jnp.float32)
+
+    kp, ksc = q8(kf)
+    vp, vsc = q8(vf)
+    splits = pa_ops.default_num_splits(nb)
+    bf16_tok_bytes = 2 * K * H * 2
+    int8_tok_bytes = 2 * K * (H + 4)
+    ratio = bf16_tok_bytes / int8_tok_bytes
+    want = pa_ref.paged_attention_ref(q, kf, vf, bt, lens)
+    want8 = pa_ref.paged_attention_ref(q, kp, vp, bt, lens,
+                                       k_scale=ksc, v_scale=vsc)
+
+    def bench(name, fn, derived):
+        if quiet:
+            return fn()
+        return timed(name, lambda: jax.block_until_ready(fn()),
+                     derived_fn=lambda _: derived)
+
+    got = bench(
+        f"kernels/paged_attention/bf16_b{B}_nb{nb}_splits{splits}",
+        lambda: pa_ops.paged_decode_attention(
+            q, kf, vf, bt, lens, num_splits=splits, interpret=True),
+        f"hbm_bytes_per_tok={bf16_tok_bytes} "
+        f"v5e_t_us={bf16_tok_bytes * int(jnp.sum(lens)) / TPU_V5E.hbm_bandwidth * 1e6:.3f}")
+    got8 = bench(
+        f"kernels/paged_attention/int8_b{B}_nb{nb}_splits{splits}",
+        lambda: pa_ops.paged_decode_attention(
+            q, kp, vp, bt, lens, k_scale=ksc, v_scale=vsc,
+            num_splits=splits, interpret=True),
+        f"hbm_bytes_per_tok={int8_tok_bytes} fused_dequant=in_vmem "
+        f"speedup_mem_bound={ratio:.2f}x")
+    err = float(jnp.max(jnp.abs(got - want)))
+    err8 = float(jnp.max(jnp.abs(got8 - want8)))
+    return {
+        "num_splits": splits,
+        "fused_path": True,          # paged_decode_attention IS the kernel
+        "bf16": {"kv_bytes_per_token": bf16_tok_bytes},
+        "int8": {"kv_bytes_per_token": int8_tok_bytes},
+        "bytes_ratio": ratio,
+        "parity_max_err_f32": err,
+        "parity_max_err_int8": err8,
+    }
+
+
+def json_summary():
+    """JSON-serializable summary (the CI perf-trajectory artifact schema).
+    Interpret-mode wall time is meaningless on CPU, so the artifact carries
+    only the deterministic roofline/parity numbers the gate can hold flat."""
+    return {"paged_attention": paged_attention_bench(quiet=True)}
 
 
 def run():
@@ -60,6 +144,8 @@ def run():
           derived_fn=lambda _: (
               f"flops={ssd_flops:.2e} "
               f"v5e_t_us={ssd_flops/TPU_V5E.peak_flops*1e6:.3f}"))
+
+    paged_attention_bench()
 
     tools = jax.random.normal(key, (2048, 128))
     tools = tools / jnp.linalg.norm(tools, axis=-1, keepdims=True)

@@ -63,6 +63,7 @@ def main() -> None:
             "chunked_prefill": chunked_prefill.json_summary,
             "spec_decode": spec_decode.json_summary,
             "fleet_workers": fleet_workers.json_summary,
+            "kernels": kernels_bench.json_summary,
         }
         if args.only and args.only not in json_suites:
             raise SystemExit(

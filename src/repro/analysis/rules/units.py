@@ -3,8 +3,9 @@
 The energy/carbon accounting that reproduces the paper's mg-per-query
 numbers flows through untyped floats; the repo's convention is unit
 suffixes: `_s` (seconds), `_ms`/`_us`/`_ns`, `_j` (joules), `_w` (watts),
-`_g`/`_mg` (grams / milligrams CO2), `_tps` (tokens per second). This
-rule turns the convention into checking:
+`_g`/`_mg` (grams / milligrams CO2), `_tps` (tokens per second),
+`_bytes` (KV/weight byte accounting). This rule turns the convention
+into checking:
 
   * `+` / `-` / comparisons between two suffixed identifiers must agree
     in BOTH dimension and scale (`lat_s + en_j` and `dt_s + dt_ms` are
@@ -24,21 +25,22 @@ from typing import List, Optional, Tuple
 
 from repro.analysis.framework import FileContext, Rule, Violation, register
 
-# dims: (time, energy, mass, tokens); scale distinguishes e.g. mg from g
+# dims: (time, energy, mass, tokens, bytes); scale distinguishes mg from g
 UNITS = {
-    "s":   ((1, 0, 0, 0), ""),
-    "ms":  ((1, 0, 0, 0), "milli"),
-    "us":  ((1, 0, 0, 0), "micro"),
-    "ns":  ((1, 0, 0, 0), "nano"),
-    "j":   ((0, 1, 0, 0), ""),
-    "w":   ((-1, 1, 0, 0), ""),
-    "g":   ((0, 0, 1, 0), ""),
-    "mg":  ((0, 0, 1, 0), "milli"),
-    "tps": ((-1, 0, 0, 1), ""),
+    "s":     ((1, 0, 0, 0, 0), ""),
+    "ms":    ((1, 0, 0, 0, 0), "milli"),
+    "us":    ((1, 0, 0, 0, 0), "micro"),
+    "ns":    ((1, 0, 0, 0, 0), "nano"),
+    "j":     ((0, 1, 0, 0, 0), ""),
+    "w":     ((-1, 1, 0, 0, 0), ""),
+    "g":     ((0, 0, 1, 0, 0), ""),
+    "mg":    ((0, 0, 1, 0, 0), "milli"),
+    "tps":   ((-1, 0, 0, 1, 0), ""),
+    "bytes": ((0, 0, 0, 0, 1), ""),
 }
-DIMLESS = (0, 0, 0, 0)
+DIMLESS = (0, 0, 0, 0, 0)
 
-Unit = Tuple[Tuple[int, int, int, int], str, bool]   # dims, scale, has_suffix
+Unit = Tuple[Tuple[int, ...], str, bool]             # dims, scale, has_suffix
 
 
 def _suffix_unit(name: str) -> Optional[Unit]:
@@ -57,7 +59,7 @@ def _name_of(node: ast.AST) -> Optional[str]:
 
 
 def _dim_str(dims: Tuple[int, ...]) -> str:
-    names = ("s", "J", "g", "tok")
+    names = ("s", "J", "g", "tok", "B")
     num = "*".join(n if e == 1 else f"{n}^{e}"
                    for n, e in zip(names, dims) if e > 0)
     den = "*".join(n if e == -1 else f"{n}^{-e}"

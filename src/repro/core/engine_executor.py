@@ -88,6 +88,7 @@ class EngineExecutor:
                  max_seq: Optional[int] = None,
                  tokens_per_call: int = 8, eval_tokens: int = 4,
                  kv_layout: Optional[str] = None,
+                 kv_cache_dtype: Optional[str] = None,
                  num_blocks: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  mesh=None, clock: Optional[VirtualClock] = None):
@@ -99,6 +100,7 @@ class EngineExecutor:
         over = {k: v for k, v in (("max_batch", max_batch),
                                   ("max_seq", max_seq),
                                   ("kv_layout", kv_layout),
+                                  ("kv_cache_dtype", kv_cache_dtype),
                                   ("num_blocks", num_blocks),
                                   ("prefill_chunk", prefill_chunk))
                 if v is not None}
@@ -145,6 +147,12 @@ class EngineExecutor:
             self.engine.set_draft_params(self.variants[sd.draft_variant],
                                          sd.draft_variant)
         self.client = self.engine.client()
+        # int8 KV halves the per-token cache bytes a decode step streams
+        # (the fp32 scale stripes amortize over the head dim — same factor
+        # launch/analytic.py prices), which is where the carbon win beyond
+        # the capacity win comes from
+        self._kv_byte_frac = (
+            0.5 if self.engine.rcfg.kv_cache_dtype == "int8" else 1.0)
         self._log_pos = 0              # step_log watermark for attribution
         self._rid_sessions: Dict[int, EngineSession] = {}
 
@@ -182,7 +190,8 @@ class EngineExecutor:
             rounds = max(1, -(-tokens // max(active, 1)))
             return rounds * pm.decode_time_per_token(
                 prof.active_bytes(self.engine.draft_variant),
-                prof.kv_bytes_per_token * max(-(-active // shards), 1), mode)
+                prof.kv_bytes_per_token * self._kv_byte_frac
+                * max(-(-active // shards), 1), mode)
         if kind == "spec_verify":
             # one batched multi-position forward at the resident (verify)
             # variant — compute-bound like prefill over the window tokens
@@ -193,7 +202,8 @@ class EngineExecutor:
             return pm.prefill_time(tokens, prof.n_active * 2, mode)
         return pm.decode_time_per_token(
             prof.active_bytes(self.engine.variant_name),
-            prof.kv_bytes_per_token * max(-(-active // shards), 1), mode)
+            prof.kv_bytes_per_token * self._kv_byte_frac
+            * max(-(-active // shards), 1), mode)
 
     # -- executor interface --------------------------------------------------
 

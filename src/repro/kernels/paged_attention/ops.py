@@ -1,9 +1,20 @@
 """Model-layout wrapper + dispatch for paged decode attention.
 
 `paged_decode_attention` takes q in model layout (B, 1, N, H), reshapes to the
-kernel's (B, K, G, H) GQA form, and dispatches: Pallas kernel for bf16 pools
-when `use_pallas` is requested, otherwise the gather fallback (always for int8
-pools — the kernel is bf16-only; the fallback dequantizes after the gather).
+kernel's (B, K, G, H) GQA form, and runs the Pallas kernel — bf16 pools plain,
+int8 pools through the fused-dequant variant (scale stripes ride alongside,
+dequant in-VMEM after the DMA, HBM traffic stays int8). `interpret` has no
+default: every caller must say whether it wants the interpreter (CPU tests)
+or compiled lowering — a silent interpret-on-hardware default is how a
+"kernel" quietly becomes a Python loop.
+
+`dispatch_paged_attention` is the layer-level entry: the Pallas kernel for
+both pool dtypes when `use_pallas` is requested, otherwise the gather
+reference (`paged_attention_ref`, which dequantizes after the gather). The
+fallback decision is a pure function of the runtime config —
+`paged_attention_uses_fallback` exposes it so the engine can count fallback
+steps into `EngineStats.kernel_fallbacks` instead of benchmarks silently
+measuring the reference path.
 """
 from __future__ import annotations
 
@@ -14,16 +25,37 @@ import jax
 from repro.kernels.paged_attention.paged_attention import paged_attention_bkgh
 from repro.kernels.paged_attention.ref import paged_attention_ref
 
+# split-K kicks in past this many chain blocks: one online-softmax state per
+# ~SPLIT_BLOCK_CHAIN blocks, partials merged by the last split
+SPLIT_BLOCK_CHAIN = 8
 
-@functools.partial(jax.jit, static_argnames=("cap", "window", "interpret"))
+
+def default_num_splits(nb: int) -> int:
+    """Flash-decode split count for an `nb`-block chain."""
+    return max(1, -(-int(nb) // SPLIT_BLOCK_CHAIN))
+
+
+def paged_attention_uses_fallback(rcfg) -> bool:
+    """True when `dispatch_paged_attention` will take the gather reference
+    path for this runtime config. The Pallas kernel covers bf16 AND int8
+    pools, so only a missing/disabled `use_pallas` forces the fallback."""
+    return rcfg is None or not rcfg.use_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "window", "num_splits",
+                                             "interpret"))
 def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
-                           cap=0.0, window=0, interpret=True):
-    """q: (B, 1, N, H); pools: (num_blocks, bs, K, H) -> (B, 1, N, H)."""
+                           k_scale=None, v_scale=None, cap=0.0, window=0,
+                           num_splits=1, interpret):
+    """q: (B, 1, N, H); pools: (num_blocks, bs, K, H) bf16, or int8 with
+    (num_blocks, bs, K) scales -> (B, 1, N, H)."""
     B, _, N, H = q.shape
     K = k_pool.shape[2]
     qk = q.reshape(B, K, N // K, H)
     out = paged_attention_bkgh(qk, k_pool, v_pool, block_tables, lengths,
-                               cap=cap, window=window, interpret=interpret)
+                               k_scale=k_scale, v_scale=v_scale,
+                               cap=cap, window=window, num_splits=num_splits,
+                               interpret=interpret)
     return out.reshape(B, 1, N, H)
 
 
@@ -31,10 +63,13 @@ def dispatch_paged_attention(q, pool_i, block_tables, lengths, rcfg, *,
                              cap=0.0, window=0):
     """Layer-level entry used by the model decode path. `pool_i` is the
     per-layer pool dict {k, v[, k_scale, v_scale]}."""
-    if rcfg is not None and rcfg.use_pallas and "k_scale" not in pool_i:
+    if not paged_attention_uses_fallback(rcfg):
         return paged_decode_attention(
             q, pool_i["k"], pool_i["v"], block_tables, lengths,
-            cap=float(cap), window=int(window), interpret=rcfg.interpret)
+            k_scale=pool_i.get("k_scale"), v_scale=pool_i.get("v_scale"),
+            cap=float(cap), window=int(window),
+            num_splits=default_num_splits(block_tables.shape[1]),
+            interpret=rcfg.interpret)
     return paged_attention_ref(
         q, pool_i["k"], pool_i["v"], block_tables, lengths,
         cap=cap, window=window,

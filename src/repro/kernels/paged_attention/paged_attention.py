@@ -12,14 +12,30 @@ as scalar-prefetch operands (`pltpu.PrefetchScalarGridSpec`), so the KV index
 maps can resolve `bt[b, j]` before the DMA for step j issues — the physical
 block fetch is data-dependent but still pipelined.
 
+int8 pools (fused dequant): with `k_scale`/`v_scale` stripes the pool leaves
+are int8 and the per-(position, head) fp32 scales ride in as two extra
+operands sharing the k/v index maps. Dequant happens in-VMEM right after the
+DMA (`k_int8 * scale`), so HBM traffic stays int8 — the bandwidth the block
+pool saved is the bandwidth the decode step saves.
+
+Split-K (flash-decode): `num_splits > 1` partitions the block chain over an
+extra grid axis — grid (batch, kv_head, split, blocks_per_split). Each split
+accumulates its own online-softmax partial and flushes (m, l, acc) into
+per-split VMEM scratch; the last split combines all partials with the usual
+max-rebased merge. For long chains this bounds the sequential chain walk per
+state vector — the lowering a real flash-decode pass parallelizes over
+megacore/vector units.
+
 GQA stays no-copy: q arrives as (B, K, G, H) and each kv head's program reads
 only its own (bs, H) stripes from the pool. Blocks past a row's length are
 skipped with `pl.when` (their DMA still targets a valid pool slot — dead rows
 point at the reserved scratch block 0), so a mostly-empty cache costs only its
 occupied blocks.
 
-VMEM per step (bs=16..128, H<=256): q G x H bf16 + k/v bs x H bf16 + acc
-G x H f32 + m/l 2 x G x 128 f32 — well under the budget for any real G.
+VMEM per step (bs=16..128, H<=256): q G x H bf16 + k/v bs x H (bf16 or int8
++ 2 x bs fp32 scales) + acc G x H f32 + m/l 2 x G x 128 f32 — plus, under
+split-K, S x (G x 128 + G x 128 + G x H) f32 partials — well under the
+budget for any real G.
 """
 from __future__ import annotations
 
@@ -33,11 +49,27 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
-            acc_ref, *, bs: int, nb: int, scale: float, cap: float,
-            window: int):
+def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, *rest, bs: int, nbs: int,
+            splits: int, scale: float, cap: float, window: int,
+            quantized: bool):
+    refs = list(rest)
+    ks_ref = vs_ref = None
+    if quantized:
+        ks_ref, vs_ref = refs[:2]
+        refs = refs[2:]
+    o_ref = refs[0]
+    m_ref, l_ref, acc_ref = refs[1:4]
+    ms_ref = ls_ref = accs_ref = None
+    if splits > 1:
+        ms_ref, ls_ref, accs_ref = refs[4:]
+
     b = pl.program_id(0)
-    j = pl.program_id(2)
+    if splits > 1:
+        s_id = pl.program_id(2)
+        j = pl.program_id(3)
+    else:
+        s_id = 0
+        j = pl.program_id(2)
 
     @pl.when(j == 0)
     def _init():
@@ -46,12 +78,17 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     length = len_ref[b]
-    start = j * bs
+    start = (s_id * nbs + j) * bs          # global position of this block
 
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, H)
         k = k_ref[0, :, 0].astype(jnp.float32)               # (bs, H)
         v = v_ref[0, :, 0].astype(jnp.float32)
+        if quantized:
+            # fused dequant: int8 stripes just DMA'd, scales broadcast per
+            # position — the gathered bf16 view never exists anywhere
+            k = k * ks_ref[0, :, 0][:, None]
+            v = v * vs_ref[0, :, 0][:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)  # (G, bs)
         if cap > 0.0:
@@ -74,39 +111,93 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 
     pl.when(start < length)(_compute)
 
-    @pl.when(j == nb - 1)
-    def _done():
-        lsum = jnp.maximum(l_ref[:, :1], 1e-37)
-        o_ref[0, 0] = (acc_ref[...] / lsum).astype(o_ref.dtype)
+    @pl.when(j == nbs - 1)
+    def _flush():
+        if splits == 1:
+            lsum = jnp.maximum(l_ref[:, :1], 1e-37)
+            o_ref[0, 0] = (acc_ref[...] / lsum).astype(o_ref.dtype)
+        else:
+            # park this split's partial online-softmax state; an untouched
+            # split (chain shorter than its range) parks (NEG_INF, 0, 0),
+            # which the merge weights to exactly zero
+            ms_ref[s_id] = m_ref[...]
+            ls_ref[s_id] = l_ref[...]
+            accs_ref[s_id] = acc_ref[...]
+
+            @pl.when(s_id == splits - 1)
+            def _combine():
+                m_all = ms_ref[:, :, :1]                     # (S, G, 1)
+                m_tot = jnp.max(m_all, axis=0)               # (G, 1)
+                w = jnp.exp(m_all - m_tot[None])
+                l_tot = jnp.sum(ls_ref[:, :, :1] * w, axis=0)
+                acc_tot = jnp.sum(accs_ref[...] * w, axis=0)  # (G, H)
+                lsum = jnp.maximum(l_tot, 1e-37)
+                o_ref[0, 0] = (acc_tot / lsum).astype(o_ref.dtype)
 
 
 def paged_attention_bkgh(q, k_pool, v_pool, block_tables, lengths, *,
-                         cap=0.0, window=0, interpret=True):
-    """q: (B, K, G, H); pools: (num_blocks, bs, K, H);
-    block_tables: (B, nb) int32; lengths: (B,) int32 -> (B, K, G, H)."""
+                         k_scale=None, v_scale=None, cap=0.0, window=0,
+                         num_splits=1, interpret=False):
+    """q: (B, K, G, H); pools: (num_blocks, bs, K, H) — bf16, or int8 with
+    (num_blocks, bs, K) fp32 `k_scale`/`v_scale`; block_tables: (B, nb)
+    int32; lengths: (B,) int32 -> (B, K, G, H)."""
     B, K, G, H = q.shape
     bs = k_pool.shape[1]
     nb = block_tables.shape[1]
+    quantized = k_scale is not None
+    splits = max(1, min(int(num_splits), nb))
+    nbs = -(-nb // splits)                 # blocks per split (last ragged)
     scale = 1.0 / (H ** 0.5)
-    kernel = functools.partial(_kernel, bs=bs, nb=nb, scale=scale,
-                               cap=float(cap), window=int(window))
+    kernel = functools.partial(_kernel, bs=bs, nbs=nbs, splits=splits,
+                               scale=scale, cap=float(cap),
+                               window=int(window), quantized=quantized)
+
+    if splits > 1:
+        grid = (B, K, splits, nbs)
+
+        def _chain(b, h, s, j, bt, ln):
+            # split s's j-th block; the ragged tail past nb-1 clamps to a
+            # valid table slot (the kernel masks it via start >= length)
+            return bt[b, jnp.minimum(s * nbs + j, nb - 1)]
+
+        q_map = lambda b, h, s, j, bt, ln: (b, h, 0, 0)
+        kv_map = lambda b, h, s, j, bt, ln: (_chain(b, h, s, j, bt, ln),
+                                             0, h, 0)
+        sc_map = lambda b, h, s, j, bt, ln: (_chain(b, h, s, j, bt, ln),
+                                             0, h)
+    else:
+        grid = (B, K, nb)
+        q_map = lambda b, h, j, bt, ln: (b, h, 0, 0)
+        kv_map = lambda b, h, j, bt, ln: (bt[b, j], 0, h, 0)
+        sc_map = lambda b, h, j, bt, ln: (bt[b, j], 0, h)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, G, H), q_map),
+        pl.BlockSpec((1, bs, 1, H), kv_map),
+        pl.BlockSpec((1, bs, 1, H), kv_map),
+    ]
+    operands = [q, k_pool, v_pool]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, bs, 1), sc_map),
+                     pl.BlockSpec((1, bs, 1), sc_map)]
+        operands += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
+    scratch = [
+        pltpu.VMEM((G, 128), jnp.float32),
+        pltpu.VMEM((G, 128), jnp.float32),
+        pltpu.VMEM((G, H), jnp.float32),
+    ]
+    if splits > 1:
+        scratch += [
+            pltpu.VMEM((splits, G, 128), jnp.float32),
+            pltpu.VMEM((splits, G, 128), jnp.float32),
+            pltpu.VMEM((splits, G, H), jnp.float32),
+        ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                   # block_tables, lengths
-        grid=(B, K, nb),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, H), lambda b, h, j, bt, ln: (b, h, 0, 0)),
-            pl.BlockSpec((1, bs, 1, H),
-                         lambda b, h, j, bt, ln: (bt[b, j], 0, h, 0)),
-            pl.BlockSpec((1, bs, 1, H),
-                         lambda b, h, j, bt, ln: (bt[b, j], 0, h, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, G, H),
-                               lambda b, h, j, bt, ln: (b, h, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((G, 128), jnp.float32),
-            pltpu.VMEM((G, 128), jnp.float32),
-            pltpu.VMEM((G, H), jnp.float32),
-        ],
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, G, H), q_map),
+        scratch_shapes=scratch,
     )
     return pl.pallas_call(
         kernel,
@@ -114,4 +205,4 @@ def paged_attention_bkgh(q, k_pool, v_pool, block_tables, lengths, *,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
-      q, k_pool, v_pool)
+      *operands)

@@ -187,7 +187,8 @@ def attn_decode_paged_apply(p, x, cfg: ModelConfig, rcfg, *, cos, sin,
     `block_tables`); rows at or past `seq_cap` — and dead rows, whose tables
     point at the reserved scratch block 0 — drop their write there, matching
     the dense path's out-of-range no-op. Reads go through the paged-attention
-    dispatch (Pallas kernel on TPU, gather fallback on CPU / int8 pools)."""
+    dispatch: the Pallas kernel under `use_pallas` (bf16 plain, int8 through
+    the fused-dequant variant), else the gather reference."""
     B = x.shape[0]
     q, k, v = qkv_proj(p, x, cfg, rcfg, cos, sin)
     k1, v1 = k[:, 0], v[:, 0]                                # (B, K, H)

@@ -186,6 +186,19 @@ def paged_cache_spec(cfg: ModelConfig, rcfg: RuntimeConfig, num_blocks: int,
     }
 
 
+def paged_block_bytes(cfg: ModelConfig, block_size: int,
+                      kv_cache_dtype: str = "bf16") -> int:
+    """Bytes one pool block occupies across all layers (k + v leaves, plus
+    the fp32 scale stripes for int8). This is the capacity math behind the
+    engine's int8 auto-sizing: at the same byte budget an int8 pool fits
+    2H/(H+4) ~ 1.9x the bf16 block count (H = head dim; the +4 is the two
+    fp32 scales amortized over k and v)."""
+    Lc, K, H = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    if kv_cache_dtype == "int8":
+        return Lc * block_size * K * (2 * H + 2 * 4)
+    return Lc * block_size * K * (2 * 2 * H)
+
+
 def dequant_cache(cache_i):
     """Per-layer cache dict -> (k, v) bf16 views (XLA fuses the dequant into
     the attention matmuls; HBM traffic stays int8)."""

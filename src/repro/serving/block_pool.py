@@ -122,6 +122,10 @@ class PrefixCache:
         for cl in self.chunk_lens(len(row), bs):
             key = (salt, tuple(row[:cl]))
             if key in self.entries:
+                # a re-insert IS a use: without the refresh a prefix that is
+                # re-prefilled every admission still looks cold to evict_lru
+                # and hot tool prefixes get evicted first under pool pressure
+                self.entries[key].last_used = self._tick
                 if cl == len(row) and last_logits is not None:
                     self.entries[key].last_logits = last_logits
                 continue

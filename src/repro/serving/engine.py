@@ -16,7 +16,8 @@ KV layouts:
     real prefill compute AND are charged to `step_cost_fn` only for the
     suffix, so repeated tool prefixes show up as energy/carbon savings in the
     engine-backed week simulation. Decode reads go through the paged-attention
-    kernel (Pallas on TPU, gather fallback on CPU / int8 pools).
+    kernel (Pallas on TPU for bf16 AND int8 pools — int8 via the fused-dequant
+    variant; gather fallback on CPU, counted in `kernel_fallbacks`).
   * "dense": the original fixed (max_batch, max_seq) stripe — kept for
     non-transformer families and as the parity oracle for the paged path.
 
@@ -91,7 +92,9 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.config import ModelConfig, RuntimeConfig
+from repro.kernels.paged_attention.ops import paged_attention_uses_fallback
 from repro.models import get_model
+from repro.models.transformer import paged_block_bytes
 from repro.serving.block_pool import BlockPool, PrefixCache
 from repro.serving.protocol import EngineConfig, EngineStats, SpecDecodeConfig
 from repro.serving.sampler import sample_tokens
@@ -359,6 +362,22 @@ class ServingEngine:
             over["prompt_buckets"] = tuple(prompt_buckets)
         self.config = base.replace(**over) if over else base
         config = self.config
+        # kv_cache_dtype: the serializable config and the runtime config both
+        # carry it (the model layer reads rcfg). Merge rule: an explicit int8
+        # on EITHER surface wins — rcfg-driven call sites predate the config
+        # field and must keep working — and both end up agreeing, so the
+        # engine's wire snapshot always states the pool dtype truthfully.
+        if config.kv_cache_dtype not in ("bf16", "int8"):
+            raise ValueError(
+                f"unknown kv_cache_dtype {config.kv_cache_dtype!r}; "
+                "expected 'bf16' or 'int8'")
+        kv_dtype = config.kv_cache_dtype
+        if kv_dtype == "bf16" and rcfg.kv_cache_dtype != "bf16":
+            kv_dtype = rcfg.kv_cache_dtype
+        if kv_dtype != rcfg.kv_cache_dtype:
+            rcfg = dataclasses.replace(rcfg, kv_cache_dtype=kv_dtype)
+        if kv_dtype != config.kv_cache_dtype:
+            self.config = config = config.replace(kv_cache_dtype=kv_dtype)
         max_batch = config.max_batch
         max_seq = config.max_seq
         prompt_buckets = config.prompt_buckets
@@ -431,6 +450,14 @@ class ServingEngine:
                 # slot's worth of slack for cached prefixes + scratch block 0
                 num_blocks = ((max_batch + 1) * self.blocks_per_slot
                               + max_batch + 2)
+                if rcfg.kv_cache_dtype == "int8":
+                    # same byte budget as the bf16 default pool, ~2x the
+                    # blocks: int8 halves the k/v leaves, the fp32 scale
+                    # stripes claw a little back (ratio 2H/(H+4))
+                    budget = (num_blocks - 1) * paged_block_bytes(
+                        cfg, block_size, "bf16")
+                    num_blocks = 1 + budget // paged_block_bytes(
+                        cfg, block_size, "int8")
             pool_spec = self.model.paged_cache_spec(rcfg, num_blocks,
                                                     block_size)
             self.pool = init_params(pool_spec, jax.random.PRNGKey(0))
@@ -543,6 +570,12 @@ class ServingEngine:
         self.prefill_tokens_total = 0
         self.prefill_tokens_saved = 0
         self.peak_active = 0               # max concurrent resident sessions
+        # paged decode steps that ran the gather reference instead of the
+        # Pallas kernel; the dispatch decision is a pure function of rcfg,
+        # so it is computed once and counted per step
+        self._paged_fallback = (self.kv_layout == "paged"
+                                and paged_attention_uses_fallback(rcfg))
+        self.kernel_fallbacks = 0
         self.step_log: List[Dict] = []
 
     def _exec_key(self, kind: str, *extra) -> tuple:
@@ -784,6 +817,10 @@ class ServingEngine:
                 kind = "decode"
             occupancy = max(len(rids), 1)        # before completions free slots
             self._prefer_prefill = True
+            if self._paged_fallback:
+                # this step's paged-attention reads (decode, or spec draft
+                # rounds + verify) ran the gather reference, not the kernel
+                self.kernel_fallbacks += 1
         else:
             if self.scheduler.has_waiting():
                 raise PoolExhaustedError(

@@ -34,8 +34,8 @@ from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 from repro.serving.scheduler import SessionRequest
 
-PROTOCOL_VERSION = 2        # control messages, WorkerSpec, request payloads
-STATS_SCHEMA_VERSION = 2    # EngineStats telemetry schema
+PROTOCOL_VERSION = 3        # control messages, WorkerSpec, request payloads
+STATS_SCHEMA_VERSION = 3    # EngineStats telemetry schema
 
 
 class ProtocolError(ValueError):
@@ -104,11 +104,19 @@ class EngineConfig:
     `launch.mesh.make_data_mesh`; the engine itself takes the built mesh.
     `variants` names the quantized weight sets an executor pre-builds for
     hot swaps; the first entry is the boot variant.
+
+    `kv_cache_dtype` selects the KV-pool element type: "int8" stores k/v
+    as int8 with fp32 per-(position, head) scale stripes, roughly halving
+    pool bytes — with `num_blocks=None` the pool auto-sizes to the SAME
+    byte budget as the bf16 default, so an int8 engine fits ~2x the
+    cacheable blocks (more residents, more prefix-cache entries, more
+    spec-decode lease headroom).
     """
     max_batch: int = 4
     max_seq: int = 256
     prompt_buckets: Tuple[int, ...] = (32, 64, 128)
     kv_layout: str = "auto"              # auto | paged | dense
+    kv_cache_dtype: str = "bf16"         # bf16 | int8
     block_size: int = 16
     num_blocks: Optional[int] = None     # None = auto-size from max_batch
     prefill_chunk: Optional[int] = None  # None = monolithic prefill
@@ -175,6 +183,10 @@ class EngineStats:
     draft_tokens: int = 0
     accepted_tokens: int = 0
     accept_rate: float = 0.0
+    # paged decode steps that ran the gather reference path instead of the
+    # Pallas kernel (CPU / use_pallas=False) — CI artifacts carry it so a
+    # benchmark can never silently measure the fallback
+    kernel_fallbacks: int = 0
     tiers: Dict[str, Dict[str, float]] = dataclasses.field(default_factory=dict)
     prefix_cache: Dict[str, int] = dataclasses.field(default_factory=dict)
 
@@ -202,6 +214,7 @@ class EngineStats:
             accepted_tokens=int(getattr(engine, "accepted_tokens", 0)),
             accept_rate=(int(getattr(engine, "accepted_tokens", 0))
                          / max(int(getattr(engine, "draft_tokens", 0)), 1)),
+            kernel_fallbacks=int(getattr(engine, "kernel_fallbacks", 0)),
             tiers=sched["tiers"],
             prefix_cache=dict(engine.prefix_cache_stats()))
 
@@ -246,6 +259,7 @@ class EngineStats:
             accepted_tokens=sum(s.accepted_tokens for s in stats),
             accept_rate=(sum(s.accepted_tokens for s in stats)
                          / max(sum(s.draft_tokens for s in stats), 1)),
+            kernel_fallbacks=sum(s.kernel_fallbacks for s in stats),
             tiers=tiers, prefix_cache=cache)
 
     def to_wire(self) -> Dict[str, Any]:

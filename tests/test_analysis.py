@@ -180,8 +180,8 @@ def test_cc003_addition_requires_version_bump(tmp_path):
 def test_cc003_bump_without_regeneration_flagged(tmp_path):
     vs = _protocol_tree(
         tmp_path,
-        lambda s: s.replace("STATS_SCHEMA_VERSION = 2",
-                            "STATS_SCHEMA_VERSION = 3"))
+        lambda s: s.replace("STATS_SCHEMA_VERSION = 3",
+                            "STATS_SCHEMA_VERSION = 4"))
     assert codes(vs) == ["CC003"]
     assert "--update-schema" in vs[0]["message"]
 

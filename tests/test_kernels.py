@@ -78,37 +78,100 @@ def test_ssd(B, S, H, P, G, N, Q):
     assert float(jnp.max(jnp.abs(f1 - f2))) < 0.05
 
 
-@pytest.mark.parametrize(
-    "B,N,K,H,bs,nb,cap,window",
-    [
-        (2, 4, 2, 64, 16, 4, 0.0, 0),
-        (3, 8, 8, 32, 32, 3, 0.0, 0),      # MHA (K == N)
-        (1, 4, 1, 128, 16, 8, 50.0, 0),    # softcap, deep chain
-        (2, 4, 2, 64, 16, 4, 0.0, 24),     # sliding window
-    ])
-def test_paged_attention(B, N, K, H, bs, nb, cap, window):
-    """Block-table walk vs gather-then-dense-decode oracle: dead table slots
-    point at the scratch block 0 and rows vary in fill level."""
+def _paged_case(B, N, K, H, bs, nb, seed, lengths=None):
+    """Random pools + permuted block tables; dead table slots point at the
+    reserved scratch block 0 and rows vary in fill level."""
     num_blocks = nb * B + 2
-    ks = jax.random.split(jax.random.fold_in(KEY, B * H + bs), 4)
+    ks = jax.random.split(jax.random.fold_in(KEY, seed), 4)
     q = jax.random.normal(ks[0], (B, 1, N, H), jnp.float32)
     kp = jax.random.normal(ks[1], (num_blocks, bs, K, H), jnp.float32)
     vp = jax.random.normal(ks[2], (num_blocks, bs, K, H), jnp.float32)
     bt = np.zeros((B, nb), np.int32)
-    lengths = np.zeros((B,), np.int32)
-    rng = np.random.default_rng(B * 31 + H)
+    lens = np.zeros((B,), np.int32)
+    rng = np.random.default_rng(seed)
     perm = rng.permutation(np.arange(1, num_blocks))
     for b in range(B):
-        lengths[b] = int(rng.integers(1, nb * bs))
-        used = -(-int(lengths[b]) // bs)
+        lens[b] = (int(rng.integers(1, nb * bs)) if lengths is None
+                   else int(lengths[b]))
+        used = -(-int(lens[b]) // bs)
         bt[b, :used] = perm[b * nb:b * nb + used]
+    return q, kp, vp, jnp.asarray(bt), jnp.asarray(lens)
+
+
+def _quantize_pool(pool):
+    """Symmetric per-(block, pos, head) int8, matching requant_cache."""
+    s = jnp.maximum(jnp.max(jnp.abs(pool), axis=-1), 1e-8) / 127.0
+    return (jnp.round(pool / s[..., None]).astype(jnp.int8),
+            s.astype(jnp.float32))
+
+
+@pytest.mark.parametrize(
+    "B,N,K,H,bs,nb,cap,window,splits",
+    [
+        (2, 4, 2, 64, 16, 4, 0.0, 0, 1),
+        (3, 8, 8, 32, 32, 3, 0.0, 0, 1),      # MHA (K == N)
+        (1, 4, 1, 128, 16, 8, 50.0, 0, 1),    # softcap, deep chain
+        (2, 4, 2, 64, 16, 4, 0.0, 24, 1),     # sliding window
+        (2, 4, 2, 64, 16, 8, 0.0, 0, 2),      # split-K flash decode
+        (1, 4, 1, 128, 16, 8, 50.0, 0, 4),    # split-K + softcap
+    ])
+def test_paged_attention(B, N, K, H, bs, nb, cap, window, splits):
+    """Block-table walk vs gather-then-dense-decode oracle."""
+    q, kp, vp, bt, lengths = _paged_case(B, N, K, H, bs, nb, B * 31 + H)
     got = pa_ops.paged_decode_attention(
-        q, kp, vp, jnp.asarray(bt), jnp.asarray(lengths),
-        cap=cap, window=window, interpret=True)
+        q, kp, vp, bt, lengths,
+        cap=cap, window=window, num_splits=splits, interpret=True)
     want = pa_ref.paged_attention_ref(
-        q, kp, vp, jnp.asarray(bt), jnp.asarray(lengths),
-        cap=cap, window=window)
+        q, kp, vp, bt, lengths, cap=cap, window=window)
     assert float(jnp.max(jnp.abs(got - want))) < 2e-5
+
+
+@pytest.mark.parametrize(
+    "B,N,K,H,bs,nb,cap,window,splits",
+    [
+        (2, 4, 2, 64, 16, 4, 0.0, 0, 1),      # fused dequant, single chain
+        (3, 8, 8, 32, 32, 3, 0.0, 0, 1),      # MHA
+        (1, 4, 1, 128, 16, 8, 50.0, 0, 2),    # softcap across split boundary
+        (2, 4, 2, 64, 16, 4, 0.0, 24, 1),     # sliding window
+        (3, 4, 2, 64, 16, 9, 0.0, 0, 3),      # ragged lengths vs split-K
+    ])
+def test_paged_attention_int8(B, N, K, H, bs, nb, cap, window, splits):
+    """Fused-dequant int8 kernel vs `paged_attention_ref`'s dequant-after-
+    gather. The ref dequantizes through bf16 before attention while the
+    kernel dequantizes in f32 inside VMEM, so the tolerance is dominated by
+    the ref's bf16 rounding — loose relative to the f32 sweep above but far
+    inside the ~1/127 quantization grid itself."""
+    q, kf, vf, bt, lengths = _paged_case(B, N, K, H, bs, nb, B * 17 + H + nb)
+    kp, ksc = _quantize_pool(kf)
+    vp, vsc = _quantize_pool(vf)
+    got = pa_ops.paged_decode_attention(
+        q, kp, vp, bt, lengths, k_scale=ksc, v_scale=vsc,
+        cap=cap, window=window, num_splits=splits, interpret=True)
+    want = pa_ref.paged_attention_ref(
+        q, kp, vp, bt, lengths, k_scale=ksc, v_scale=vsc,
+        cap=cap, window=window)
+    assert float(jnp.max(jnp.abs(got - want))) < 0.02
+
+
+def test_paged_attention_int8_scratch_rows():
+    """Rows parked almost entirely on the scratch block 0 (length 1) next to
+    a full row, with ragged lengths straddling the split-K boundary: the
+    untouched splits must merge as exact zeros, not NaNs."""
+    B, N, K, H, bs, nb = 4, 4, 2, 64, 8, 6
+    # lengths: 1 (scratch-dominated), exactly one split (16), one past the
+    # boundary (17), and full (48)
+    q, kf, vf, bt, lengths = _paged_case(
+        B, N, K, H, bs, nb, 101, lengths=[1, 16, 17, 48])
+    kp, ksc = _quantize_pool(kf)
+    vp, vsc = _quantize_pool(vf)
+    for splits in (1, 3):
+        got = pa_ops.paged_decode_attention(
+            q, kp, vp, bt, lengths, k_scale=ksc, v_scale=vsc,
+            num_splits=splits, interpret=True)
+        want = pa_ref.paged_attention_ref(
+            q, kp, vp, bt, lengths, k_scale=ksc, v_scale=vsc)
+        assert bool(jnp.all(jnp.isfinite(got)))
+        assert float(jnp.max(jnp.abs(got - want))) < 0.02
 
 
 @pytest.mark.parametrize("n_tools,d,m,k", [(2048, 64, 3, 5), (512, 128, 1, 8),
